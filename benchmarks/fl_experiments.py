@@ -1,0 +1,145 @@
+"""Paper experiment reproduction (Figs. 1-3, Table I).
+
+Setting mirrors Sec. VII: N clients, ~2M-param CNN, non-IID Dirichlet
+(beta=0.3) FMNIST-like data, B_tot=10 MHz, P_i ~ U[0.1,0.3] mW,
+gamma in [0.1,1], pi_min=0.2, rho=0.6, lr=0.01 (we use 0.05 + 2 local
+steps for CPU-budget convergence; the paper's 0.01/1-step setting is a
+flag). Baseline K = mean FairEnergy selection count; EcoRandom uses the
+min gamma / min bandwidth observed for FairEnergy (paper protocol).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ChannelConfig, FairEnergyConfig, FLConfig
+from repro.configs.fmnist_cnn import CONFIG as CNN_FULL
+from repro.data import ClientDataset, dirichlet_partition, make_fmnist_like
+from repro.fl import FederatedTrainer
+from repro.models import cnn
+
+DATA_KW = dict(confusion=0.55, label_noise=0.05, noise=0.9)
+
+
+def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
+          lr=0.05, local_steps=2):
+    cfg = CNN_FULL
+    imgs, labels = make_fmnist_like(n_train, seed=seed, **DATA_KW)
+    ti, tl = make_fmnist_like(n_test, seed=seed + 999,
+                              **dict(DATA_KW, label_noise=0.0))
+    parts = dirichlet_partition(labels, n_clients, 0.3, seed=seed)
+    fl_cfg = FLConfig(rounds=rounds, local_batch=64, local_steps=local_steps, lr=lr)
+    datasets = [ClientDataset(imgs[p], labels[p], fl_cfg.local_batch, seed=i)
+                for i, p in enumerate(parts)]
+    params = cnn.init_cnn(jax.random.PRNGKey(seed), cfg)
+    loss_fn = lambda p, b: cnn.cnn_loss(p, b, cfg)
+    ti_j, tl_j = jnp.asarray(ti), jnp.asarray(tl)
+
+    @jax.jit
+    def eval_fn(p):
+        lg = cnn.cnn_forward(p, ti_j, cfg)
+        return jnp.mean((jnp.argmax(lg, -1) == tl_j).astype(jnp.float32))
+
+    def make(strategy, **kw):
+        return FederatedTrainer(model_loss=loss_fn, model_params=params,
+                                client_datasets=datasets, eval_fn=eval_fn,
+                                fl_cfg=fl_cfg, fe_cfg=FairEnergyConfig(),
+                                ch_cfg=ChannelConfig(n_clients=n_clients),
+                                strategy=strategy, seed=seed, **kw)
+    return make, fl_cfg
+
+
+def run_all(n_clients=20, rounds=60, target=0.80, seed=0, verbose=True,
+            extra_baselines=False, **build_kw):
+    """Runs FairEnergy first (to fix K / eco params per paper protocol),
+    then the baselines. Returns the results dict."""
+    make, fl_cfg = build(n_clients=n_clients, rounds=rounds, seed=seed, **build_kw)
+
+    t0 = time.time()
+    fe = make("fairenergy")
+    fe.run(rounds, verbose=verbose, log_every=max(rounds // 6, 1))
+    k = max(1, int(round(np.mean([lg.n_selected for lg in fe.history]))))
+    eco_gamma = float(min((g for lg in fe.history for g in lg.gamma[lg.selected]),
+                          default=0.1))
+    # EcoRandom's "bandwidth observed in FairEnergy": the literal minimum is
+    # degenerate with a continuous GSS bracket (marginal clients get ~0 Hz,
+    # i.e. unbounded transmit time), so we use the MEDIAN allocation —
+    # preserving the paper's intent of a communication-cost floor
+    bws = [b for lg in fe.history for b in lg.bandwidth[lg.selected] if b > 0]
+    eco_bw = float(np.median(bws)) if bws else fe.ch_cfg.bandwidth_total / max(k, 1)
+
+    runs = {"fairenergy": fe}
+    strategies = ["scoremax", "ecorandom"] + (
+        ["randomfull", "channelgreedy"] if extra_baselines else [])
+    for s in strategies:
+        tr = make(s, fixed_k=k, eco_gamma=eco_gamma, eco_bandwidth=eco_bw)
+        tr.run(rounds, verbose=verbose, log_every=max(rounds // 6, 1))
+        runs[s] = tr
+
+    results = {"k": k, "eco_gamma": eco_gamma, "eco_bandwidth": eco_bw,
+               "rounds": rounds, "n_clients": n_clients,
+               "elapsed_s": round(time.time() - t0, 1), "strategies": {}}
+    for name, tr in runs.items():
+        part = tr.participation_counts()
+        results["strategies"][name] = {
+            "accuracy": tr.accuracy_curve().tolist(),
+            "energy_per_round_J": tr.energy_per_round().tolist(),
+            "energy_to_target_J": tr.energy_to_accuracy(target),
+            "participation": {"min": int(part.min()), "max": int(part.max()),
+                              "std": float(part.std())},
+            "mean_selected": float(np.mean([lg.n_selected for lg in tr.history])),
+            "mean_gamma": tr.mean_gamma_selected(),
+        }
+    return results
+
+
+def main(out="experiments/fl_results.json", **kw):
+    res = run_all(**kw)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(res, f, indent=1)
+    summarize(res)
+    return res
+
+
+def summarize(res):
+    print(f"\n=== FL results (N={res['n_clients']}, {res['rounds']} rounds, "
+          f"K={res['k']}) ===")
+    print(f"{'strategy':14s}{'final_acc':>10s}{'E/round mJ':>12s}"
+          f"{'E->80% J':>12s}{'part min/max/std':>20s}")
+    for name, s in res["strategies"].items():
+        acc = s["accuracy"][-1]
+        epr = np.mean(s["energy_per_round_J"]) * 1e3
+        e2t = s["energy_to_target_J"]
+        p = s["participation"]
+        print(f"{name:14s}{acc:10.3f}{epr:12.3f}"
+              f"{(f'{e2t:.3f}' if e2t else 'n/a'):>12s}"
+              f"{p['min']:>8d}/{p['max']:<4d}{p['std']:6.2f}")
+    fe = res["strategies"]["fairenergy"].get("energy_to_target_J")
+    for base in ("scoremax", "ecorandom"):
+        bt = res["strategies"].get(base, {}).get("energy_to_target_J")
+        if fe and bt:
+            print(f"FairEnergy uses {100 * (1 - fe / bt):.0f}% less energy than "
+                  f"{base} to reach target (paper: 71% vs ScoreMax, 79% vs EcoRandom)")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--paper", action="store_true",
+                    help="full paper scale: N=50, 150 rounds")
+    ap.add_argument("--extra-baselines", action="store_true")
+    ap.add_argument("--out", default="experiments/fl_results.json")
+    a = ap.parse_args()
+    if a.paper:
+        main(out=a.out, n_clients=50, rounds=150, extra_baselines=a.extra_baselines)
+    else:
+        main(out=a.out, n_clients=a.clients, rounds=a.rounds,
+             extra_baselines=a.extra_baselines)

@@ -1,0 +1,42 @@
+"""Generate scan-corrected per-device FLOPs/bytes (experiments/
+scan_corrected.json) — XLA's cost analysis counts a lax.scan body once, so
+we re-lower each (arch x shape) at two reduced depths and fit
+cost(L) = c1 + body*(L - L1). Runs in its own process (dry-run env).
+
+  PYTHONPATH=src python -m benchmarks.gen_scan_corrected
+"""
+import repro.launch.dryrun  # noqa: F401  (must be first: sets XLA_FLAGS)
+
+import json
+import os as _os
+_os.environ["REPRO_FORCE_MICRO"] = "1"   # fixed M for comparable two-point fits
+import os
+import sys
+
+from benchmarks.roofline import scan_corrected_cost
+from repro.configs import ARCH_IDS, SHAPES
+
+
+def main(out="experiments/scan_corrected.json", archs=None):
+    archs = archs or ARCH_IDS
+    results = {}
+    if os.path.exists(out):
+        with open(out) as f:
+            results = json.load(f)
+    for arch in archs:
+        for shape in SHAPES:
+            key = f"{arch}__{shape}"
+            if key in results:
+                continue
+            try:
+                results[key] = scan_corrected_cost(arch, shape)
+                print(f"{key}: flops={results[key]['flops']:.3e} "
+                      f"bytes={results[key]['bytes']:.3e}", flush=True)
+            except Exception as e:  # noqa: BLE001
+                print(f"{key}: FAILED {e}", flush=True)
+            with open(out, "w") as f:
+                json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main(archs=sys.argv[1:] or None)

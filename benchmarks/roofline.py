@@ -1,0 +1,169 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape) on the single-pod 16x16 mesh:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s           (197 TF bf16, v5e)
+    memory     = HLO_bytes_per_chip / HBM_bw                (819 GB/s)
+    collective = collective_bytes_per_chip / link_bw        (~50 GB/s ICI)
+
+cost_analysis counts a ``lax.scan`` body ONCE (XLA cannot see the trip
+count), so FLOPs/bytes are scan-corrected with a two-point fit: the step is
+re-lowered at two reduced depths L1 < L2; body cost = (c2-c1)/(L2-L1);
+total = c1 + body*(L - L1). MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D
+(MoE) per step gives the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12        # bf16 per chip, TPU v5e
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_PARAM_COUNTS = {}         # arch -> (total, active) filled lazily
+
+
+def model_params(arch: str) -> tuple[float, float]:
+    """(total, active) parameter counts, derived from the real param tree."""
+    if arch in _PARAM_COUNTS:
+        return _PARAM_COUNTS[arch]
+    import jax
+    from repro.configs import get_config
+    from repro.launch import steps as steps_mod
+    cfg = get_config(arch)
+    p = steps_mod.params_shape(cfg)
+    total = float(sum(int(l.size) for l in jax.tree_util.tree_leaves(p)))
+    active = total
+    if cfg.n_experts:
+        # routed experts: only top-k of E contribute per token
+        d_ff = cfg.moe_d_ff or cfg.d_ff
+        per_expert = 3 * cfg.d_model * d_ff
+        routed = cfg.n_layers * cfg.n_experts * per_expert
+        active = total - routed + cfg.n_layers * cfg.n_experts_per_tok * per_expert
+    _PARAM_COUNTS[arch] = (total, active)
+    return total, active
+
+
+def model_flops(arch: str, shape: dict) -> float:
+    """Analytic step FLOPs: parameter matmuls (2*N_active per token fwd,
+    x3 for train) PLUS the attention quadratic term 4*B*S*W_eff*d_attn per
+    layer fwd (causal => W_eff = S/2, or the sliding window). This is the
+    primary compute-roofline numerator — the HLO count misses lax.scan
+    trip counts (layer scan corrected by the two-point fit; the flash
+    chunk scans inside one layer are not, so HLO undercounts attention at
+    long S — reported as the `hlo/analytic` diagnostic column)."""
+    from repro.configs import SHAPES, get_config
+    sh = SHAPES[shape] if isinstance(shape, str) else shape
+    cfg = get_config(arch)
+    _, active = model_params(arch)
+    tokens = sh.global_batch * sh.seq_len
+
+    # attention quadratic work (fwd), 0 for attention-free archs
+    attn_fwd = 0.0
+    if cfg.n_heads:
+        d_attn = cfg.n_heads * cfg.resolved_head_dim
+        w_eff = min(sh.seq_len, cfg.sliding_window or sh.seq_len) 
+        n_attn_layers = (cfg.n_layers // cfg.attn_every) if cfg.attn_every else cfg.n_layers
+        if cfg.family == "audio":
+            n_attn_layers = cfg.n_layers + (cfg.n_encoder_layers or cfg.n_layers)
+        attn_fwd = 4.0 * tokens * (w_eff / 2.0) * d_attn * n_attn_layers
+
+    if sh.kind == "train":
+        return 6.0 * active * tokens + 3.0 * attn_fwd
+    if sh.kind == "prefill":
+        return 2.0 * active * tokens + attn_fwd
+    # decode: one token per request against the cache
+    cache = min(sh.seq_len, cfg.sliding_window or sh.seq_len)
+    dec_attn = 0.0
+    if cfg.n_heads:
+        n_attn_layers = (cfg.n_layers // cfg.attn_every) if cfg.attn_every else cfg.n_layers
+        dec_attn = 4.0 * sh.global_batch * cache * cfg.n_heads * cfg.resolved_head_dim * n_attn_layers
+    return 2.0 * active * sh.global_batch + dec_attn
+
+
+def load_artifact(out_dir: str, arch: str, shape: str, mesh: str = "single") -> dict:
+    path = os.path.join(out_dir, f"{arch}__{shape}__{mesh}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_terms(artifact: dict, corrected: dict | None = None) -> dict:
+    """corrected: optional scan-corrected {"flops","bytes"} per device."""
+    flops = (corrected or {}).get("flops", artifact["flops_per_device"])
+    byts = (corrected or {}).get("bytes", artifact["bytes_accessed_per_device"])
+    coll = (corrected or {}).get("coll", artifact["collectives"]["total_bytes"])
+    mf = model_flops(artifact["arch"], artifact["shape"])
+    n_dev = artifact["n_devices"]
+    terms = {
+        "compute_s": (mf / n_dev) / PEAK_FLOPS,       # analytic (primary)
+        "memory_s": max(byts, 0.0) / HBM_BW,
+        "collective_s": coll / ICI_BW,
+    }
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k] if k.endswith("_s") else -1)
+    terms["hlo_compute_s"] = flops / PEAK_FLOPS
+    terms["model_flops_per_dev"] = mf / n_dev
+    # >1 with remat (~1.3x); <1 where the flash chunk scans hide flops
+    terms["hlo_over_analytic"] = flops / max(mf / n_dev, 1.0)
+    terms["hbm_fits"] = artifact.get("memory", {}).get("peak_per_device", 0) <= 16 * 2**30
+    return terms
+
+
+def scan_corrected_cost(arch: str, shape_name: str, multi_pod: bool = False):
+    """Compile the step with layers UNROLLED (cfg.scan_layers=False): XLA's
+    cost analysis counts a while body once regardless of trip count, so the
+    scanned HLO under-reports FLOPs/bytes/collectives by ~n_layers. The
+    unrolled module reports every layer. (The chunked flash-attention scans
+    remain loops — the analytic attention term in model_flops covers that;
+    the hlo/analytic column makes the residual undercount visible.)"""
+    import importlib
+    import repro.configs as C
+    from repro.launch.dryrun import dryrun_one
+
+    mod = importlib.import_module(C._MODULES[arch])
+    orig = mod.CONFIG
+    try:
+        mod.CONFIG = orig.replace(scan_layers=False)
+        res = dryrun_one(arch, shape_name, multi_pod=multi_pod, verbose=False)
+    finally:
+        mod.CONFIG = orig
+    return {"flops": res["flops_per_device"],
+            "bytes": res["bytes_accessed_per_device"],
+            "coll": res["collectives"]["total_bytes"],
+            "compile_s": res["compile_s"]}
+
+
+def main(out_dir: str = "experiments/dryrun", corrected_path: str | None = None):
+    from repro.configs import ARCH_IDS, SHAPES
+    corrected = {}
+    if corrected_path and os.path.exists(corrected_path):
+        with open(corrected_path) as f:
+            corrected = json.load(f)
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            try:
+                art = load_artifact(out_dir, arch, shape)
+            except FileNotFoundError:
+                continue
+            corr = corrected.get(f"{arch}__{shape}")
+            t = roofline_terms(art, corr)
+            rows.append({
+                "arch": arch, "shape": shape, **{k: t[k] for k in
+                ("compute_s", "memory_s", "collective_s", "bottleneck",
+                 "hlo_over_analytic", "hbm_fits")},
+                "peak_gib": art.get("memory", {}).get("peak_per_device", 0) / 2**30,
+            })
+    hdr = (f"{'arch':21s}{'shape':13s}{'compute_s':>11s}{'memory_s':>11s}"
+           f"{'coll_s':>11s}  {'bottleneck':12s}{'hlo/ana':>8s}{'GiB':>7s} fits")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:21s}{r['shape']:13s}{r['compute_s']:11.3e}{r['memory_s']:11.3e}"
+              f"{r['collective_s']:11.3e}  {r['bottleneck'][:11]:12s}{r['hlo_over_analytic']:8.2f}"
+              f"{r['peak_gib']:7.2f} {'y' if r['hbm_fits'] else 'N'}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

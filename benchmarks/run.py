@@ -1,0 +1,112 @@
+"""Benchmark harness — one entry per paper table/figure plus kernel
+microbenches and the roofline table. Prints ``name,us_per_call,derived``
+CSV rows for timed benches and summary tables for the FL experiments.
+
+  PYTHONPATH=src python -m benchmarks.run             # quick suite
+  PYTHONPATH=src python -m benchmarks.run --paper     # full Sec. VII scale
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _time_us(fn, *args, warmup=2, iters=10):
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_kernels():
+    """Kernel microbenches (interpret-mode on CPU — correctness-path
+    timing, not TPU perf; TPU numbers come from the roofline model)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.fl.compression import block_topk, global_topk
+    from repro.kernels.score_norm.ops import l2_norm
+
+    rows = []
+    v = jax.random.normal(jax.random.PRNGKey(0), (1 << 20,))
+    us = _time_us(lambda x: block_topk(x, 0.1)[0], v, iters=5)
+    rows.append(("topk_block_1M_gamma0.1", us, "block=4096"))
+    us = _time_us(lambda x: global_topk(x, 0.1)[0], v, iters=5)
+    rows.append(("topk_global_1M_gamma0.1", us, "exact sort"))
+    us = _time_us(l2_norm, v, iters=5)
+    rows.append(("score_norm_1M", us, "pallas partials"))
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1024, 8, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1024, 2, 64), jnp.bfloat16)
+    us = _time_us(lambda a, b: flash_attention(a, b, b), q, k, iters=3)
+    rows.append(("flash_attn_1k_8h", us, "interpret"))
+    return rows
+
+
+def bench_controller():
+    """Per-round controller solve cost vs N (paper complexity O(N*G*T_gss))."""
+    import jax.numpy as jnp
+    from repro.configs.base import ChannelConfig, FairEnergyConfig
+    from repro.core.fairenergy import init_state, solve_round
+    rows = []
+    fe = FairEnergyConfig(eta=1e-3, eta_auto=False)
+    n0 = ChannelConfig().noise_density
+    for n in (10, 50, 200):
+        rng = np.random.default_rng(0)
+        u = jnp.asarray(rng.uniform(0.5, 5, n), jnp.float32)
+        h = jnp.asarray(1e-3 * rng.uniform(50, 500, n) ** -3.0, jnp.float32)
+        P = jnp.asarray(rng.uniform(1e-4, 3e-4, n), jnp.float32)
+        st = init_state(fe, n)
+        us = _time_us(lambda: solve_round(u, h, P, st, fe_cfg=fe, s_bits=6.4e7,
+                                          i_bits=2e6, b_tot=10e6, n0=n0)[0].x,
+                      iters=5)
+        rows.append((f"controller_round_N{n}", us, f"{fe.inner_iters} inner iters"))
+    return rows
+
+
+def bench_roofline(out_dir="experiments/dryrun"):
+    from benchmarks import roofline
+    if not os.path.isdir(out_dir) or not os.listdir(out_dir):
+        print("# roofline: no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return []
+    corrected_path = os.path.join(os.path.dirname(out_dir), "scan_corrected.json")
+    print("\n=== Roofline (single-pod 16x16, v5e constants) ===")
+    return roofline.main(out_dir, corrected_path if os.path.exists(corrected_path) else None)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true", help="full Sec. VII scale FL runs")
+    ap.add_argument("--skip-fl", action="store_true")
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--clients", type=int, default=20)
+    args, _ = ap.parse_known_args()
+
+    print("name,us_per_call,derived")
+    for name, us, extra in bench_kernels() + bench_controller():
+        print(f"{name},{us:.1f},{extra}")
+
+    bench_roofline()
+
+    if not args.skip_fl:
+        from benchmarks import fl_experiments
+        if args.paper:
+            fl_experiments.main(out="experiments/fl_results_paper.json",
+                                n_clients=50, rounds=150)
+        else:
+            fl_experiments.main(out="experiments/fl_results_bench.json",
+                                n_clients=args.clients, rounds=args.rounds,
+                                verbose=False)
+
+
+if __name__ == '__main__':
+    main()

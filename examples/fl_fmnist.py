@@ -1,0 +1,15 @@
+"""End-to-end paper reproduction driver (small scale for CPU):
+FairEnergy vs ScoreMax vs EcoRandom on non-IID FMNIST-like data.
+
+  PYTHONPATH=src python examples/fl_fmnist.py [--clients 20 --rounds 40]
+"""
+import argparse
+
+from benchmarks.fl_experiments import main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=15)
+    ap.add_argument("--rounds", type=int, default=40)
+    a = ap.parse_args()
+    main(out="experiments/fl_example.json", n_clients=a.clients, rounds=a.rounds)

@@ -1,0 +1,17 @@
+"""Serve a small model: prefill a prompt batch then decode with KV/SSM
+caches (the decode_32k / long_500k path at reduced scale).
+
+  PYTHONPATH=src python examples/serve_decode.py [--arch rwkv6-1.6b]
+"""
+import argparse
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-1.6b")
+    a, _ = ap.parse_known_args()
+    sys.argv = ["serve", "--arch", a.arch, "--smoke", "--prompt-len", "48",
+                "--gen", "16", "--batch", "2"]
+    serve_main()

@@ -1,0 +1,14 @@
+"""Train a reduced tinyllama on synthetic Markov token data for a few
+hundred steps — the end-to-end training driver example.
+
+  PYTHONPATH=src python examples/train_tinyllama.py
+"""
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    sys.argv = ["train", "--arch", "tinyllama-1.1b", "--smoke",
+                "--steps", "200", "--batch", "8", "--seq", "128",
+                "--ckpt-dir", "experiments/ckpt_tinyllama"]
+    train_main()

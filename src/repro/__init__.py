@@ -1,0 +1,3 @@
+"""repro: FairEnergy — contribution-based fairness + energy efficiency in FL,
+as a production-grade multi-pod JAX framework."""
+__version__ = "0.1.0"

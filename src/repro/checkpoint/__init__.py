@@ -1,0 +1,4 @@
+"""npz-based pytree checkpointing (no orbax offline)."""
+from .ckpt import save_checkpoint, restore_checkpoint, latest_checkpoint
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_checkpoint"]

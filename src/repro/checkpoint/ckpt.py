@@ -1,0 +1,47 @@
+"""Flatten a pytree to path-keyed numpy arrays in a single .npz file."""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree, metadata: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    arrays = _flatten_with_paths(tree)
+    np.savez(path, __meta__=json.dumps(metadata or {}), **arrays)
+    return path
+
+
+def restore_checkpoint(path: str, like_tree):
+    """Restore into the structure of ``like_tree`` (paths must match)."""
+    with np.load(path, allow_pickle=False) as data:
+        arrays = {k: data[k] for k in data.files if k != "__meta__"}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    leaves = []
+    for path_k, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        arr = arrays[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+
+
+def latest_checkpoint(directory: str) -> str | None:
+    if not os.path.isdir(directory):
+        return None
+    cands = sorted(f for f in os.listdir(directory) if re.match(r"ckpt_\d+\.npz", f))
+    return os.path.join(directory, cands[-1]) if cands else None

@@ -1,0 +1,3 @@
+"""FairEnergy core: the paper's contribution."""
+from . import baselines, channel, fairness, gss  # noqa: F401
+from .fairenergy import ControllerState, RoundDecision, init_state, solve_round  # noqa: F401

@@ -1,0 +1,69 @@
+"""Benchmark selection strategies (paper Sec. VII).
+
+* **ScoreMax** — top-K contribution scores, full precision (gamma=1),
+  B_tot split equally among the K selected. Isolates importance-driven
+  selection [refs 8, 21 in the paper].
+* **EcoRandom** — random K clients, every one transmitting at the minimum
+  compression ratio and minimum bandwidth observed for FairEnergy
+  (communication-cost floor) [refs 4, 22].
+* extras (beyond-paper sanity baselines): **RandomFull** (random K,
+  gamma=1, equal bandwidth) and **ChannelGreedy** (FedCS-style best-channel
+  first).
+
+K is fixed to the mean number of devices FairEnergy selects per round
+("to ensure a fair comparison", Sec. VII).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .channel import comm_energy
+from .fairenergy import RoundDecision
+
+
+def _decision(x, gamma, bandwidth, P, h, s_bits, i_bits, n0) -> RoundDecision:
+    xf = x.astype(jnp.float32)
+    energy = xf * comm_energy(jnp.asarray(gamma), jnp.asarray(bandwidth),
+                              jnp.asarray(P), jnp.asarray(h), s_bits, i_bits, n0)
+    return RoundDecision(x=jnp.asarray(x), gamma=jnp.asarray(gamma) * xf,
+                         bandwidth=jnp.asarray(bandwidth) * xf, energy=energy,
+                         lam=jnp.float32(0), mu=jnp.zeros_like(xf),
+                         n_inner=jnp.int32(0), bw_used=jnp.sum(jnp.asarray(bandwidth) * xf))
+
+
+def score_max(u_norms: np.ndarray, h, P, k: int, *, b_tot, s_bits, i_bits, n0) -> RoundDecision:
+    N = len(u_norms)
+    x = np.zeros(N, bool)
+    x[np.argsort(-np.asarray(u_norms))[:k]] = True
+    gamma = np.ones(N, np.float32)
+    bw = np.where(x, b_tot / max(k, 1), 0.0).astype(np.float32)
+    return _decision(x, gamma, bw, P, h, s_bits, i_bits, n0)
+
+
+def eco_random(rng: np.random.Generator, n: int, k: int, *, gamma_min_obs: float,
+               b_min_obs: float, h, P, s_bits, i_bits, n0) -> RoundDecision:
+    x = np.zeros(n, bool)
+    x[rng.choice(n, size=k, replace=False)] = True
+    gamma = np.full(n, gamma_min_obs, np.float32)
+    bw = np.full(n, b_min_obs, np.float32)
+    return _decision(x, gamma, bw, P, h, s_bits, i_bits, n0)
+
+
+def random_full(rng: np.random.Generator, n: int, k: int, *, b_tot, h, P,
+                s_bits, i_bits, n0) -> RoundDecision:
+    x = np.zeros(n, bool)
+    x[rng.choice(n, size=k, replace=False)] = True
+    gamma = np.ones(n, np.float32)
+    bw = np.where(x, b_tot / max(k, 1), 0.0).astype(np.float32)
+    return _decision(x, gamma, bw, P, h, s_bits, i_bits, n0)
+
+
+def channel_greedy(h: np.ndarray, P, k: int, *, b_tot, s_bits, i_bits, n0) -> RoundDecision:
+    """FedCS-like: pick the K best instantaneous channels, gamma=1."""
+    n = len(h)
+    x = np.zeros(n, bool)
+    x[np.argsort(-np.asarray(h))[:k]] = True
+    gamma = np.ones(n, np.float32)
+    bw = np.where(x, b_tot / max(k, 1), 0.0).astype(np.float32)
+    return _decision(x, gamma, bw, P, h, s_bits, i_bits, n0)

@@ -1,0 +1,61 @@
+"""Wireless uplink model (paper Sec. II-B).
+
+Rate follows Shannon capacity R = B log2(1 + P h / (N0 B)); payload is
+``gamma * S + I`` bits; T = payload / R; E = P * T.  Channel gains combine
+a distance^-alpha pathloss with (optional) per-round Rayleigh fading.
+All functions are jnp and broadcast over clients.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+# thermal noise density kT at 290K ~ 4e-21 W/Hz (-174 dBm/Hz)
+THERMAL_N0 = 4e-21
+REF_GAIN_1M = 1e-3  # -30 dB at 1 m
+
+
+def shannon_rate(B: Array, P: Array, h: Array, n0: float = THERMAL_N0) -> Array:
+    """bits/s. Safe at B -> 0 (rate -> P h / (N0 ln 2))."""
+    B = jnp.maximum(B, 1.0)
+    snr = P * h / (n0 * B)
+    return B * jnp.log2(1.0 + snr)
+
+
+def payload_bits(gamma: Array, s_bits: float, i_bits: float) -> Array:
+    return gamma * s_bits + i_bits
+
+
+def comm_time(gamma: Array, B: Array, P: Array, h: Array, s_bits: float,
+              i_bits: float, n0: float = THERMAL_N0) -> Array:
+    return payload_bits(gamma, s_bits, i_bits) / jnp.maximum(shannon_rate(B, P, h, n0), 1e-9)
+
+
+def comm_energy(gamma: Array, B: Array, P: Array, h: Array, s_bits: float,
+                i_bits: float, n0: float = THERMAL_N0) -> Array:
+    """Joules (paper: E_i = P_i T_i)."""
+    return P * comm_time(gamma, B, P, h, s_bits, i_bits, n0)
+
+
+class WirelessNetwork:
+    """Static client geometry + per-round fading draws (host-side numpy RNG,
+    gains handed to the jitted controller as arrays)."""
+
+    def __init__(self, cfg, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.cfg = cfg
+        n = cfg.n_clients
+        self.power = rng.uniform(cfg.power_min, cfg.power_max, n)          # P_i
+        self.distance = rng.uniform(50.0, cfg.cell_radius_m, n)            # d_i
+        self.pathloss = REF_GAIN_1M * self.distance ** (-cfg.pathloss_exp)
+        self._rng = rng
+
+    def gains(self, round_idx: int | None = None) -> np.ndarray:
+        """h_i^r — pathloss x Rayleigh fading (exponential power)."""
+        if self.cfg.rayleigh:
+            fade = self._rng.exponential(1.0, len(self.pathloss))
+            return self.pathloss * fade
+        return self.pathloss.copy()

@@ -1,0 +1,136 @@
+"""FairEnergy per-round controller (paper Sec. IV-VI, Algorithm 1).
+
+Jointly decides selection x_i, sparsity gamma_i and bandwidth B_i by
+Lagrangian relaxation:
+
+  min  sum_i x_i (E_i(gamma_i, B_i) - eta s_i(gamma_i))
+  s.t. sum_i x_i B_i <= B_tot,  gamma in [gamma_min, 1],  q_i >= pi_min
+
+* dualize bandwidth (lambda) and fairness (mu_i); the partial Lagrangian
+  separates per device (Sec. V-A);
+* affine in x => threshold rule
+      x_i = 1  iff  E_i + lambda B_i < eta s_i + mu_i (1 - rho)     (Sec. V-B);
+* per selected device, gamma on a grid and B via Golden Section Search on
+  the unimodal phi(gamma, .) (Sec. V-C);
+* duals by projected subgradient ascent (Algorithm 1 lines 9/11);
+* greedy repair restores primal bandwidth feasibility after rounding.
+
+Implementation notes: bandwidth is normalized to fractions b = B/B_tot so
+dual scales are O(energy); the whole round solve is one jitted JAX program
+(vmapped GSS over clients x gamma grid, ``fori_loop`` dual ascent) — the
+controller itself is a composable JAX module usable inside larger programs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .channel import comm_energy
+from .fairness import contribution_score
+from .gss import golden_section_minimize
+
+Array = jnp.ndarray
+
+
+class RoundDecision(NamedTuple):
+    x: Array          # [N] bool — selected
+    gamma: Array      # [N] — sparsity ratio (valid where selected)
+    bandwidth: Array  # [N] Hz — allocated bandwidth (0 where unselected)
+    energy: Array     # [N] J — communication energy (0 where unselected)
+    lam: Array        # scalar dual (normalized-bandwidth price)
+    mu: Array         # [N] fairness duals
+    n_inner: Array    # inner iterations run
+    bw_used: Array    # sum of allocated bandwidth (Hz)
+
+
+class ControllerState(NamedTuple):
+    lam: Array
+    mu: Array
+    q: Array          # EMA participation metric
+
+
+def init_state(cfg, n_clients: int) -> ControllerState:
+    return ControllerState(
+        lam=jnp.zeros((), jnp.float32),
+        mu=jnp.zeros((n_clients,), jnp.float32),
+        q=jnp.full((n_clients,), cfg.q0, jnp.float32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("fe_cfg", "s_bits", "i_bits", "b_tot", "n0"))
+def solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
+                *, fe_cfg, s_bits: float, i_bits: float, b_tot: float,
+                n0: float) -> tuple[RoundDecision, ControllerState]:
+    """One round of Algorithm 1. All client quantities are [N] arrays."""
+    N = u_norms.shape[0]
+    grid = jnp.asarray(fe_cfg.gamma_grid, jnp.float32)       # [G]
+    G = grid.shape[0]
+    rho, eta = fe_cfg.rho, fe_cfg.eta
+    b_lo = fe_cfg.b_min_frac
+
+    Pg = P[:, None]
+    hg = h[:, None]
+    gam = jnp.broadcast_to(grid[None, :], (N, G))
+
+    def energy_of(b_frac):                                   # [N,G] fractions
+        return comm_energy(gam, b_frac * b_tot, Pg, hg, s_bits, i_bits, n0)
+
+    score = contribution_score(u_norms[:, None], gam)        # [N,G]
+
+    def best_response(lam):
+        """Per-device (gamma*, b*, E*, phi*) for a given bandwidth price."""
+        def phi_b(b_frac):
+            return energy_of(b_frac) + lam * b_frac          # score term const wrt b
+        b_star, phi_star = golden_section_minimize(
+            phi_b, jnp.full((N, G), b_lo), 1.0, iters=fe_cfg.gss_max_iters)
+        phi_full = phi_star - eta * score                    # [N,G]
+        g_idx = jnp.argmin(phi_full, axis=1)                 # [N]
+        take = lambda t: jnp.take_along_axis(t, g_idx[:, None], 1)[:, 0]
+        return take(gam), take(b_star), take(energy_of(b_star)), take(phi_full)
+
+    def inner(i, carry):
+        lam, mu = carry
+        gamma_i, b_i, e_i, _ = best_response(lam)
+        x = e_i + lam * b_i < eta * contribution_score(u_norms, gamma_i) + mu * (1.0 - rho)
+        xf = x.astype(jnp.float32)
+        # Algorithm 1 line 11: bandwidth dual (normalized budget = 1)
+        lam = jnp.maximum(lam + fe_cfg.alpha_lambda * (jnp.sum(xf * b_i) - 1.0), 0.0)
+        # Algorithm 1 line 9: fairness dual
+        mu = jnp.maximum(mu + fe_cfg.alpha_mu *
+                         (fe_cfg.pi_min - rho * state.q - (1.0 - rho) * xf), 0.0)
+        return lam, mu
+
+    lam, mu = jax.lax.fori_loop(0, fe_cfg.inner_iters, inner, (state.lam, state.mu))
+
+    # final primal extraction at converged duals
+    gamma_i, b_i, e_i, _ = best_response(lam)
+    benefit = eta * contribution_score(u_norms, gamma_i) + mu * (1.0 - rho) - e_i - lam * b_i
+    x = benefit > 0
+
+    # ---- repair: greedy keep until the bandwidth budget fits.  Clients
+    # whose participation EMA would violate q >= pi_min if dropped are kept
+    # FIRST (then by benefit) — a benefit-only repair silently undoes the
+    # fairness the duals enforced (measured: min participation 0.14 < pi_min
+    # at rho=0.6) ----
+    deficit = (fe_cfg.pi_min - rho * state.q) > 0.0          # violated if x_i=0
+    prio = jnp.where(deficit, 1e6, 0.0) + benefit
+    order = jnp.argsort(jnp.where(x, -prio, jnp.inf))        # selected, priority first
+    b_sorted = b_i[order] * x[order]
+    cum = jnp.cumsum(b_sorted)
+    keep_sorted = (cum <= 1.0) & x[order]
+    keep = jnp.zeros((N,), bool).at[order].set(keep_sorted)
+    x = x & keep
+
+    xf = x.astype(jnp.float32)
+    bandwidth = xf * b_i * b_tot
+    energy = xf * e_i
+    q_new = rho * state.q + (1.0 - rho) * xf                 # eq. (1)
+
+    dec = RoundDecision(x=x, gamma=jnp.where(x, gamma_i, 0.0), bandwidth=bandwidth,
+                        energy=energy, lam=lam, mu=mu,
+                        n_inner=jnp.int32(fe_cfg.inner_iters),
+                        bw_used=jnp.sum(bandwidth))
+    return dec, ControllerState(lam=lam, mu=mu, q=q_new)

@@ -1,0 +1,21 @@
+"""Contribution score and long-term fairness metric (paper Sec. III)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def contribution_score(update_norm: Array, gamma: Array) -> Array:
+    """s_i^r(gamma) = ||u_i^r||_2 * gamma_i^r  (eq. in Sec. III-A)."""
+    return update_norm * gamma
+
+
+def ema_update(q_prev: Array, x: Array, rho: float) -> Array:
+    """q_i^r = rho q_i^{r-1} + (1 - rho) x_i^r  (eq. 1)."""
+    return rho * q_prev + (1.0 - rho) * x
+
+
+def fairness_violation(q: Array, pi_min: float) -> Array:
+    """Positive where the participation constraint q_i >= pi_min is violated."""
+    return jnp.maximum(pi_min - q, 0.0)

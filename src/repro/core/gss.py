@@ -1,0 +1,47 @@
+"""Golden Section Search (Kiefer, 1953) — batched, fixed-iteration, jittable.
+
+The paper (Sec. V-C) uses GSS for the per-device bandwidth subproblem
+``min_B phi(gamma, B)``: phi is unimodal in B (energy falls steeply, then
+flattens as the Shannon rate saturates, while the lambda*B price grows).
+A fixed iteration count keeps the routine ``vmap``/``jit`` friendly;
+after ``n`` iterations the bracket shrinks by 0.618**n (60 iters => 3e-13).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+INVPHI = 0.6180339887498949   # 1/phi
+INVPHI2 = 0.3819660112501051  # 1/phi^2
+
+
+def golden_section_minimize(f: Callable, lo, hi, *, iters: int = 60):
+    """Minimize scalar-unimodal ``f`` elementwise over broadcast bounds.
+
+    ``f`` must accept and return arrays of the bracket's shape. Returns
+    (x_min, f(x_min)).
+    """
+    lo = jnp.asarray(lo, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+    hi = jnp.broadcast_to(jnp.asarray(hi, lo.dtype), jnp.broadcast_shapes(lo.shape, jnp.shape(hi)))
+    lo = jnp.broadcast_to(lo, hi.shape)
+
+    def body(_, state):
+        a, b, c, d, fc, fd = state
+        # shrink toward the smaller endpoint
+        take_left = fc < fd
+        new_b = jnp.where(take_left, d, b)
+        new_a = jnp.where(take_left, a, c)
+        new_d = jnp.where(take_left, c, new_a + INVPHI * (new_b - new_a))
+        new_c = jnp.where(take_left, new_a + INVPHI2 * (new_b - new_a), d)
+        new_fc = jnp.where(take_left, f(new_c), fd)
+        new_fd = jnp.where(take_left, fc, f(new_d))
+        return new_a, new_b, new_c, new_d, new_fc, new_fd
+
+    c0 = lo + INVPHI2 * (hi - lo)
+    d0 = lo + INVPHI * (hi - lo)
+    state = (lo, hi, c0, d0, f(c0), f(d0))
+    a, b, c, d, fc, fd = jax.lax.fori_loop(0, iters, body, state)
+    x = 0.5 * (a + b)
+    return x, f(x)

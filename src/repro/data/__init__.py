@@ -1,0 +1,6 @@
+from .partition import dirichlet_partition, partition_stats
+from .pipeline import ClientDataset
+from .synthetic import make_fmnist_like, make_token_stream
+
+__all__ = ["dirichlet_partition", "partition_stats", "ClientDataset",
+           "make_fmnist_like", "make_token_stream"]

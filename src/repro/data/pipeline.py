@@ -1,0 +1,27 @@
+"""Minimal per-client batch pipeline with deterministic shuffling."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ClientDataset:
+    """Holds one client's shard; yields minibatches cyclically."""
+
+    def __init__(self, images: np.ndarray, labels: np.ndarray, batch: int, seed: int):
+        assert len(images) == len(labels)
+        self.images, self.labels = images, labels
+        self.batch = min(batch, len(labels))
+        self._rng = np.random.default_rng(seed)
+        self._perm = self._rng.permutation(len(labels))
+        self._cursor = 0
+
+    def __len__(self):
+        return len(self.labels)
+
+    def next_batch(self) -> dict:
+        if self._cursor + self.batch > len(self._perm):
+            self._perm = self._rng.permutation(len(self.labels))
+            self._cursor = 0
+        idx = self._perm[self._cursor:self._cursor + self.batch]
+        self._cursor += self.batch
+        return {"images": self.images[idx], "labels": self.labels[idx]}

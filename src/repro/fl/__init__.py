@@ -1,0 +1,2 @@
+from . import client, compression, server, updates  # noqa: F401
+from .server import FederatedTrainer, RoundLog  # noqa: F401

@@ -1,0 +1,40 @@
+"""FL client: local training producing an update pytree.
+
+With ``local_steps=1`` the update equals the (negative-scaled) gradient —
+the paper's setting ("computes a local model update u_i, i.e. the gradient
+of its local loss"); larger values give standard FedAvg deltas.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import make_optimizer
+
+
+def make_local_step(loss_fn: Callable, lr: float, opt_name: str = "sgd"):
+    """Returns jitted fn(params, batch) -> (new_params, metrics)."""
+    opt_init, opt_update = make_optimizer(opt_name)
+
+    @jax.jit
+    def step(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        state = opt_init(params)
+        new_params, _ = opt_update(grads, state, params, lr)
+        return new_params, dict(metrics, loss=loss)
+
+    return step
+
+
+def local_update(params, dataset, local_step, n_steps: int):
+    """Run ``n_steps`` minibatch steps; return (delta pytree, metrics)."""
+    p = params
+    metrics = None
+    for _ in range(n_steps):
+        batch = dataset.next_batch()
+        p, metrics = local_step(p, batch)
+    delta = jax.tree_util.tree_map(lambda a, b: a - b, p, params)
+    return delta, metrics

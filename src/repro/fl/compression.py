@@ -1,0 +1,71 @@
+"""Update compression: magnitude top-k sparsification (+ optional int8
+quantization of kept values).
+
+Two top-k variants with identical payload accounting:
+
+* ``global_topk`` — exact top-(gamma*n) over the whole vector (the paper's
+  idealized scheme; O(n log n) sort);
+* ``block_topk`` — top-(gamma*block) per fixed-size block — the TPU-native
+  scheme implemented by kernels/topk_sparsify (DESIGN.md §4.1). Payload is
+  exactly gamma per block, which makes the energy model's gamma*S payload
+  deterministic.
+
+Both return a dense masked vector (simulation form) plus the kept count;
+``payload_bits`` mirrors the channel model's gamma*S + I accounting.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+DEFAULT_BLOCK = 4096
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _global_topk_mask(vec: Array, k: int) -> Array:
+    mag = jnp.abs(vec)
+    thresh = jax.lax.top_k(mag, k)[0][-1]
+    mask = mag >= thresh
+    # tie-break: keep exactly k by stable cumulative count
+    over = jnp.cumsum(mask.astype(jnp.int32)) <= k
+    return mask & over
+
+
+def global_topk(vec: Array, gamma: float) -> tuple[Array, int]:
+    n = vec.shape[0]
+    k = max(1, int(round(float(gamma) * n)))
+    mask = _global_topk_mask(vec, k)
+    return vec * mask.astype(vec.dtype), k
+
+
+def block_topk(vec: Array, gamma: float, block: int = DEFAULT_BLOCK,
+               use_pallas: bool = False) -> tuple[Array, int]:
+    """Keep the top ceil(gamma*block) magnitudes inside each block."""
+    if use_pallas:
+        from repro.kernels.topk_sparsify.ops import block_topk_sparsify
+        return block_topk_sparsify(vec, gamma, block=block)
+    from repro.kernels.topk_sparsify.ref import block_topk_ref
+    return block_topk_ref(vec, gamma, block=block)
+
+
+def quantize_int8(vec: Array) -> tuple[Array, Array]:
+    """Symmetric per-tensor int8 quantization of kept values."""
+    scale = jnp.maximum(jnp.max(jnp.abs(vec)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(vec / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def payload_bits(n_params: int, gamma: float, *, value_bits: int = 32,
+                 bitmap_index: bool = True) -> float:
+    """gamma*S + I: S = value_bits*n_params; I = 1-bit-per-coefficient mask."""
+    s_bits = value_bits * n_params
+    i_bits = float(n_params) if bitmap_index else 0.0
+    return gamma * s_bits + i_bits

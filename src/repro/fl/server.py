@@ -1,0 +1,198 @@
+"""Federated server: the per-round orchestration loop.
+
+Round r (paper Sec. II-A + Algorithm 1):
+  1. every client computes its local update u_i and reports ||u_i|| (a
+     scalar — negligible uplink) and the channel state h_i^r is measured;
+  2. the controller (FairEnergy or a baseline) outputs (x, gamma, B);
+  3. selected clients top-k sparsify u_i to gamma_i and "transmit" — the
+     server charges E_i = P_i (gamma_i S + I)/R_i(B_i);
+  4. the server aggregates sparse updates weighted by |D_i| and applies
+     them to the global model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core.channel import WirelessNetwork
+from repro.core.fairenergy import init_state, solve_round
+from repro.fl import compression
+from repro.fl.client import local_update, make_local_step
+from repro.fl.updates import (flatten_update, tree_spec, unflatten_update,
+                              update_l2_norm)
+
+
+@dataclasses.dataclass
+class RoundLog:
+    round: int
+    selected: np.ndarray
+    gamma: np.ndarray
+    bandwidth: np.ndarray
+    energy: np.ndarray          # J per client
+    accuracy: float
+    loss: float
+    n_selected: int
+
+    @property
+    def total_energy(self) -> float:
+        return float(self.energy.sum())
+
+
+class FederatedTrainer:
+    """Drives FL rounds for a given strategy.
+
+    strategy: "fairenergy" | "scoremax" | "ecorandom" | "randomfull" |
+              "channelgreedy"
+    """
+
+    def __init__(self, *, model_loss, model_params, client_datasets,
+                 eval_fn, fl_cfg, fe_cfg, ch_cfg, strategy: str = "fairenergy",
+                 fixed_k: Optional[int] = None,
+                 eco_gamma: float = 0.1, eco_bandwidth: Optional[float] = None,
+                 use_pallas_compression: bool = False, seed: int = 0):
+        self.loss_fn = model_loss
+        self.params = model_params
+        self.datasets = client_datasets
+        self.eval_fn = eval_fn
+        self.fl_cfg, self.fe_cfg, self.ch_cfg = fl_cfg, fe_cfg, ch_cfg
+        self.strategy = strategy
+        self.n_clients = len(client_datasets)
+        self.network = WirelessNetwork(ch_cfg, seed=seed)
+        self.state = init_state(fe_cfg, self.n_clients)
+        self.rng = np.random.default_rng(seed + 1)
+        self.local_step = make_local_step(model_loss, fl_cfg.lr)
+        self.spec = tree_spec(model_params)
+        self.n_params = int(sum(np.prod(s) for s in self.spec.shapes))
+        self.s_bits = 32.0 * self.n_params
+        self.i_bits = float(self.n_params)            # 1-bit/coeff kept-mask
+        self.fixed_k = fixed_k
+        self.eco_gamma = eco_gamma
+        self.eco_bandwidth = eco_bandwidth or ch_cfg.bandwidth_total / max(fixed_k or 10, 1)
+        self.use_pallas = use_pallas_compression
+        self.weights = np.array([len(d) for d in client_datasets], np.float64)
+        self.weights /= self.weights.sum()
+        self.history: list[RoundLog] = []
+
+    # ------------------------------------------------------------------
+    def _calibrate_eta(self, u_norms: np.ndarray, h: np.ndarray):
+        """eta_auto: make the score benefit commensurate with energy cost —
+        eta := eta_rel * median_i E_i(gamma=.5, B=B_tot/N) / median_i s_i(.5)."""
+        from repro.core.channel import comm_energy
+        e = np.asarray(comm_energy(
+            0.5, self.ch_cfg.bandwidth_total / self.n_clients,
+            jnp.asarray(self.network.power), jnp.asarray(h),
+            self.s_bits, self.i_bits, self.ch_cfg.noise_density))
+        s = 0.5 * np.asarray(u_norms)
+        eta = self.fe_cfg.eta_rel * float(np.median(e)) / max(float(np.median(s)), 1e-12)
+        self.fe_cfg = dataclasses.replace(self.fe_cfg, eta=eta, eta_auto=False)
+
+    def _decide(self, u_norms: np.ndarray, h: np.ndarray):
+        P = self.network.power
+        kw = dict(b_tot=self.ch_cfg.bandwidth_total, s_bits=self.s_bits,
+                  i_bits=self.i_bits, n0=self.ch_cfg.noise_density)
+        if self.strategy == "fairenergy":
+            if self.fe_cfg.eta_auto:
+                self._calibrate_eta(u_norms, h)
+            dec, self.state = solve_round(
+                jnp.asarray(u_norms, jnp.float32), jnp.asarray(h, jnp.float32),
+                jnp.asarray(P, jnp.float32), self.state,
+                fe_cfg=self.fe_cfg, **kw)
+            return dec
+        k = self.fixed_k or max(1, self.n_clients // 5)
+        if self.strategy == "scoremax":
+            return bl.score_max(u_norms, h, P, k, **kw)
+        if self.strategy == "ecorandom":
+            return bl.eco_random(self.rng, self.n_clients, k,
+                                 gamma_min_obs=self.eco_gamma,
+                                 b_min_obs=self.eco_bandwidth, h=h, P=P,
+                                 s_bits=kw["s_bits"], i_bits=kw["i_bits"], n0=kw["n0"])
+        if self.strategy == "randomfull":
+            return bl.random_full(self.rng, self.n_clients, k, b_tot=kw["b_tot"],
+                                  h=h, P=P, s_bits=kw["s_bits"],
+                                  i_bits=kw["i_bits"], n0=kw["n0"])
+        if self.strategy == "channelgreedy":
+            return bl.channel_greedy(h, P, k, b_tot=kw["b_tot"],
+                                     s_bits=kw["s_bits"], i_bits=kw["i_bits"],
+                                     n0=kw["n0"])
+        raise ValueError(self.strategy)
+
+    # ------------------------------------------------------------------
+    def run_round(self, r: int) -> RoundLog:
+        h = self.network.gains(r)
+
+        updates, u_norms, losses = [], np.zeros(self.n_clients), []
+        for i, ds in enumerate(self.datasets):
+            delta, metrics = local_update(self.params, ds, self.local_step,
+                                          self.fl_cfg.local_steps)
+            updates.append(delta)
+            u_norms[i] = float(update_l2_norm(delta))
+            losses.append(float(metrics["loss"]))
+
+        dec = self._decide(u_norms, h)
+        x = np.asarray(dec.x)
+        gamma = np.asarray(dec.gamma)
+
+        # aggregate sparsified updates from selected clients
+        agg = None
+        wsum = 0.0
+        for i in np.nonzero(x)[0]:
+            vec = flatten_update(updates[i])
+            vec, _ = compression.block_topk(vec, float(max(gamma[i], 1e-6)),
+                                            use_pallas=self.use_pallas)
+            w = self.weights[i]
+            agg = vec * w if agg is None else agg + vec * w
+            wsum += w
+        if agg is not None and wsum > 0:
+            agg = agg / wsum * self.fl_cfg.server_lr
+            delta_tree = unflatten_update(agg, self.spec)
+            self.params = jax.tree_util.tree_map(
+                lambda p, d: p + d.astype(p.dtype), self.params, delta_tree)
+
+        acc = float(self.eval_fn(self.params))
+        log = RoundLog(round=r, selected=x, gamma=gamma,
+                       bandwidth=np.asarray(dec.bandwidth),
+                       energy=np.asarray(dec.energy), accuracy=acc,
+                       loss=float(np.mean(losses)), n_selected=int(x.sum()))
+        self.history.append(log)
+        return log
+
+    def run(self, rounds: Optional[int] = None, *, log_every: int = 10,
+            verbose: bool = True):
+        rounds = rounds or self.fl_cfg.rounds
+        for r in range(rounds):
+            log = self.run_round(r)
+            if verbose and (r % log_every == 0 or r == rounds - 1):
+                print(f"[{self.strategy}] round {r:4d} acc={log.accuracy:.4f} "
+                      f"sel={log.n_selected:2d} E={log.total_energy*1e3:.3f} mJ")
+        return self.history
+
+    # -------------------------------------------------------- statistics ----
+    def participation_counts(self) -> np.ndarray:
+        return np.sum([lg.selected for lg in self.history], axis=0)
+
+    def energy_per_round(self) -> np.ndarray:
+        return np.array([lg.total_energy for lg in self.history])
+
+    def accuracy_curve(self) -> np.ndarray:
+        return np.array([lg.accuracy for lg in self.history])
+
+    def energy_to_accuracy(self, target: float) -> float | None:
+        cum = 0.0
+        for lg in self.history:
+            cum += lg.total_energy
+            if lg.accuracy >= target:
+                return cum
+        return None
+
+    def mean_gamma_selected(self) -> float:
+        vals = [g for lg in self.history for g in lg.gamma[lg.selected]]
+        return float(np.mean(vals)) if vals else 1.0
+
+    def min_bandwidth_selected(self) -> float:
+        vals = [b for lg in self.history for b in lg.bandwidth[lg.selected] if b > 0]
+        return float(np.min(vals)) if vals else self.ch_cfg.bandwidth_total

@@ -1,0 +1,61 @@
+"""Update-pytree utilities: flatten to a single fp32 vector and back.
+
+FairEnergy operates on the flattened local update u_i (L2 norm for the
+contribution score, top-k sparsification for compression), so the FL layer
+needs a stable pytree<->vector mapping.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class TreeSpec(NamedTuple):
+    treedef: object
+    shapes: tuple
+    sizes: tuple
+    dtypes: tuple
+
+
+def tree_spec(tree) -> TreeSpec:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return TreeSpec(treedef,
+                    tuple(l.shape for l in leaves),
+                    tuple(int(jnp.size(l)) for l in leaves),
+                    tuple(l.dtype for l in leaves))
+
+
+def flatten_update(tree) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
+
+
+def unflatten_update(vec: Array, spec: TreeSpec):
+    out, off = [], 0
+    for shape, size, dtype in zip(spec.shapes, spec.sizes, spec.dtypes):
+        out.append(vec[off:off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(spec.treedef, out)
+
+
+def update_l2_norm(tree) -> Array:
+    """||u||_2 without materializing the flat vector."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    return jnp.sqrt(sq)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda l: (l.astype(jnp.float32) * s).astype(l.dtype), tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x + y.astype(x.dtype), a, b)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)

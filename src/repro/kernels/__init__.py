@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+topk_sparsify   — block-local magnitude top-k (the paper's compression)
+score_norm      — fused sum-of-squares reduction (contribution score)
+flash_attention — block-tiled causal/SWA GQA attention
+"""

@@ -1,0 +1,36 @@
+"""Pallas TPU kernel: fused blockwise sum-of-squares reduction.
+
+One grid step per VMEM block; each step accumulates sum(x^2) for its block
+into a [nb]-shaped partials output (fp32). The final sqrt(sum(partials))
+happens in the jit'd wrapper (and, when the update is sharded, after a
+scalar psum across shards — see fl/collectives). Avoids materializing x^2
+in HBM: the square+reduce runs in VREGs on the VMEM-resident block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sq_sum_kernel(x_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[0] = jnp.sum(x * x)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def sq_sum_partials(vec: jnp.ndarray, *, block: int = 65536,
+                    interpret: bool = True) -> jnp.ndarray:
+    assert vec.ndim == 1 and vec.shape[0] % block == 0
+    nb = vec.shape[0] // block
+    rows = vec.reshape(nb, block)
+    return pl.pallas_call(
+        _sq_sum_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.float32),
+        interpret=interpret,
+    )(rows)

@@ -1,0 +1,6 @@
+"""Oracle: L2 norm of a flat update vector (contribution-score numerator)."""
+import jax.numpy as jnp
+
+
+def l2_norm_ref(vec: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sqrt(jnp.sum(jnp.square(vec.astype(jnp.float32))))

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: block-local magnitude top-k sparsification.
+
+TPU adaptation of gradient top-k (DESIGN.md §4.1): no sort. Each grid step
+owns one lane-aligned block resident in VMEM and finds the k-th largest
+magnitude by **bisection on the magnitude value** (40 fixed iterations —
+converges below fp32 resolution, so the kept set matches the exact-sort
+oracle for fp32 inputs), then resolves ties by index order with a cumsum.
+Everything is vector ops in VREGs; the MXU is not needed.
+
+Grid: one program per block. BlockSpec keeps blocks in VMEM; block size
+must be a multiple of 128 lanes (default 4096 = 32 sublanes x 128 lanes).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BISECT_ITERS = 40
+
+
+def _topk_block_kernel(x_ref, out_ref, *, k: int):
+    x = x_ref[...].astype(jnp.float32)
+    mag = jnp.abs(x)
+
+    hi0 = jnp.max(mag)
+    lo0 = jnp.zeros_like(hi0)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        count = jnp.sum(mag > mid)           # strictly-greater count
+        # too many kept -> raise threshold; else lower it
+        new_lo = jnp.where(count > k, mid, lo)
+        new_hi = jnp.where(count > k, hi, mid)
+        return new_lo, new_hi
+
+    lo, hi = jax.lax.fori_loop(0, _BISECT_ITERS, body, (lo0, hi0))
+    thresh = hi                               # count(mag > thresh) <= k
+    greater = mag > thresh
+    n_greater = jnp.sum(greater)
+    equal = mag >= lo                          # within-eps band = tie candidates
+    equal = equal & ~greater
+    fill = jnp.cumsum(equal.astype(jnp.int32)) <= (k - n_greater)
+    mask = greater | (equal & fill)
+    out_ref[...] = (x * mask.astype(jnp.float32)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def topk_sparsify_pallas(vec: jnp.ndarray, *, k: int, block: int = 4096,
+                         interpret: bool = True) -> jnp.ndarray:
+    """vec: [n] (n % block == 0). Keeps top-k magnitudes per block."""
+    assert vec.ndim == 1 and vec.shape[0] % block == 0, vec.shape
+    nb = vec.shape[0] // block
+    rows = vec.reshape(nb, block)
+    out = pl.pallas_call(
+        functools.partial(_topk_block_kernel, k=k),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), vec.dtype),
+        interpret=interpret,
+    )(rows)
+    return out.reshape(-1)

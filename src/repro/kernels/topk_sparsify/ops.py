@@ -1,0 +1,25 @@
+"""jit'd public wrapper around the topk_sparsify Pallas kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from .kernel import topk_sparsify_pallas
+
+# interpret=True executes the kernel body on CPU; on a real TPU runtime set
+# REPRO_PALLAS_INTERPRET=0 (ops read it once at import).
+import os
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def block_topk_sparsify(vec: jnp.ndarray, gamma: float, *, block: int = 4096
+                        ) -> tuple[jnp.ndarray, int]:
+    """Same contract as kernels.topk_sparsify.ref.block_topk_ref."""
+    n = vec.shape[0]
+    k = max(1, min(block, math.ceil(float(gamma) * block)))
+    nb = -(-n // block)
+    pad = nb * block - n
+    v = jnp.concatenate([vec, jnp.zeros((pad,), vec.dtype)]) if pad else vec
+    out = topk_sparsify_pallas(v, k=k, block=block, interpret=INTERPRET)
+    return out[:n], k

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for block-local magnitude top-k sparsification.
+
+Semantics (shared bit-for-bit with the Pallas kernel): the flat vector is
+split into fixed blocks; in each block exactly ``k = ceil(gamma*block)``
+coefficients are kept — those with the largest |x|, ties broken by index
+order (earlier index wins). Trailing padding (zeros) competes like any
+other value but the result is truncated back to the input length.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def _pad_to_blocks(vec: Array, block: int) -> tuple[Array, int]:
+    n = vec.shape[0]
+    nb = -(-n // block)
+    pad = nb * block - n
+    if pad:
+        vec = jnp.concatenate([vec, jnp.zeros((pad,), vec.dtype)])
+    return vec.reshape(nb, block), n
+
+
+def block_topk_ref(vec: Array, gamma: float, *, block: int = 4096) -> tuple[Array, int]:
+    """Returns (masked dense vector, kept-per-block k)."""
+    assert vec.ndim == 1
+    k = max(1, min(block, math.ceil(float(gamma) * block)))
+    rows, n = _pad_to_blocks(vec, block)
+    mag = jnp.abs(rows.astype(jnp.float32))
+    # k-th largest per row
+    kth = jnp.sort(mag, axis=1)[:, block - k]                    # [nb]
+    greater = mag > kth[:, None]
+    n_greater = greater.sum(axis=1, keepdims=True)
+    equal = mag == kth[:, None]
+    fill = jnp.cumsum(equal.astype(jnp.int32), axis=1) <= (k - n_greater)
+    mask = greater | (equal & fill)
+    out = (rows * mask.astype(rows.dtype)).reshape(-1)[:n]
+    return out, k
+
+
+def block_topk_mask_ref(vec: Array, gamma: float, *, block: int = 4096) -> Array:
+    out, _ = block_topk_ref(vec, gamma, block=block)
+    return out != 0

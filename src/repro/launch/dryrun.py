@@ -1,0 +1,253 @@
+import os
+# --xla_disable_hlo_passes=while-loop-invariant-code-motion: the CPU pipeline
+# hoists an f32 copy of the whole remat stash out of the backward loop
+# (convert+slice reorder, measured +11 GiB/dev on a 1.1B model); the pass is
+# disabled for the dry-run so memory_analysis reflects the TPU-like layout.
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_disable_hlo_passes=while-loop-invariant-code-motion"
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+NOTE: the two os.environ lines above MUST run before any other import —
+jax locks the device count on first init.
+
+For every (architecture x input shape) the step function is lowered and
+COMPILED against the production mesh — 16x16 ("data","model") single-pod
+and 2x16x16 ("pod","data","model") multi-pod — from ShapeDtypeStruct
+stand-ins (no allocation). Outputs memory_analysis / cost_analysis plus a
+parse of the partitioned HLO's collectives into a JSON artifact consumed by
+benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import batch_axes, cache_specs, data_specs, param_specs, to_named
+from repro.sharding.act import activation_rules
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\]\S*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?!-done)(?:-start)?\(", re.I)
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by collectives, keyed by op kind."""
+    out: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_sig, kind = m.groups()
+        kind = kind.lower()
+        b = _shape_bytes(result_sig)
+        out[kind] = out.get(kind, 0.0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": float(sum(out.values()))}
+
+
+def auto_microbatches(cfg, shape, mesh, *, stash_budget: float = 2**30) -> int:
+    """Gradient-accumulation factor M: smallest power of two such that the
+    per-device remat stash (n_layers x B/shards x S x d_model x 2B / seq_tp)
+    fits the budget and B/M still divides the batch shards.
+    REPRO_FORCE_MICRO overrides (the scan-corrected cost fit needs a fixed
+    M across layer-count variants)."""
+    if os.environ.get("REPRO_FORCE_MICRO"):
+        return int(os.environ["REPRO_FORCE_MICRO"])
+    dshards = 1
+    for a in ("pod", "data"):
+        n = mesh.shape.get(a, 1)
+        if shape.global_batch % (dshards * n) == 0:
+            dshards *= n
+    seq_shards = mesh.shape.get("model", 1)
+    stash = (cfg.n_layers * (shape.global_batch / dshards) * shape.seq_len
+             * max(cfg.d_model, 1) * 2 / seq_shards)
+    # MoE capacity dispatch inflates transient activations by ~k*cf copies
+    # of the token stream at full d_model — budget those too
+    transient = 0.0
+    if cfg.n_experts:
+        transient = (shape.global_batch / dshards * shape.seq_len
+                     * cfg.n_experts_per_tok * cfg.capacity_factor
+                     * cfg.d_model * 2)
+    m = 1
+    while ((stash / m > stash_budget or transient / m > float(os.environ.get('REPRO_MOE_TRANSIENT_GB', 0.5)) * 2**30)
+           and (shape.global_batch // m) % dshards == 0
+           and shape.global_batch // m > dshards and m < 32):
+        m *= 2
+    return m
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True, lr: float = 3e-4,
+               donate: bool = True) -> dict:
+    dryrun_one.last_micro = 1
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    dp_only = os.environ.get("REPRO_DP_ONLY") == "1"
+    p_sds = steps_mod.params_shape(cfg)
+    pspecs = param_specs(p_sds, mesh, tp="__no_tp__" if dp_only else "model")
+
+    if shape.kind == "train":
+        moment_dtype = jnp.bfloat16 if os.environ.get("REPRO_OPT_DTYPE") == "bf16" \
+            else jnp.float32
+        o_sds = steps_mod.opt_shape(p_sds, moment_dtype)
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        batch = steps_mod.input_specs(arch, shape_name, cfg)
+        bspecs = data_specs(batch, mesh, shape.global_batch)
+        micro = auto_microbatches(cfg, shape, mesh)
+        dryrun_one.last_micro = micro
+        fn = steps_mod.build_train_step(cfg, lr=lr, microbatches=micro)
+        in_shardings = (pspecs, ospecs, bspecs)
+        args = (p_sds, o_sds, batch)
+        donate_argnums = (0, 1) if donate else ()
+    elif shape.kind == "prefill":
+        batch = steps_mod.input_specs(arch, shape_name, cfg)
+        bspecs = data_specs(batch, mesh, shape.global_batch)
+        fn = steps_mod.build_prefill_step(cfg, shape)
+        in_shardings = (pspecs, bspecs)
+        args = (p_sds, batch)
+        donate_argnums = ()
+    else:  # decode
+        spec = steps_mod.input_specs(arch, shape_name, cfg)
+        cspecs = cache_specs(spec["cache"], mesh, shape.global_batch)
+        tspec = data_specs(spec["token"], mesh, shape.global_batch)
+        fn = steps_mod.build_serve_step(cfg)
+        in_shardings = (pspecs, cspecs, tspec, P())
+        args = (p_sds, spec["cache"], spec["token"], spec["pos"])
+        donate_argnums = (1,) if donate else ()
+
+    in_shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), in_shardings,
+        is_leaf=lambda x: isinstance(x, P))
+    ba = batch_axes(mesh, shape.global_batch, include_model=dp_only)
+    vocab_ax = None if dp_only else (
+        "model" if cfg.vocab_size % mesh.shape.get("model", 1) == 0 else None)
+    # sequence-parallel residual stream for train: measured strictly better
+    # than replicated activations at every d_model (§Perf-2 — AG+RS replaces
+    # all-reduce AND divides the stash); disable only via REPRO_NO_SEQTP=1.
+    seq_tp = "model" if (shape.kind == "train"
+                         and os.environ.get("REPRO_NO_SEQTP") != "1") else None
+    if dp_only:
+        seq_tp = None
+    with mesh, activation_rules(mesh=mesh, batch=ba, vocab=vocab_ax,
+                                heads=None if dp_only else "model",
+                                ff=None if dp_only else "model",
+                                kv_seq="data", seq_tp=seq_tp):
+        jitted = jax.jit(fn, in_shardings=in_shardings,
+                         donate_argnums=donate_argnums)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    n_dev = mesh.size
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "microbatches": getattr(dryrun_one, "last_micro", 1) if shape.kind == "train" else 1,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "kind": shape.kind,
+        "compile_s": round(time.time() - t0, 1),
+        "flops_per_device": float(cost.get("flops", -1)) if cost else None,
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1)) if cost else None,
+        "collectives": coll,
+    }
+    if mem is not None:
+        result["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_per_device": int(mem.argument_size_in_bytes
+                                   + mem.output_size_in_bytes
+                                   + mem.temp_size_in_bytes
+                                   - mem.alias_size_in_bytes),
+        }
+    if verbose:
+        memline = (f"peak/dev={result['memory']['peak_per_device']/2**30:.2f}GiB"
+                   if "memory" in result else "mem=n/a")
+        print(f"[dryrun] {arch:20s} {shape_name:12s} {result['mesh']:8s} "
+              f"ok compile={result['compile_s']}s {memline} "
+              f"flops/dev={result['flops_per_device']:.3e} "
+              f"coll={coll['total_bytes']/2**20:.1f}MiB")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="sweep all arch x shape")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                combos.append((a, s))
+    else:
+        combos.append((args.arch, args.shape))
+
+    meshes = [False, True] if (args.both_meshes or (args.all and not args.multi_pod)) \
+        else [args.multi_pod]
+
+    failures = []
+    for a, s in combos:
+        for mp in meshes:
+            try:
+                res = dryrun_one(a, s, multi_pod=mp)
+                tag = f"{a}__{s}__{'multi' if mp else 'single'}.json"
+                with open(os.path.join(args.out, tag.replace("/", "_")), "w") as f:
+                    json.dump(res, f, indent=1)
+            except Exception as e:  # noqa: BLE001
+                failures.append((a, s, mp, repr(e)[:200]))
+                print(f"[dryrun] FAIL {a} {s} multi={mp}: {e}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

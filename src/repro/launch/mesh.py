@@ -1,0 +1,18 @@
+"""Production mesh construction (TPU v5e pods; placeholder host devices in
+the dry-run). A FUNCTION, not a module constant — importing this module
+must never touch jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-process debug mesh over whatever devices exist."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,159 @@
+"""Model-agnostic step builders + ShapeDtypeStruct input specs.
+
+These are what both the real drivers (train.py / serve.py) and the
+multi-pod dry-run (dryrun.py) lower:
+
+  train_step  (params, opt_state, batch) -> (params, opt_state, loss)
+  prefill_step(params, batch)            -> (last logits, decode cache)
+  serve_step  (params, cache, token, pos)-> (logits, new cache)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs for every model
+input — shardable stand-ins, no device allocation (the dry-run pattern).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.models import cnn, encdec, transformer as tfm
+from repro.models.module import dtype_of
+from repro.optim import adamw_init, adamw_update
+
+
+# --------------------------------------------------------------- helpers ----
+def cache_len_for(cfg, shape) -> int:
+    """Decode KV-cache length. Sliding-window archs cap at their window;
+    full-attention archs cap at ``long_context_window`` for long_500k (the
+    explicitly-labeled sub-quadratic SWA variant — DESIGN.md §3)."""
+    if cfg.sliding_window:
+        return min(shape.seq_len, cfg.sliding_window)
+    if shape.seq_len > 65536:
+        return cfg.long_context_window
+    return shape.seq_len
+
+
+def loss_for(cfg):
+    if cfg.family == "cnn":
+        return functools.partial(cnn.cnn_loss, cfg=cfg)
+    if cfg.family == "audio":
+        return lambda p, b: encdec.encdec_loss(p, b, cfg)
+    return lambda p, b: tfm.lm_loss(p, b, cfg)
+
+
+def init_for(cfg):
+    if cfg.family == "cnn":
+        return functools.partial(cnn.init_cnn, cfg=cfg)
+    if cfg.family == "audio":
+        return lambda key: encdec.init_encdec(key, cfg)
+    return lambda key: tfm.init_lm(key, cfg)
+
+
+def params_shape(cfg):
+    return jax.eval_shape(init_for(cfg), jax.random.PRNGKey(0))
+
+
+# ----------------------------------------------------------- input specs ----
+def input_specs(arch: str, shape_name: str, cfg=None) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function's data arguments."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    dt = dtype_of(cfg)
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            return {"frames": sds((B, cfg.n_audio_frames, cfg.d_model), dt),
+                    "tokens": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            return {"tokens": sds((B, S - cfg.n_vision_tokens), i32),
+                    "extra_embeds": sds((B, cfg.n_vision_tokens, cfg.d_model), dt)}
+        return {"tokens": sds((B, S), i32)}
+
+    # decode: one token against a seq_len-deep cache
+    cl = cache_len_for(cfg, shape)
+    if cfg.family == "audio":
+        p_sds = params_shape(cfg)
+        enc_sds = sds((B, cfg.n_audio_frames, cfg.d_model), dt)
+        cache = jax.eval_shape(
+            lambda p, e: encdec.init_encdec_cache(p, e, cfg, B, cl), p_sds, enc_sds)
+    else:
+        cache = jax.eval_shape(lambda: tfm.init_lm_cache(cfg, B, cl))
+    return {"token": sds((B, 1), i32), "cache": cache,
+            "pos": sds((), i32)}
+
+
+# ------------------------------------------------------------ step fns ----
+def build_train_step(cfg, *, lr: float = 3e-4, microbatches: int = 1):
+    """AdamW train step. With microbatches > 1, gradient accumulation over
+    a ``lax.scan`` of batch slices — divides the remat stash and transient
+    activation peak by M at no extra communication (grads are accumulated
+    locally, fp32, sharded like params)."""
+    loss_fn = loss_for(cfg)
+
+    if microbatches == 1:
+        def train_step(params, opt_state, batch):
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            params, opt_state = adamw_update(grads, opt_state, params, lr)
+            return params, opt_state, loss
+        return train_step
+
+    M = microbatches
+
+    def train_step(params, opt_state, batch):
+        mb = jax.tree_util.tree_map(
+            lambda t: t.reshape((M, t.shape[0] // M) + t.shape[1:]), batch)
+
+        def mstep(carry, b):
+            g_acc, l_acc = carry
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, b)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, x: a + x.astype(a.dtype), g_acc, g)
+            return (g_acc, l_acc + loss), None
+
+        g0 = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), _ = jax.lax.scan(mstep, (g0, jnp.float32(0)), mb)
+        grads = jax.tree_util.tree_map(lambda g: g / M, grads)
+        params, opt_state = adamw_update(grads, opt_state, params, lr)
+        return params, opt_state, loss / M
+
+    return train_step
+
+
+def build_prefill_step(cfg, shape):
+    cl = cache_len_for(cfg, shape)
+
+    if cfg.family == "audio":
+        def prefill_step(params, batch):
+            enc_out = encdec.encode(params, batch["frames"], cfg)
+            logits = encdec.decode_train(params, batch["tokens"], enc_out, cfg,
+                                         last_only=True)
+            cache = encdec.init_encdec_cache(params, enc_out, cfg,
+                                             batch["tokens"].shape[0], cl)
+            return logits, cache
+        return prefill_step
+
+    def prefill_step(params, batch):
+        return tfm.lm_prefill(params, batch["tokens"], cfg, cache_len=cl,
+                              extra_embeds=batch.get("extra_embeds"))
+    return prefill_step
+
+
+def build_serve_step(cfg):
+    if cfg.family == "audio":
+        def serve_step(params, cache, token, pos):
+            return encdec.encdec_decode(params, token, cache, pos, cfg)
+        return serve_step
+
+    def serve_step(params, cache, token, pos):
+        return tfm.lm_decode(params, token, cache, pos, cfg)
+    return serve_step
+
+
+def opt_shape(p_sds, moment_dtype=jnp.float32):
+    return jax.eval_shape(functools.partial(adamw_init, moment_dtype=moment_dtype), p_sds)

@@ -1,0 +1,3 @@
+"""Pure-JAX model zoo. See transformer.py / encdec.py / cnn.py."""
+from . import attention, cnn, encdec, layers, module, moe, rwkv, ssm, transformer  # noqa: F401
+from .module import param_count  # noqa: F401

@@ -1,0 +1,333 @@
+"""GQA attention: RoPE, optional QKV bias, causal / sliding-window masks.
+
+Three execution paths:
+
+* ``attention_forward`` — train/prefill. For short sequences a direct
+  softmax(QK^T)V; for long sequences a chunked online-softmax (flash-style)
+  double ``lax.scan`` so peak memory is O(q_chunk x kv_chunk), matching the
+  Pallas flash kernel's semantics (kernels/flash_attention is the TPU
+  version of the same algorithm).
+* ``attention_decode`` — one new token against a KV cache. The cache is a
+  ring buffer of ``cache_len`` slots with per-slot absolute positions, which
+  natively supports sliding-window attention (cache_len == window).
+* cross-attention (whisper) — ``kv_x`` overrides the self keys/values.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope
+from .module import Params, dense, dense_init
+
+_FLASH_THRESHOLD = 2048  # use chunked path for seqs at/above this
+_Q_CHUNK = 1024
+_KV_CHUNK = 1024
+NEG_INF = -1e30
+
+
+def _chunk_of(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target (chunk size for the flash
+    scans; handles non-power-of-two lengths like whisper's 1500 frames)."""
+    c = min(target, S)
+    while c > 1 and S % c:
+        c -= 1
+    return c
+
+
+def attention_init(key, cfg, *, d_model: int | None = None, cross: bool = False) -> Params:
+    d_model = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, cfg.n_heads * hd, bias=cfg.qkv_bias),
+        "wk": dense_init(kk, d_model, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": dense_init(kv, d_model, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": dense_init(ko, cfg.n_heads * hd, d_model),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(*x.shape[:-1], n_heads, head_dim)
+
+
+def _direct_attention(q, k, v, *, scale, causal, window, q_positions, kv_positions):
+    """q: [B,Sq,KV,G,D]; k/v: [B,Skv,KV,D]."""
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= kv_positions[None, :] <= q_positions[:, None]
+    if window is not None:
+        mask &= q_positions[:, None] - kv_positions[None, :] < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out
+
+
+def _block_mask(qpos, kpos, causal, window):
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, *, scale, causal, window):
+    """Returns (out [B,Sq,KV,G,D], lse [B,KV,G,Sq]). Positions = arange."""
+    B, Sq, KV, G, D = q.shape
+    Skv = k.shape[1]
+    qc = _chunk_of(Sq, _Q_CHUNK)
+    kc = _chunk_of(Skv, _KV_CHUNK)
+    nq, nk = Sq // qc, Skv // kc
+
+    qr = q.reshape(B, nq, qc, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kr = k.reshape(B, nk, kc, KV, D).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(B, nk, kc, KV, D).transpose(1, 0, 2, 3, 4)
+    def q_chunk_step(_, qi):
+        q_blk, iq = qi  # [B,qc,KV,G,D], scalar step index
+        qpos = iq * qc + jax.lax.iota(jnp.int32, qc)
+
+        def kv_chunk_step(carry, ki):
+            m, l, acc = carry
+            k_blk, v_blk, ik = ki
+            kpos = ik * kc + jax.lax.iota(jnp.int32, kc)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            s = jnp.where(_block_mask(qpos, kpos, causal, window)[None, None, None],
+                          s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        acc0 = jnp.zeros((B, KV, G, qc, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_chunk_step, (m0, l0, acc0),
+                                      (kr, vr, jnp.arange(nk)))
+        l_safe = jnp.maximum(l, 1e-30)
+        out = acc / l_safe[..., None]                        # [B,KV,G,qc,D]
+        lse = m + jnp.log(l_safe)                            # [B,KV,G,qc]
+        return None, (out.transpose(0, 3, 1, 2, 4), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_chunk_step, None, (qr, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, D)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, KV, G, Sq)
+    return out.astype(v.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _flash_core(scale, causal, window, q, k, v):
+    out, _ = _flash_fwd_impl(q, k, v, scale=scale, causal=causal, window=window)
+    return out
+
+
+def _flash_core_fwd(scale, causal, window, q, k, v):
+    out, lse = _flash_fwd_impl(q, k, v, scale=scale, causal=causal, window=window)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(scale, causal, window, res, dout):
+    """Blockwise recompute backward (FlashAttention-2 style): saves only
+    (q,k,v,out,lse); peak extra memory is O(qc*kc) per step plus fp32
+    dK/dV accumulators."""
+    q, k, v, out, lse = res
+    B, Sq, KV, G, D = q.shape
+    Skv = k.shape[1]
+    qc = _chunk_of(Sq, _Q_CHUNK)
+    kc = _chunk_of(Skv, _KV_CHUNK)
+    nq, nk = Sq // qc, Skv // kc
+
+    # delta_i = rowsum(dO * O)  [B,KV,G,Sq]
+    delta = jnp.einsum("bqkgd,bqkgd->bkgq", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))
+
+    qr = q.reshape(B, nq, qc, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+    dor = dout.reshape(B, nq, qc, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+    lser = lse.reshape(B, KV, G, nq, qc).transpose(3, 0, 1, 2, 4)   # [nq,B,KV,G,qc]
+    deltar = delta.reshape(B, KV, G, nq, qc).transpose(3, 0, 1, 2, 4)
+    kr = k.reshape(B, nk, kc, KV, D).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(B, nk, kc, KV, D).transpose(1, 0, 2, 3, 4)
+    def q_step(carry, qi):
+        dk_acc, dv_acc = carry                               # [nk,B,kc,KV,D] fp32
+        q_blk, do_blk, lse_blk, dl_blk, iq = qi
+        qpos = iq * qc + jax.lax.iota(jnp.int32, qc)
+
+        def kv_step(inner, ki):
+            dq_acc = inner                                   # [B,qc,KV,G,D] fp32
+            k_blk, v_blk, j = ki
+            kpos = j * kc + jax.lax.iota(jnp.int32, kc)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            mask = _block_mask(qpos, kpos, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_blk[..., None])              # [B,KV,G,qc,kc]
+            dv_j = jnp.einsum("bkgqs,bqkgd->bskd", p, do_blk.astype(jnp.float32))
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", do_blk.astype(jnp.float32),
+                            v_blk.astype(jnp.float32))
+            ds = p * (dp - dl_blk[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bkgqs,bskd->bqkgd", ds,
+                                         k_blk.astype(jnp.float32))
+            dk_j = jnp.einsum("bkgqs,bqkgd->bskd", ds, q_blk.astype(jnp.float32))
+            return dq_acc, (dk_j, dv_j)
+
+        dq0 = jnp.zeros((B, qc, KV, G, D), jnp.float32)
+        dq, (dk_js, dv_js) = jax.lax.scan(
+            kv_step, dq0, (kr, vr, jnp.arange(nk)))
+        return (dk_acc + dk_js, dv_acc + dv_js), dq
+
+    dk0 = jnp.zeros((nk, B, kc, KV, D), jnp.float32)
+    dv0 = jnp.zeros((nk, B, kc, KV, D), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(q_step, (dk0, dv0),
+                                 (qr, dor, lser, deltar, jnp.arange(nq)))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, D).astype(q.dtype)
+    dk = dk.transpose(1, 0, 2, 3, 4).reshape(B, Skv, KV, D).astype(k.dtype)
+    dv = dv.transpose(1, 0, 2, 3, 4).reshape(B, Skv, KV, D).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def _flash_attention_jnp(q, k, v, *, scale, causal, window, q_positions, kv_positions):
+    """Chunked online-softmax attention with a flash-style custom VJP.
+    Assumes positions are arange (true for all training/prefill callers)."""
+    window_static = int(window) if window is not None else None
+    return _flash_core(float(scale), bool(causal), window_static, q, k, v)
+
+
+def attention_forward(params: Params, x: jnp.ndarray, cfg, *,
+                      causal: bool = True,
+                      window: Optional[int] = None,
+                      positions: Optional[jnp.ndarray] = None,
+                      kv_x: Optional[jnp.ndarray] = None,
+                      use_rope: bool = True,
+                      return_kv: bool = False):
+    """x: [B, Sq, d]; kv_x (cross-attention source): [B, Skv, d].
+    With return_kv=True also returns the post-RoPE (k, v) for prefill
+    cache construction."""
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    B, Sq = x.shape[0], x.shape[1]
+    src = kv_x if kv_x is not None else x
+    Skv = src.shape[1]
+
+    q = _split_heads(dense(params["wq"], x), H, hd)
+    k = _split_heads(dense(params["wk"], src), KV, hd)
+    v = _split_heads(dense(params["wv"], src), KV, hd)
+
+    q_positions = positions if positions is not None else jnp.arange(Sq)
+    kv_positions = jnp.arange(Skv) if kv_x is not None or positions is None else positions
+    if use_rope:
+        q = apply_rope(q, q_positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+
+    q = q.reshape(B, Sq, KV, G, hd)
+    scale = 1.0 / float(hd) ** 0.5
+    use_flash = (max(Sq, Skv) >= _FLASH_THRESHOLD
+                 and _chunk_of(Sq, _Q_CHUNK) > 1 and _chunk_of(Skv, _KV_CHUNK) > 1)
+    fn = _flash_attention_jnp if use_flash else _direct_attention
+    out = fn(q, k, v, scale=scale, causal=causal, window=window,
+             q_positions=q_positions, kv_positions=kv_positions)
+    out = out.reshape(B, Sq, H * hd).astype(x.dtype)
+    y = dense(params["wo"], out)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def fill_kv_cache(k: jnp.ndarray, v: jnp.ndarray, cache_len: int, dtype) -> Params:
+    """Build a decode-ready ring cache from prefill K/V ([B,S,KV,hd]).
+    Keeps the last ``cache_len`` positions, placed at slot = pos % cache_len
+    so decode's ring indexing continues seamlessly."""
+    S = k.shape[1]
+    keep = min(S, cache_len)
+    pos = jnp.arange(S - keep, S)
+    slots = jnp.mod(pos, cache_len)
+    kk = jnp.zeros((k.shape[0], cache_len) + k.shape[2:], dtype)
+    vv = jnp.zeros_like(kk)
+    kk = kk.at[:, slots].set(k[:, S - keep:].astype(dtype))
+    vv = vv.at[:, slots].set(v[:, S - keep:].astype(dtype))
+    slot_pos = jnp.full((cache_len,), -1, jnp.int32).at[slots].set(pos.astype(jnp.int32))
+    return {"k": kk, "v": vv, "slot_pos": slot_pos}
+
+
+# ------------------------------------------------------------- KV cache ----
+def make_kv_cache(cfg, batch: int, cache_len: int, dtype) -> Params:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        "slot_pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def attention_decode(params: Params, x: jnp.ndarray, cache: Params,
+                     pos: jnp.ndarray, cfg, *,
+                     window: Optional[int] = None,
+                     use_rope: bool = True) -> tuple[jnp.ndarray, Params]:
+    """One-token decode. x: [B, 1, d]; pos: scalar int32 (synced batch)."""
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    B = x.shape[0]
+    W = cache["k"].shape[1]
+
+    q = _split_heads(dense(params["wq"], x), H, hd)          # [B,1,H,D]
+    k = _split_heads(dense(params["wk"], x), KV, hd)         # [B,1,KV,D]
+    v = _split_heads(dense(params["wv"], x), KV, hd)
+    pos_arr = jnp.reshape(pos, (1,))
+    if use_rope:
+        q = apply_rope(q, pos_arr, cfg.rope_theta)
+        k = apply_rope(k, pos_arr, cfg.rope_theta)           # absolute pos at write
+
+    slot = jnp.mod(pos, W)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
+    new_slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], pos_arr.astype(jnp.int32), slot, 0)
+
+    qg = q.reshape(B, 1, KV, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        new_k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    valid = (new_slot_pos >= 0) & (new_slot_pos <= pos)
+    if window is not None:
+        valid &= pos - new_slot_pos < window
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs.astype(new_v.dtype), new_v)
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    y = dense(params["wo"], out)
+    return y, {"k": new_k, "v": new_v, "slot_pos": new_slot_pos}
+
+
+# ------------------------------------------------- cross-attention cache ----
+def make_cross_cache(params: Params, enc_out: jnp.ndarray, cfg) -> Params:
+    """Precompute encoder K/V once for decode (whisper cross-attention)."""
+    hd = cfg.resolved_head_dim
+    k = _split_heads(dense(params["wk"], enc_out), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(params["wv"], enc_out), cfg.n_kv_heads, hd)
+    return {"k": k, "v": v}
+
+
+def cross_attention_decode(params: Params, x: jnp.ndarray, cross: Params, cfg) -> jnp.ndarray:
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    B = x.shape[0]
+    q = _split_heads(dense(params["wq"], x), H, hd).reshape(B, 1, KV, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgs", q.astype(jnp.float32),
+                        cross["k"].astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs.astype(cross["v"].dtype), cross["v"])
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    return dense(params["wo"], out)

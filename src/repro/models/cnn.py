@@ -1,0 +1,67 @@
+"""The paper's FMNIST CNN (~2M parameters, Sec. VII).
+
+conv3x3(32) -> relu -> maxpool2 -> conv3x3(64) -> relu -> maxpool2 ->
+flatten -> dense(512) -> relu -> dense(10).  ~1.7M params ("approximately
+2 million" in the paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .module import Params, dense, dense_init
+
+Array = jnp.ndarray
+
+
+def init_cnn(key, cfg) -> Params:
+    chans = cfg.cnn_channels or (32, 64)
+    h, w, c_in = cfg.input_hw
+    keys = jax.random.split(key, len(chans) + 2)
+    p: Params = {}
+    c_prev = c_in
+    for i, c in enumerate(chans):
+        fan_in = 9 * c_prev
+        p[f"conv{i}"] = {
+            "w": jax.random.normal(keys[i], (3, 3, c_prev, c), jnp.float32) / jnp.sqrt(fan_in),
+            "b": jnp.zeros((c,), jnp.float32),
+        }
+        c_prev = c
+        h, w = h // 2, w // 2
+    flat = h * w * c_prev
+    p["fc1"] = dense_init(keys[-2], flat, cfg.cnn_dense or 512, bias=True)
+    p["fc2"] = dense_init(keys[-1], cfg.cnn_dense or 512, cfg.n_classes, bias=True)
+    return p
+
+
+def _conv(p: Params, x: Array) -> Array:
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"].astype(x.dtype)
+
+
+def _maxpool2(x: Array) -> Array:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_forward(params: Params, images: Array, cfg) -> Array:
+    """images: [B, H, W, C] float -> logits [B, n_classes]."""
+    x = images
+    i = 0
+    while f"conv{i}" in params:
+        x = _maxpool2(jax.nn.relu(_conv(params[f"conv{i}"], x)))
+        i += 1
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(dense(params["fc1"], x))
+    return dense(params["fc2"], x)
+
+
+def cnn_loss(params: Params, batch: dict, cfg) -> tuple[Array, dict]:
+    logits = cnn_forward(params, batch["images"], cfg)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"xent": loss, "acc": acc}

@@ -1,0 +1,146 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor
+is a STUB: ``input_specs`` provides precomputed frame embeddings
+[B, n_audio_frames, d_model]. We implement the transformer backbone:
+bidirectional encoder, causal decoder with cross-attention, pre-LayerNorm,
+GELU MLPs, sinusoidal (encoder) / learned (decoder) positions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .layers import gelu_mlp, gelu_mlp_init, layernorm, layernorm_init, sinusoidal_positions
+from .module import (Params, dense_init, dtype_of, embed, embed_init,
+                     stack_init, unembed, scan_layers)
+from repro.sharding.act import constrain
+
+Array = jnp.ndarray
+
+
+def _enc_layer_init(key, cfg) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": layernorm_init(cfg.d_model), "attn": attn.attention_init(k1, cfg),
+            "ln2": layernorm_init(cfg.d_model), "mlp": gelu_mlp_init(k2, cfg.d_model, cfg.d_ff)}
+
+
+def _dec_layer_init(key, cfg) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": layernorm_init(cfg.d_model), "self_attn": attn.attention_init(k1, cfg),
+            "ln2": layernorm_init(cfg.d_model), "cross_attn": attn.attention_init(k2, cfg),
+            "ln3": layernorm_init(cfg.d_model), "mlp": gelu_mlp_init(k3, cfg.d_model, cfg.d_ff)}
+
+
+def init_encdec(key, cfg) -> Params:
+    ke, kd, kt, kp = jax.random.split(key, 4)
+    n_enc = cfg.n_encoder_layers or cfg.n_layers
+    return {
+        "enc_layers": stack_init(_enc_layer_init, ke, n_enc, cfg),
+        "enc_ln": layernorm_init(cfg.d_model),
+        "dec_layers": stack_init(_dec_layer_init, kd, cfg.n_layers, cfg),
+        "dec_ln": layernorm_init(cfg.d_model),
+        "tok_embed": embed_init(kt, cfg.vocab_size, cfg.d_model),
+        "pos_embed": jax.random.normal(kp, (cfg.max_target_len, cfg.d_model),
+                                       jnp.float32) * 0.01,
+    }
+
+
+def encode(params: Params, frames: Array, cfg) -> Array:
+    """frames: [B, F, d_model] stub embeddings -> encoder states."""
+    dt = dtype_of(cfg)
+    x = frames.astype(dt) + sinusoidal_positions(frames.shape[1], cfg.d_model).astype(dt)
+    x = constrain(x, "batch", None, None)
+
+    def body(h, layer):
+        h = constrain(h, "batch", "seq_tp", None)
+        h = h + attn.attention_forward(layer["attn"], layernorm(layer["ln1"], h, cfg.norm_eps),
+                                       cfg, causal=False, use_rope=False)
+        h = h + gelu_mlp(layer["mlp"], layernorm(layer["ln2"], h, cfg.norm_eps))
+        return h, None
+
+    x, _ = scan_layers(body, x, params["enc_layers"], cfg, ckpt=cfg.remat)
+    return layernorm(params["enc_ln"], x, cfg.norm_eps)
+
+
+def _dec_positions(params, positions, dt):
+    table = params["pos_embed"]
+    idx = jnp.mod(positions, table.shape[0])   # wrap beyond max_target_len (shape exercise)
+    return table[idx].astype(dt)
+
+
+def decode_train(params: Params, tokens: Array, enc_out: Array, cfg, *,
+                 window: Optional[int] = None, last_only: bool = False) -> Array:
+    """Teacher-forced decoder: tokens [B, T] -> logits [B, T, V]."""
+    dt = dtype_of(cfg)
+    T = tokens.shape[1]
+    pos = jnp.arange(T)
+    x = embed(params["tok_embed"], tokens, dt) + _dec_positions(params, pos, dt)[None]
+    x = constrain(x, "batch", None, None)
+
+    def body(h, layer):
+        h = constrain(h, "batch", "seq_tp", None)
+        h = h + attn.attention_forward(layer["self_attn"],
+                                       layernorm(layer["ln1"], h, cfg.norm_eps),
+                                       cfg, causal=True, window=window, use_rope=False)
+        h = h + attn.attention_forward(layer["cross_attn"],
+                                       layernorm(layer["ln2"], h, cfg.norm_eps),
+                                       cfg, causal=False, use_rope=False, kv_x=enc_out)
+        h = h + gelu_mlp(layer["mlp"], layernorm(layer["ln3"], h, cfg.norm_eps))
+        return h, None
+
+    x, _ = scan_layers(body, x, params["dec_layers"], cfg, ckpt=cfg.remat)
+    if last_only:
+        x = x[:, -1:]
+    x = layernorm(params["dec_ln"], x, cfg.norm_eps)
+    return unembed(params["tok_embed"], x)
+
+
+def encdec_loss(params: Params, batch: dict, cfg) -> tuple[Array, dict]:
+    enc_out = encode(params, batch["frames"], cfg)
+    logits = decode_train(params, batch["tokens"], enc_out, cfg)
+    labels = batch["tokens"][:, 1:]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"xent": loss}
+
+
+# ---------------------------------------------------------------- decode ----
+def init_encdec_cache(params: Params, enc_out: Array, cfg, batch: int,
+                      cache_len: int) -> Params:
+    """Self-attention ring caches + precomputed cross K/V per layer."""
+    dt = dtype_of(cfg)
+    n_dec = cfg.n_layers
+
+    kv = attn.make_kv_cache(cfg, batch, cache_len, dt)
+    self_cache = jax.tree_util.tree_map(lambda t: jnp.broadcast_to(t, (n_dec,) + t.shape), kv)
+    cross = jax.vmap(lambda layer: attn.make_cross_cache(layer, enc_out, cfg),
+                     in_axes=(0,))(params["dec_layers"]["cross_attn"])
+    return {"self": self_cache, "cross": cross}
+
+
+def encdec_decode(params: Params, token: Array, cache: Params, pos: Array, cfg
+                  ) -> tuple[Array, Params]:
+    dt = dtype_of(cfg)
+    x = embed(params["tok_embed"], token, dt) + _dec_positions(params, jnp.reshape(pos, (1,)), dt)[None]
+
+    def body(h, xs):
+        layer, kv, cross = xs
+        y, kv2 = attn.attention_decode(layer["self_attn"],
+                                       layernorm(layer["ln1"], h, cfg.norm_eps),
+                                       kv, pos, cfg, use_rope=False)
+        h = h + y
+        h = h + attn.cross_attention_decode(layer["cross_attn"],
+                                            layernorm(layer["ln2"], h, cfg.norm_eps),
+                                            cross, cfg)
+        h = h + gelu_mlp(layer["mlp"], layernorm(layer["ln3"], h, cfg.norm_eps))
+        return h, kv2
+
+    x, new_self = scan_layers(body, x, (params["dec_layers"], cache["self"], cache["cross"]), cfg)
+    x = layernorm(params["dec_ln"], x, cfg.norm_eps)
+    return unembed(params["tok_embed"], x), {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,92 @@
+"""Shared layers: norms, RoPE, MLPs, positional embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .module import Params, dense, dense_init
+
+
+# ---------------------------------------------------------------- norms ----
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+def groupnorm(x: jnp.ndarray, n_groups: int, eps: float = 1e-5) -> jnp.ndarray:
+    """Per-head group norm used by RWKV6 output (no affine)."""
+    shape = x.shape
+    xf = x.astype(jnp.float32).reshape(*shape[:-1], n_groups, shape[-1] // n_groups)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.reshape(shape).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE ----
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # [hd/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                        # [..., seq, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ----------------------------------------------------------------- MLPs ----
+def swiglu_init(key, d_model: int, d_ff: int) -> Params:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(kg, d_model, d_ff),
+        "up": dense_init(ku, d_model, d_ff),
+        "down": dense_init(kd, d_ff, d_model),
+    }
+
+
+def swiglu(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return dense(params["down"], jax.nn.silu(dense(params["gate"], x)) * dense(params["up"], x))
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, *, bias: bool = True) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"fc1": dense_init(k1, d_model, d_ff, bias=bias),
+            "fc2": dense_init(k2, d_ff, d_model, bias=bias)}
+
+
+def gelu_mlp(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return dense(params["fc2"], jax.nn.gelu(dense(params["fc1"], x)))

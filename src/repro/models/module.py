@@ -1,0 +1,93 @@
+"""Minimal pure-JAX module utilities (no flax dependency).
+
+Every layer is a pair of functions:
+
+    init_<layer>(key, cfg, ...) -> params   (nested dict pytree, fp32)
+    <layer>(params, x, ...)     -> y        (compute in cfg dtype)
+
+Stacked (scanned) layer params are created with ``stack_init`` which vmaps
+an init function over per-layer PRNG keys, producing leaves with a leading
+``n_layers`` axis consumed by ``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return DTYPES[cfg.dtype]
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, scale: float | None = None) -> Params:
+    """Linear layer params: truncated-normal fan-in init (fp32 master)."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32) * scale
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def embed_init(key, vocab: int, d_model: int) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02}
+
+
+def embed(params: Params, ids: jnp.ndarray, dtype) -> jnp.ndarray:
+    return params["table"].astype(dtype)[ids]
+
+
+def unembed(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Project to vocab logits (fp32 for a stable softmax/xent)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), params["table"].astype(jnp.float32))
+
+
+def stack_init(init_fn: Callable[..., Params], key, n: int, *args, **kwargs) -> Params:
+    """vmap ``init_fn`` over ``n`` keys -> params with a leading layer axis."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, *args, **kwargs))(keys)
+
+
+def scan_layers(body, x, layers, cfg, ckpt=False):
+    """lax.scan over stacked layer params, or an unrolled Python loop when
+    cfg.scan_layers is False (the dry-run's cost-analysis mode: XLA counts
+    a while body once, so unrolling is the only way to get true per-step
+    HLO FLOPs/bytes). body: (carry, layer) -> (carry, y)."""
+    if ckpt:
+        body = jax.checkpoint(body)
+    if getattr(cfg, "scan_layers", True):
+        return jax.lax.scan(body, x, layers)
+    L = jax.tree_util.tree_leaves(layers)[0].shape[0]
+    ys = []
+    for i in range(L):
+        layer = jax.tree_util.tree_map(lambda t: t[i], layers)
+        x, y = body(x, layer)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *ts: jnp.stack(ts), *ys)
+    else:
+        ys = None
+    return x, ys
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+def cast_tree(params, dtype):
+    return jax.tree_util.tree_map(lambda p: p.astype(dtype), params)

@@ -1,0 +1,184 @@
+"""RWKV6 ("Finch") block — chunked linear attention with data-dependent
+per-channel decay [arXiv:2404.05892].
+
+Per head (head size M): receptance r_t, key k_t, value v_t in R^M,
+data-dependent decay w_t in (0,1)^M, bonus u in R^M. State S in R^{M x M}:
+
+    y_t = r_t^T (S_{t-1} + diag(u . k_t)) v_t-ish, concretely
+    y_t[j] = sum_i r_t[i] (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])
+    S_t[i,j] = w_t[i] S_{t-1}[i,j] + k_t[i] v_t[j]
+
+TPU adaptation (DESIGN.md §4.5): chunkwise form — within a chunk the
+pairwise decay ratios are materialized as a [Q,Q,M]-free matmul using
+log-space cumulative decays, giving dense MXU work; state is carried
+across chunks with one ``lax.scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import groupnorm
+from .module import Params, dense, dense_init
+
+Array = jnp.ndarray
+
+_LORA_R = 32  # low-rank size for the data-dependent decay
+
+
+def rwkv6_init(key, cfg) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    H = d // cfg.rwkv_head_size
+    return {
+        # token-shift interpolation coefficients for r,k,v,w,g
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),
+        "wr": dense_init(ks[0], d, d),
+        "wk": dense_init(ks[1], d, d),
+        "wv": dense_init(ks[2], d, d),
+        "wg": dense_init(ks[3], d, d),
+        "wo": dense_init(ks[4], d, d),
+        # decay: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wA": dense_init(ks[5], d, _LORA_R)["w"] * 0.1,
+        "wB": dense_init(ks[6], _LORA_R, d)["w"] * 0.1,
+        "u": jax.random.normal(ks[7], (H, cfg.rwkv_head_size), jnp.float32) * 0.1,
+    }
+
+
+def _token_shift(x: Array, prev: Array | None = None) -> Array:
+    """x_{t-1} stream; prev: [B,1,d] carry for decode (zeros at t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def _projections(params, x, xx, cfg):
+    mu = params["mu"]
+    r = dense(params["wr"], _mix(x, xx, mu[0]))
+    k = dense(params["wk"], _mix(x, xx, mu[1]))
+    v = dense(params["wv"], _mix(x, xx, mu[2]))
+    xw = _mix(x, xx, mu[3]).astype(jnp.float32)
+    g = dense(params["wg"], _mix(x, xx, mu[4]))
+    log_w = -jnp.exp(params["w0"] + jnp.tanh(xw @ params["wA"]) @ params["wB"])  # [B,S,d] (<0)
+    return r, k, v, g, log_w
+
+
+def rwkv6_forward(params: Params, x: Array, cfg, *, chunk: int = 128,
+                  return_state: bool = False):
+    B, S, d = x.shape
+    M = cfg.rwkv_head_size
+    H = d // M
+    xx = _token_shift(x)
+    r, k, v, g, log_w = _projections(params, x, xx, cfg)
+
+    def heads(t):
+        return t.astype(jnp.float32).reshape(B, S, H, M)
+
+    r, k, v = heads(r), heads(k), heads(v)
+    log_w = log_w.reshape(B, S, H, M)
+    u = params["u"]                                          # [H,M]
+
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    def to_chunks(t):
+        return t.reshape(B, nc, Q, H, M).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, lwc = to_chunks(r), to_chunks(k), to_chunks(v), to_chunks(log_w)
+
+    def chunk_step(S_prev, inp):
+        rq, kq, vq, lwq = inp                                # [B,Q,H,M]
+        # L_t = cumulative log decay *through* step t (decay applies after use)
+        L = jnp.cumsum(lwq, axis=1)                          # [B,Q,H,M]
+        Lprev = L - lwq                                      # decay before step t
+        # intra-chunk, strictly lower triangular: A[t,s] = sum_i r_t[i] k_s[i] exp(Lprev_t - L... )
+        # key i decays from step s+1 .. t-1 => exp(Lprev[t] - L[s])
+        ratio_t = jnp.exp(Lprev)                             # <= 1 (L <= 0)
+        # exp(-L) can overflow for strong data-dependent decay over a long
+        # chunk; clamp at 30 — when -L_s > 30 every later ratio_t underflows
+        # to 0 anyway, so the clamped factorization stays consistent
+        ratio_s = jnp.exp(jnp.minimum(-L, 30.0))
+        att = jnp.einsum("bthm,bshm->btsh", rq * ratio_t, kq * ratio_s)
+        mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+        att = jnp.where(mask[None, :, :, None], att, 0.0)
+        # diagonal bonus term: y_t += sum_i r_t[i] u[i] k_t[i] v_t[j]
+        diag = jnp.einsum("bthm,hm,bthm->bth", rq, u, kq)
+        y = jnp.einsum("btsh,bshm->bthm", att, vq) + diag[..., None] * vq
+        # inter-chunk: y_t += (r_t * exp(Lprev_t)) @ S_prev
+        y = y + jnp.einsum("bthm,bhmn->bthn", rq * ratio_t, S_prev)
+        # state update: S_new = diag(exp(L_Q)) S_prev + sum_s (k_s exp(L_Q - L_s)) v_s^T
+        wq_total = jnp.exp(L[:, -1])                         # [B,H,M]
+        Sc = jnp.einsum("bshm,bshn->bhmn", kq * jnp.exp(L[:, -1:, :, :] - L), vq)
+        S_new = wq_total[..., None] * S_prev + Sc
+        return S_new, y
+
+    S0 = jnp.zeros((B, H, M, M), jnp.float32)
+    S_final, ys = jax.lax.scan(chunk_step, S0, (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, d)
+    y = groupnorm(y, H, cfg.norm_eps)
+    y = y * jax.nn.silu(g.astype(jnp.float32))
+    out = dense(params["wo"], y.astype(x.dtype))
+    if return_state:
+        return out, {"state": S_final, "shift": x[:, -1:, :]}
+    return out
+
+
+def make_rwkv_cache(cfg, batch: int, dtype) -> Params:
+    d = cfg.d_model
+    M = cfg.rwkv_head_size
+    H = d // M
+    return {
+        "shift": jnp.zeros((batch, 1, d), dtype),
+        "state": jnp.zeros((batch, H, M, M), jnp.float32),
+        "ffn_shift": jnp.zeros((batch, 1, d), dtype),
+    }
+
+
+def rwkv6_decode(params: Params, x: Array, cache: Params, cfg) -> tuple[Array, Params]:
+    """x: [B,1,d]."""
+    B, _, d = x.shape
+    M = cfg.rwkv_head_size
+    H = d // M
+    xx = cache["shift"]
+    r, k, v, g, log_w = _projections(params, x, xx, cfg)
+    r = r.astype(jnp.float32).reshape(B, H, M)
+    k = k.astype(jnp.float32).reshape(B, H, M)
+    v = v.astype(jnp.float32).reshape(B, H, M)
+    w = jnp.exp(log_w).reshape(B, H, M)                      # decay this step
+    u = params["u"]
+
+    S_prev = cache["state"]
+    kv = jnp.einsum("bhm,bhn->bhmn", k, v)
+    y = jnp.einsum("bhm,bhmn->bhn", r, S_prev + u[None, :, :, None] * kv)
+    S_new = w[..., None] * S_prev + kv
+    y = y.reshape(B, 1, d)
+    y = groupnorm(y, H, cfg.norm_eps)
+    y = y * jax.nn.silu(g.astype(jnp.float32))
+    out = dense(params["wo"], y.astype(x.dtype))
+    return out, {"shift": x, "state": S_new, "ffn_shift": cache["ffn_shift"]}
+
+
+# ------------------------------------------------- RWKV channel-mix FFN ----
+def rwkv_ffn_init(key, cfg) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, cfg.d_model), jnp.float32),
+        "wk": dense_init(k1, cfg.d_model, cfg.d_ff),
+        "wv": dense_init(k2, cfg.d_ff, cfg.d_model),
+        "wr": dense_init(k3, cfg.d_model, cfg.d_model),
+    }
+
+
+def rwkv_ffn(params: Params, x: Array, prev: Array | None = None) -> Array:
+    xx = _token_shift(x, prev)
+    mu = params["mu"]
+    kx = _mix(x, xx, mu[0])
+    rx = _mix(x, xx, mu[1])
+    h = jnp.square(jax.nn.relu(dense(params["wk"], kx)))
+    return jax.nn.sigmoid(dense(params["wr"], rx)) * dense(params["wv"], h)

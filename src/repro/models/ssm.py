@@ -1,0 +1,163 @@
+"""Mamba2 (SSD) block — TPU-native chunked-scan implementation.
+
+GPU Mamba uses a fused selective-scan CUDA kernel; the TPU adaptation
+(DESIGN.md §4.5) uses the SSD chunkwise form: the sequence is split into
+chunks of ``cfg.ssm_chunk``; within a chunk the recurrence is evaluated as
+dense (MXU-friendly) matmuls against a decay-masked [Q,Q] matrix, and state
+is propagated across chunks with a single ``lax.scan``.
+
+Recurrence (per head h, state size N, head dim P):
+    a_t = exp(dt_t * A_h)                       (scalar decay per step)
+    S_t = a_t S_{t-1} + dt_t * B_t (x) x_t      (S in R^{N x P})
+    y_t = C_t^T S_t + D_h * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm, rmsnorm_init
+from .module import Params, dense, dense_init
+
+Array = jnp.ndarray
+
+
+def mamba2_init(key, cfg) -> Params:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N
+    k_in, k_conv, k_out, k_a, k_dt = jax.random.split(key, 5)
+    return {
+        # fused input projection: [z, xBC, dt]
+        "in_proj": dense_init(k_in, cfg.d_model, 2 * d_inner + 2 * N + n_heads),
+        "conv_w": jax.random.normal(k_conv, (cfg.ssm_conv, conv_dim), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(k_dt, (n_heads,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm": rmsnorm_init(d_inner),
+        "out_proj": dense_init(k_out, d_inner, cfg.d_model),
+    }
+
+
+def _causal_conv(xBC: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv, width K. xBC: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i].astype(xBC.dtype) for i in range(K))
+    return jax.nn.silu(out + b.astype(xBC.dtype))
+
+
+def _split_proj(params, x, cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    n_heads = d_inner // cfg.ssm_head_dim
+    zxbcdt = dense(params["in_proj"], x)
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xBC, dt, d_inner, N, n_heads
+
+
+def mamba2_forward(params: Params, x: Array, cfg, *, return_state: bool = False):
+    """x: [B, S, d_model] -> [B, S, d_model]. S must be divisible by chunk.
+    With return_state=True also returns a decode-ready cache dict."""
+    B, S, _ = x.shape
+    P = cfg.ssm_head_dim
+    z, xBC, dt, d_inner, N, H = _split_proj(params, x, cfg)
+    xBC_raw = xBC
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xs, Bmat, Cmat = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    xh = xs.reshape(B, S, H, P)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])       # [B,S,H]
+    A = -jnp.exp(params["A_log"])                                          # [H]
+    log_a = dt * A[None, None, :]                                          # [B,S,H] (<0)
+
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    def to_chunks(t, trailing):
+        return t.reshape((B, nc, Q) + trailing)
+
+    xc = to_chunks(xh.astype(jnp.float32), (H, P)).transpose(1, 0, 2, 3, 4)   # [nc,B,Q,H,P]
+    Bc = to_chunks(Bmat.astype(jnp.float32), (N,)).transpose(1, 0, 2, 3)      # [nc,B,Q,N]
+    Cc = to_chunks(Cmat.astype(jnp.float32), (N,)).transpose(1, 0, 2, 3)
+    dtc = to_chunks(dt, (H,)).transpose(1, 0, 2, 3)                            # [nc,B,Q,H]
+    lac = to_chunks(log_a, (H,)).transpose(1, 0, 2, 3)
+
+    def chunk_step(S_prev, inputs):
+        xq, Bq, Cq, dtq, laq = inputs
+        L = jnp.cumsum(laq, axis=1)                          # [B,Q,H] cumulative log decay
+        # intra-chunk: M[t,s] = (C_t.B_s) exp(L_t - L_s) dt_s, s<=t
+        CB = jnp.einsum("bqn,bsn->bqs", Cq, Bq)              # [B,Q,Q]
+        diff = L[:, :, None, :] - L[:, None, :, :]           # [B,Q(t),Q(s),H]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        # mask INSIDE the exp: where(mask, exp(diff), 0) has a 0*inf = NaN
+        # cotangent for the masked (diff>0) entries
+        decay = jnp.exp(jnp.where(mask[None, :, :, None], diff, -1e9))
+        M = CB[:, :, :, None] * decay * dtq[:, None, :, :]   # [B,t,s,H]
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, xq)
+        # inter-chunk: y_inter[t] = exp(L_t) * C_t^T S_prev
+        y_inter = jnp.einsum("bqn,bhnp->bqhp", Cq, S_prev) * jnp.exp(L)[..., None]
+        # state update
+        rem = jnp.exp(L[:, -1:, :] - L)                      # exp(L_Q - L_s)
+        Sc = jnp.einsum("bsn,bshp->bhnp", Bq[:, :, :],
+                        xq * (rem * dtq)[..., None])
+        S_new = jnp.exp(L[:, -1, :])[:, :, None, None] * S_prev + Sc
+        return S_new, y_intra + y_inter
+
+    S0 = jnp.zeros((B, H, N, P), jnp.float32)
+    S_final, ys = jax.lax.scan(chunk_step, S0, (xc, Bc, Cc, dtc, lac))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = dense(params["out_proj"], y)
+    if return_state:
+        K = cfg.ssm_conv
+        conv_tail = xBC_raw[:, S - (K - 1):, :] if S >= K - 1 else jnp.pad(
+            xBC_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        return out, {"conv": conv_tail, "state": S_final}
+    return out
+
+
+# ------------------------------------------------------------- decoding ----
+def make_ssm_cache(cfg, batch: int, dtype) -> Params:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, H, N, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(params: Params, x: Array, cache: Params, cfg) -> tuple[Array, Params]:
+    """x: [B, 1, d_model] single step."""
+    B = x.shape[0]
+    P = cfg.ssm_head_dim
+    z, xBC, dt, d_inner, N, H = _split_proj(params, x, cfg)
+
+    window = jnp.concatenate([cache["conv"], xBC], axis=1)   # [B,K,conv_dim]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"]) + params["conv_b"]
+    xBC1 = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    new_conv = window[:, 1:, :]
+
+    xs, Bmat, Cmat = jnp.split(xBC1, [d_inner, d_inner + N], axis=-1)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    Bv = Bmat[:, 0].astype(jnp.float32)                      # [B,N]
+    Cv = Cmat[:, 0].astype(jnp.float32)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    a = jnp.exp(dtv * (-jnp.exp(params["A_log"]))[None, :])  # [B,H]
+    S_new = a[:, :, None, None] * cache["state"] + \
+        jnp.einsum("bn,bhp->bhnp", Bv, xh * dtv[..., None])
+    y = jnp.einsum("bn,bhnp->bhp", Cv, S_new) + params["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(params["out_proj"], y), {"conv": new_conv, "state": S_new}

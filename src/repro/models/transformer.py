@@ -1,0 +1,362 @@
+"""Decoder-only LM assembly for all assigned families.
+
+Families:
+  dense   — GQA attention + SwiGLU          (tinyllama, qwen2.5-32b, glm4-9b,
+                                             qwen2-72b, phi-3-vision backbone)
+  moe     — GQA attention + MoE FFN          (qwen2-moe, mixtral-8x22b)
+  ssm     — RWKV6 time-mix + channel-mix     (rwkv6-1.6b)
+  hybrid  — Mamba2 backbone + ONE shared attention block applied every
+            ``attn_every`` layers (parameters shared — zamba2-style)
+
+Layers are stacked and consumed by ``lax.scan`` (with ``jax.checkpoint``
+when cfg.remat) so the HLO stays small and the remat policy is explicit.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .layers import (layernorm, layernorm_init, rmsnorm, rmsnorm_init,
+                     swiglu, swiglu_init)
+from .module import (Params, dtype_of, embed, embed_init, stack_init, unembed,
+                     dense_init, dense, scan_layers)
+from repro.sharding.act import constrain
+
+Array = jnp.ndarray
+
+
+# ------------------------------------------------------------ layer defs ----
+def _dense_layer_init(key, cfg) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": rmsnorm_init(cfg.d_model), "attn": attn.attention_init(k1, cfg),
+            "ln2": rmsnorm_init(cfg.d_model), "mlp": swiglu_init(k2, cfg.d_model, cfg.d_ff)}
+
+
+def _moe_layer_init(key, cfg) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": rmsnorm_init(cfg.d_model), "attn": attn.attention_init(k1, cfg),
+            "ln2": rmsnorm_init(cfg.d_model), "moe": moe_mod.moe_init(k2, cfg)}
+
+
+def _rwkv_layer_init(key, cfg) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": layernorm_init(cfg.d_model), "time": rwkv_mod.rwkv6_init(k1, cfg),
+            "ln2": layernorm_init(cfg.d_model), "ffn": rwkv_mod.rwkv_ffn_init(k2, cfg)}
+
+
+def _mamba_layer_init(key, cfg) -> Params:
+    return {"ln": rmsnorm_init(cfg.d_model), "mamba": ssm_mod.mamba2_init(key, cfg)}
+
+
+def _shared_attn_block_init(key, cfg) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": rmsnorm_init(cfg.d_model), "attn": attn.attention_init(k1, cfg),
+            "ln2": rmsnorm_init(cfg.d_model), "mlp": swiglu_init(k2, cfg.d_model, cfg.d_ff)}
+
+
+# ------------------------------------------------------------------ init ----
+def init_lm(key, cfg) -> Params:
+    ke, kl, kh, ks = jax.random.split(key, 4)
+    p: Params = {"embed": embed_init(ke, cfg.vocab_size, cfg.d_model),
+                 "ln_f": (layernorm_init if cfg.family == "ssm" else rmsnorm_init)(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {"table": jax.random.normal(kh, (cfg.vocab_size, cfg.d_model),
+                                                   jnp.float32) * 0.02}
+    if cfg.family in ("dense", "vlm"):
+        p["layers"] = stack_init(_dense_layer_init, kl, cfg.n_layers, cfg)
+    elif cfg.family == "moe":
+        p["layers"] = stack_init(_moe_layer_init, kl, cfg.n_layers, cfg)
+    elif cfg.family == "ssm":
+        p["layers"] = stack_init(_rwkv_layer_init, kl, cfg.n_layers, cfg)
+    elif cfg.family == "hybrid":
+        assert cfg.attn_every and cfg.n_layers % cfg.attn_every == 0
+        p["layers"] = stack_init(_mamba_layer_init, kl, cfg.n_layers, cfg)
+        p["shared_attn"] = _shared_attn_block_init(ks, cfg)
+    else:
+        raise ValueError(cfg.family)
+    if cfg.family == "vlm":
+        p["vision_proj"] = dense_init(ks, cfg.d_model, cfg.d_model)
+    return p
+
+
+# --------------------------------------------------------------- forward ----
+def _maybe_ckpt(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _window_for(cfg, seq_len: int) -> Optional[int]:
+    if cfg.sliding_window is not None:
+        return cfg.sliding_window
+    return None
+
+
+def _dense_block(layer, x, cfg, window):
+    x = x + attn.attention_forward(layer["attn"], rmsnorm(layer["ln1"], x, cfg.norm_eps),
+                                   cfg, window=window)
+    x = x + swiglu(layer["mlp"], rmsnorm(layer["ln2"], x, cfg.norm_eps))
+    return x
+
+
+def lm_forward(params: Params, tokens: Array, cfg, *,
+               extra_embeds: Optional[Array] = None,
+               window: Optional[int] = None) -> tuple[Array, Array]:
+    """tokens: [B, S_text] int32. extra_embeds (vlm/audio): [B, S_vis, d]
+    prepended to the token embeddings. Returns (logits [B,S,V], aux_loss)."""
+    dt = dtype_of(cfg)
+    x = embed(params["embed"], tokens, dt)
+    if extra_embeds is not None:
+        vis = dense(params["vision_proj"], extra_embeds.astype(dt))
+        x = jnp.concatenate([vis, x], axis=1)
+    x = constrain(x, "batch", None, None)
+    if window is None:
+        window = _window_for(cfg, x.shape[1])
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        def body(h, layer):
+            h = constrain(h, "batch", "seq_tp", None)
+            return _dense_block(layer, h, cfg, window), jnp.float32(0)
+    elif fam == "moe":
+        def body(h, layer):
+            h = constrain(h, "batch", "seq_tp", None)
+            h = h + attn.attention_forward(layer["attn"],
+                                           rmsnorm(layer["ln1"], h, cfg.norm_eps),
+                                           cfg, window=window)
+            y, aux = moe_mod.moe_forward(layer["moe"], rmsnorm(layer["ln2"], h, cfg.norm_eps), cfg)
+            return h + y, aux
+    elif fam == "ssm":
+        def body(h, layer):
+            h = constrain(h, "batch", "seq_tp", None)
+            h = h + rwkv_mod.rwkv6_forward(layer["time"], layernorm(layer["ln1"], h, cfg.norm_eps), cfg)
+            h = h + rwkv_mod.rwkv_ffn(layer["ffn"], layernorm(layer["ln2"], h, cfg.norm_eps))
+            return h, jnp.float32(0)
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+        k = cfg.attn_every
+
+        def body(h, group):          # group: k stacked mamba layers
+            h = constrain(h, "batch", "seq_tp", None)
+            def mamba_body(hh, layer):
+                return hh + ssm_mod.mamba2_forward(
+                    layer["mamba"], rmsnorm(layer["ln"], hh, cfg.norm_eps), cfg), None
+            h, _ = scan_layers(mamba_body, h, group, cfg, ckpt=cfg.remat)
+            h = _dense_block(shared, h, cfg, window)
+            return h, jnp.float32(0)
+    else:
+        raise ValueError(fam)
+
+    layers = params["layers"]
+    if fam == "hybrid":
+        layers = jax.tree_util.tree_map(
+            lambda t: t.reshape((cfg.n_layers // cfg.attn_every, cfg.attn_every) + t.shape[1:]),
+            layers)
+    x, auxs = scan_layers(body, x, layers, cfg, ckpt=cfg.remat)
+
+    x = (layernorm if fam == "ssm" else rmsnorm)(params["ln_f"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain(unembed(head, x), "batch", None, "vocab")
+    return logits, jnp.sum(auxs)
+
+
+def lm_loss(params: Params, batch: dict, cfg) -> tuple[Array, dict]:
+    """Next-token cross-entropy. batch: {"tokens": [B,S]} (+ optional
+    "extra_embeds"). Positions with label < 0 are masked out."""
+    tokens = batch["tokens"]
+    logits, aux = lm_forward(params, tokens, cfg,
+                             extra_embeds=batch.get("extra_embeds"))
+    if "extra_embeds" in batch and batch["extra_embeds"] is not None:
+        logits = logits[:, batch["extra_embeds"].shape[1]:]  # text region only
+    labels = batch.get("labels")
+    if labels is None:
+        labels = tokens[:, 1:]
+        logits = logits[:, :-1]
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+# --------------------------------------------------------------- prefill ----
+def lm_prefill(params: Params, tokens: Array, cfg, *, cache_len: int,
+               extra_embeds: Optional[Array] = None,
+               window: Optional[int] = None) -> tuple[Array, Params]:
+    """Serving prefill: forward pass that also materializes a decode-ready
+    cache (ring KV / SSM state). Returns (last-token logits [B,1,V], cache)."""
+    dt = dtype_of(cfg)
+    x = embed(params["embed"], tokens, dt)
+    if extra_embeds is not None:
+        vis = dense(params["vision_proj"], extra_embeds.astype(dt))
+        x = jnp.concatenate([vis, x], axis=1)
+    if window is None:
+        window = _window_for(cfg, x.shape[1])
+    x = constrain(x, "batch", None, None)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(h, layer):
+            h = constrain(h, "batch", "seq_tp", None)
+            y, (k, v) = attn.attention_forward(
+                layer["attn"], rmsnorm(layer["ln1"], h, cfg.norm_eps), cfg,
+                window=window, return_kv=True)
+            h = h + y
+            mlp_in = rmsnorm(layer["ln2"], h, cfg.norm_eps)
+            if fam == "moe":
+                y2, _ = moe_mod.moe_forward(layer["moe"], mlp_in, cfg)
+            else:
+                y2 = swiglu(layer["mlp"], mlp_in)
+            return h + y2, attn.fill_kv_cache(k, v, cache_len, dt)
+        x, caches = scan_layers(body, x, params["layers"], cfg, ckpt=cfg.remat)
+        cache = {"layers": caches}
+    elif fam == "ssm":
+        def body(h, layer):
+            ln1 = layernorm(layer["ln1"], h, cfg.norm_eps)
+            y, st = rwkv_mod.rwkv6_forward(layer["time"], ln1, cfg, return_state=True)
+            h = h + y
+            ln2 = layernorm(layer["ln2"], h, cfg.norm_eps)
+            h = h + rwkv_mod.rwkv_ffn(layer["ffn"], ln2)
+            return h, dict(st, ffn_shift=ln2[:, -1:, :])
+        x, caches = scan_layers(body, x, params["layers"], cfg, ckpt=cfg.remat)
+        cache = {"layers": caches}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+        k_every = cfg.attn_every
+        glayers = jax.tree_util.tree_map(
+            lambda t: t.reshape((cfg.n_layers // k_every, k_every) + t.shape[1:]),
+            params["layers"])
+
+        def body(h, group):
+            def mamba_body(hh, layer):
+                y, st = ssm_mod.mamba2_forward(
+                    layer["mamba"], rmsnorm(layer["ln"], hh, cfg.norm_eps), cfg,
+                    return_state=True)
+                return hh + y, st
+            h, sts = scan_layers(mamba_body, h, group, cfg, ckpt=cfg.remat)
+            y, (k, v) = attn.attention_forward(
+                shared["attn"], rmsnorm(shared["ln1"], h, cfg.norm_eps), cfg,
+                window=window, return_kv=True)
+            h = h + y
+            h = h + swiglu(shared["mlp"], rmsnorm(shared["ln2"], h, cfg.norm_eps))
+            return h, (sts, attn.fill_kv_cache(k, v, cache_len, dt))
+        x, (ssm_caches, kv_caches) = scan_layers(body, x, glayers, cfg, ckpt=cfg.remat)
+        cache = {
+            "layers": jax.tree_util.tree_map(
+                lambda t: t.reshape((cfg.n_layers,) + t.shape[2:]), ssm_caches),
+            "shared_attn": kv_caches,
+        }
+    else:
+        raise ValueError(fam)
+
+    x = (layernorm if fam == "ssm" else rmsnorm)(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(head, x), cache
+
+
+# ---------------------------------------------------------------- decode ----
+def init_lm_cache(cfg, batch: int, cache_len: int) -> Params:
+    """Stacked per-layer caches for scan-over-layers decode."""
+    dt = dtype_of(cfg)
+
+    def stack(make_one, n):
+        one = make_one()
+        return jax.tree_util.tree_map(lambda t: jnp.broadcast_to(t, (n,) + t.shape), one)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        return {"layers": stack(lambda: attn.make_kv_cache(cfg, batch, cache_len, dt),
+                                cfg.n_layers)}
+    if fam == "ssm":
+        return {"layers": stack(lambda: rwkv_mod.make_rwkv_cache(cfg, batch, dt),
+                                cfg.n_layers)}
+    if fam == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        return {
+            "layers": stack(lambda: ssm_mod.make_ssm_cache(cfg, batch, dt), cfg.n_layers),
+            "shared_attn": stack(lambda: attn.make_kv_cache(cfg, batch, cache_len, dt),
+                                 n_groups),
+        }
+    raise ValueError(fam)
+
+
+def lm_decode(params: Params, token: Array, cache: Params, pos: Array, cfg
+              ) -> tuple[Array, Params]:
+    """One decode step. token: [B,1] int32; pos: scalar int32.
+    Returns (logits [B,1,V], new cache)."""
+    dt = dtype_of(cfg)
+    x = embed(params["embed"], token, dt)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(h, xs):
+            layer, kv = xs
+            y, kv2 = attn.attention_decode(layer["attn"],
+                                           rmsnorm(layer["ln1"], h, cfg.norm_eps),
+                                           kv, pos, cfg)
+            h = h + y
+            mlp_in = rmsnorm(layer["ln2"], h, cfg.norm_eps)
+            if fam == "moe":
+                y2, _ = moe_mod.moe_forward(layer["moe"], mlp_in, cfg)
+            else:
+                y2 = swiglu(layer["mlp"], mlp_in)
+            return h + y2, kv2
+        x, new_kv = scan_layers(body, x, (params["layers"], cache["layers"]), cfg)
+        new_cache = {"layers": new_kv}
+
+    elif fam == "ssm":
+        def body(h, xs):
+            layer, c = xs
+            y, c2 = rwkv_mod.rwkv6_decode(layer["time"],
+                                          layernorm(layer["ln1"], h, cfg.norm_eps), c, cfg)
+            h = h + y
+            ffn_in = layernorm(layer["ln2"], h, cfg.norm_eps)
+            y2 = rwkv_mod.rwkv_ffn(layer["ffn"], ffn_in, prev=c2["ffn_shift"])
+            c2 = dict(c2, ffn_shift=ffn_in)
+            return h + y2, c2
+        x, new_c = scan_layers(body, x, (params["layers"], cache["layers"]), cfg)
+        new_cache = {"layers": new_c}
+
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+        k = cfg.attn_every
+        n_groups = cfg.n_layers // k
+        glayers = jax.tree_util.tree_map(
+            lambda t: t.reshape((n_groups, k) + t.shape[1:]), params["layers"])
+        gcaches = jax.tree_util.tree_map(
+            lambda t: t.reshape((n_groups, k) + t.shape[1:]), cache["layers"])
+
+        def group_body(h, xs):
+            group, gcache, kv = xs
+
+            def mamba_body(hh, ys):
+                layer, c = ys
+                y, c2 = ssm_mod.mamba2_decode(layer["mamba"],
+                                              rmsnorm(layer["ln"], hh, cfg.norm_eps), c, cfg)
+                return hh + y, c2
+            h, gcache2 = scan_layers(mamba_body, h, (group, gcache), cfg)
+            y, kv2 = attn.attention_decode(shared["attn"],
+                                           rmsnorm(shared["ln1"], h, cfg.norm_eps),
+                                           kv, pos, cfg)
+            h = h + y
+            h = h + swiglu(shared["mlp"], rmsnorm(shared["ln2"], h, cfg.norm_eps))
+            return h, (gcache2, kv2)
+
+        x, (new_g, new_kv) = scan_layers(group_body, x, (glayers, gcaches, cache["shared_attn"]), cfg)
+        new_cache = {
+            "layers": jax.tree_util.tree_map(
+                lambda t: t.reshape((cfg.n_layers,) + t.shape[2:]), new_g),
+            "shared_attn": new_kv,
+        }
+    else:
+        raise ValueError(fam)
+
+    x = (layernorm if fam == "ssm" else rmsnorm)(params["ln_f"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(head, x), new_cache

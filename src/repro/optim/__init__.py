@@ -1,0 +1,18 @@
+"""Pure-JAX pytree optimizers (no optax dependency)."""
+from .sgd import sgd_init, sgd_update
+from .adamw import adamw_init, adamw_update
+
+__all__ = ["sgd_init", "sgd_update", "adamw_init", "adamw_update", "make_optimizer"]
+
+
+def make_optimizer(name: str, **kw):
+    """Returns (init_fn(params) -> state, update_fn(grads, state, params, lr)
+    -> (new_params, new_state))."""
+    if name == "sgd":
+        return (lambda p: sgd_init(p, momentum=kw.get("momentum", 0.0)),
+                lambda g, s, p, lr: sgd_update(g, s, p, lr, momentum=kw.get("momentum", 0.0)))
+    if name == "adamw":
+        return (adamw_init,
+                lambda g, s, p, lr: adamw_update(g, s, p, lr,
+                                                 weight_decay=kw.get("weight_decay", 0.0)))
+    raise ValueError(name)

@@ -1,0 +1,40 @@
+"""AdamW — fp32 moments by default; ``moment_dtype=bfloat16`` halves the
+optimizer-state HBM (the classic low-precision-Adam trade; v stays usable
+because sqrt compresses its dynamic range)."""
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, *, moment_dtype=jnp.float32):
+    z = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return {"m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        m2 = b1 * mf + (1 - b1) * g
+        v2 = b2 * vf + (1 - b2) * g * g
+        upd = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+        p2 = p.astype(jnp.float32) - lr * (upd + weight_decay * p.astype(jnp.float32))
+        return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    gflat = treedef.flatten_up_to(grads)
+    mflat = treedef.flatten_up_to(state["m"])
+    vflat = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat, gflat, mflat, vflat)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

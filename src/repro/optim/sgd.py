@@ -1,0 +1,19 @@
+"""SGD with optional momentum (paper uses plain SGD, lr=0.01)."""
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, *, momentum: float = 0.0):
+    if momentum == 0.0:
+        return {}
+    return {"m": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+
+def sgd_update(grads, state, params, lr, *, momentum: float = 0.0):
+    if momentum == 0.0:
+        new = jax.tree_util.tree_map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new, state
+    m = jax.tree_util.tree_map(lambda mm, g: momentum * mm + g.astype(mm.dtype),
+                               state["m"], grads)
+    new = jax.tree_util.tree_map(lambda p, mm: p - lr * mm, params, m)
+    return new, {"m": m}

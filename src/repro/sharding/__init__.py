@@ -1,0 +1,3 @@
+from .specs import (batch_axes, cache_specs, data_specs, param_specs, to_named)
+
+__all__ = ["param_specs", "data_specs", "cache_specs", "batch_axes", "to_named"]

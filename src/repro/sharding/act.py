@@ -1,0 +1,75 @@
+"""Activation sharding constraints (logical-axis style, MaxText pattern).
+
+XLA's SPMD propagation only has to respect in/out shardings — measured on
+this codebase it drops the batch sharding at the embedding gather and then
+keeps the whole residual stream replicated over ``data`` (43 GiB/device
+for a 1.1B model). ``constrain`` pins the logical layout at layer
+boundaries so propagation cannot wander.
+
+Models call ``constrain(x, "batch", "seq", "embed")`` with logical names;
+the launch layer activates a mapping to mesh axes for the duration of
+tracing via ``activation_rules(...)``. Outside any context, ``constrain``
+is a no-op — model code stays mesh-agnostic and runs on bare CPU.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: contextvars.ContextVar[Optional[dict]] = contextvars.ContextVar(
+    "repro_act_rules", default=None)
+
+
+@contextlib.contextmanager
+def activation_rules(mesh=None, **logical_to_axes):
+    """e.g. activation_rules(mesh, batch=("pod","data"), heads="model",
+    ff="model", vocab="model", seq_tp="model").
+
+    ``seq_tp`` shards the residual stream's sequence dim over the tensor-
+    parallel axis between layers (Megatron sequence parallelism) — it cuts
+    the remat stash by the TP degree at the cost of per-layer
+    all-gather/reduce-scatter. Passing the mesh enables divisibility checks
+    (non-divisible dims silently fall back to replicated).
+    """
+    rules = dict(logical_to_axes)
+    rules["__sizes__"] = dict(mesh.shape) if mesh is not None else {}
+    tok = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(tok)
+
+
+def _axes_fit(axes, dim: int, sizes: dict):
+    """Keep only a prefix of axes whose product divides dim."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    total = 1
+    kept = []
+    for a in axes:
+        n = sizes.get(a, 1)
+        if n <= 1 or dim % (total * n) != 0:
+            break
+        kept.append(a)
+        total *= n
+    if not kept:
+        return None
+    return tuple(kept) if len(kept) > 1 else kept[0]
+
+
+def constrain(x, *logical):
+    """Apply with_sharding_constraint mapping logical dim names -> axes.
+    Unknown/None names map to replicated. No-op outside activation_rules."""
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    sizes = rules.get("__sizes__", {})
+    spec = P(*[_axes_fit(rules.get(name), x.shape[i], sizes) if name else None
+               for i, name in enumerate(logical)])
+    return jax.lax.with_sharding_constraint(x, spec)

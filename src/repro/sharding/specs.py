@@ -1,0 +1,170 @@
+"""Logical-axis -> PartitionSpec rules (divisibility-aware).
+
+Parameters get 2D sharding: tensor-parallel dims (heads*head_dim, d_ff,
+vocab) on the ``model`` axis; the other matmul dim FSDP-sharded on
+``data``. A dim is sharded only when divisible by the mesh axis size
+(whisper's 6 heads / 51865 vocab fall back to replication). Params are
+replicated across ``pod`` — each pod is an FL silo holding the model.
+
+Path-name driven: layers are plain nested dicts, so the rule table keys on
+leaf/parent names produced by models/*.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# parents whose "w" contracts over the TP dim (output projections)
+_OUT_PROJ = {"wo", "down", "out_proj", "fc2", "wv_head"}
+# parents whose "w" expands into the TP dim
+_IN_PROJ = {"wq", "wk", "wv", "gate", "up", "fc1", "in_proj", "wr", "wg",
+            "vision_proj", "wk_ffn"}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def _maybe(mesh: Mesh, axis: str, dim: int):
+    """Shard on `axis` only if the dim divides evenly."""
+    return axis if dim % max(_axis_size(mesh, axis), 1) == 0 and _axis_size(mesh, axis) > 1 else None
+
+
+def _rule(mesh, names: list[str], shape: tuple, fsdp: str, tp: str):
+    leaf = names[-1]
+    parent = names[-2] if len(names) > 1 else ""
+    nd = len(shape)
+
+    if leaf == "table" and nd == 2:                       # [vocab, d_model]
+        # vocab on model; d_model REPLICATED — FSDP-sharding the embedding's
+        # d_model on the batch axis makes the partitioner all-gather the
+        # full token stream for logits/grad matmuls (measured: +7.8 GiB/dev)
+        return P(_maybe(mesh, tp, shape[0]), None)
+    if leaf in ("w_gate", "w_up") and nd == 3:            # [E, d_model, ff]
+        return P(None, _maybe(mesh, fsdp, shape[1]), _maybe(mesh, tp, shape[2]))
+    if leaf == "w_down" and nd == 3:                      # [E, ff, d_model]
+        return P(None, _maybe(mesh, tp, shape[1]), _maybe(mesh, fsdp, shape[2]))
+    if leaf == "conv_w" and nd == 2:                      # [K, conv_dim]
+        return P(None, _maybe(mesh, tp, shape[1]))
+    if leaf == "wA" and nd == 2:                          # [d, r]
+        return P(_maybe(mesh, fsdp, shape[0]), None)
+    if leaf == "wB" and nd == 2:                          # [r, d]
+        return P(None, _maybe(mesh, fsdp, shape[1]))
+    if leaf == "pos_embed" and nd == 2:
+        return P(None, _maybe(mesh, fsdp, shape[1]))
+    if leaf == "w" and nd == 2:
+        if parent in _OUT_PROJ:                           # [tp_dim, d_model]
+            return P(_maybe(mesh, tp, shape[0]), _maybe(mesh, fsdp, shape[1]))
+        if parent in _IN_PROJ or parent == "router":      # [d_model, tp_dim]
+            tp_ax = None if parent == "router" else _maybe(mesh, tp, shape[1])
+            return P(_maybe(mesh, fsdp, shape[0]), tp_ax)
+        return P(_maybe(mesh, fsdp, shape[0]), _maybe(mesh, tp, shape[1]))
+    if leaf == "w" and nd == 4:                           # CNN conv [3,3,ci,co]
+        return P(None, None, None, _maybe(mesh, tp, shape[3]))
+    if leaf == "b" and nd == 1 and parent in _IN_PROJ:
+        return P(_maybe(mesh, tp, shape[0]))
+    return P()                                            # replicate
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        k = getattr(p, "key", None)
+        if k is None:
+            k = getattr(p, "idx", None)
+        out.append(str(k))
+    return out
+
+
+def param_specs(params_shape, mesh: Mesh, *, fsdp: str = "data", tp: str = "model"):
+    """params_shape: pytree of ShapeDtypeStruct/arrays -> pytree of P."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        stacked = any(n.endswith("layers") for n in names)  # scanned stacks
+        core_shape = shape[1:] if stacked else shape
+        spec = _rule(mesh, names, core_shape, fsdp, tp)
+        if stacked:
+            spec = P(None, *spec)
+        # guard rank mismatch (scalar leaves etc.)
+        if len(spec) > len(shape):
+            spec = P(*([None] * len(shape)))
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_axes(mesh: Mesh, global_batch: int, *, include_model: bool = False):
+    """Mesh axes to shard the batch dim over (pod+data when both divide);
+    include_model=True adds the model axis (DP-only layout for small
+    models — EXPERIMENTS.md §Perf-2)."""
+    names = ("pod", "data", "model") if include_model else ("pod", "data")
+    axes = [a for a in names if _axis_size(mesh, a) > 1]
+    size = 1
+    used = []
+    for a in axes:
+        if global_batch % (size * _axis_size(mesh, a)) == 0:
+            used.append(a)
+            size *= _axis_size(mesh, a)
+    return tuple(used) or None
+
+
+def data_specs(batch_tree, mesh: Mesh, global_batch: int):
+    """Inputs: batch dim on (pod,data); all other dims replicated."""
+    ba = batch_axes(mesh, global_batch)
+
+    def spec_of(leaf):
+        if leaf.ndim == 0:
+            return P()
+        return P(ba, *([None] * (leaf.ndim - 1)))
+    return jax.tree_util.tree_map(spec_of, batch_tree)
+
+
+def cache_specs(cache_tree, mesh: Mesh, batch: int, *, tp: str = "model"):
+    """KV/SSM cache sharding for decode.
+
+    Batch dim (axis 1 after the stacked-layer axis) on data when divisible;
+    otherwise (batch=1 long-context) the KV-cache *sequence* dim is sharded
+    on data (cache/context parallelism). Head-like dims go on ``model``
+    when divisible.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    data_ok = batch % max(_axis_size(mesh, "data"), 1) == 0 and _axis_size(mesh, "data") > 1
+    specs = []
+    for path, leaf in flat:
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        leafname = names[-1]
+        # stacked layer axis first
+        if leafname in ("k", "v") and len(shape) == 5:     # [L,B,W,KV,hd]
+            bspec = "data" if data_ok else None
+            kvspec = _maybe(mesh, tp, shape[3])
+            # seq dim: on data when batch can't shard (long-context b=1);
+            # on model when KV heads don't divide the TP axis (GQA with few
+            # KV heads) — otherwise a 32k cache replicates across model
+            # (measured 92 GiB/dev on qwen2-72b decode_32k)
+            if data_ok:
+                sspec = _maybe(mesh, tp, shape[2]) if kvspec is None else None
+            else:
+                sspec = _maybe(mesh, "data", shape[2])
+            specs.append(P(None, bspec, sspec, kvspec, None))
+        elif leafname == "state" and len(shape) == 5:      # [L,B,H,M/N,P] ssm/rwkv
+            bspec = "data" if data_ok else None
+            specs.append(P(None, bspec, _maybe(mesh, tp, shape[2]), None, None))
+        elif leafname == "conv" and len(shape) == 4:       # [L,B,K-1,conv_dim]
+            bspec = "data" if data_ok else None
+            specs.append(P(None, bspec, None, _maybe(mesh, tp, shape[3])))
+        elif leafname in ("shift", "ffn_shift") and len(shape) == 4:
+            bspec = "data" if data_ok else None
+            specs.append(P(None, bspec, None, None))
+        elif leafname == "slot_pos":
+            specs.append(P(*([None] * len(shape))))
+        else:
+            specs.append(P(*([None] * len(shape))))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def to_named(spec_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run on the single real CPU device; only the dry-run uses the
+# 512-device placeholder (spawned in a subprocess by test_dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

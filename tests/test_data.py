@@ -1,0 +1,68 @@
+"""Data pipeline + Dirichlet partition properties."""
+import numpy as np
+import pytest
+
+from repro.data import ClientDataset, dirichlet_partition, make_fmnist_like, partition_stats
+from repro.data.synthetic import make_token_stream
+
+
+def test_fmnist_like_shapes_and_learnable_structure():
+    imgs, labels = make_fmnist_like(2000, seed=0)
+    assert imgs.shape == (2000, 28, 28, 1) and labels.shape == (2000,)
+    assert set(np.unique(labels)) <= set(range(10))
+    # class-conditional structure: same-class pairs more correlated
+    def mean_img(c):
+        return imgs[labels == c].mean(0).ravel()
+    m = np.stack([mean_img(c) for c in range(10)])
+    m = (m - m.mean(1, keepdims=True)) / m.std(1, keepdims=True)
+    corr = m @ m.T / m.shape[1]
+    off_diag = corr[~np.eye(10, dtype=bool)]
+    assert corr.diagonal().min() > 0.9
+    assert off_diag.max() < 0.8
+
+
+def test_prototypes_shared_across_seeds():
+    a, la = make_fmnist_like(500, seed=0)
+    b, lb = make_fmnist_like(500, seed=123)
+    ma = np.stack([a[la == c].mean(0).ravel() for c in range(10)])
+    mb = np.stack([b[lb == c].mean(0).ravel() for c in range(10)])
+    for c in range(10):
+        r = np.corrcoef(ma[c], mb[c])[0, 1]
+        assert r > 0.5, (c, r)
+
+
+def test_dirichlet_partition_covers_all_indices():
+    _, labels = make_fmnist_like(3000, seed=0)
+    parts = dirichlet_partition(labels, 20, 0.3, seed=0)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)
+
+
+def test_dirichlet_beta_controls_heterogeneity():
+    _, labels = make_fmnist_like(5000, seed=0)
+    stats_iid = partition_stats(dirichlet_partition(labels, 10, 100.0, seed=0), labels)
+    stats_noniid = partition_stats(dirichlet_partition(labels, 10, 0.1, seed=0), labels)
+    # non-IID split has much higher class-fraction variance
+    var_iid = stats_iid["class_fractions"].std(axis=0).mean()
+    var_noniid = stats_noniid["class_fractions"].std(axis=0).mean()
+    assert var_noniid > 2 * var_iid
+
+
+def test_client_dataset_cycles():
+    imgs, labels = make_fmnist_like(100, seed=0)
+    ds = ClientDataset(imgs, labels, batch=32, seed=0)
+    seen = set()
+    for _ in range(10):
+        b = ds.next_batch()
+        assert b["images"].shape[0] == 32
+        seen.update(b["labels"].tolist())
+    assert len(seen) > 1
+
+
+def test_token_stream_markov():
+    toks = make_token_stream(5000, 512, seed=0)
+    assert toks.min() >= 0 and toks.max() < 512
+    # Markov structure: bigram distribution is sparse
+    big = set(zip(toks[:-1].tolist(), toks[1:].tolist()))
+    assert len(big) < 512 * 16

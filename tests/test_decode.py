@@ -1,0 +1,100 @@
+"""Serving-path consistency: chunked scans == stepwise recurrence;
+prefill cache -> decode continues the full forward exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import encdec, rwkv as rwkv_mod, ssm as ssm_mod, transformer as tfm
+
+
+def test_mamba2_chunked_equals_stepwise():
+    cfg = get_smoke("zamba2-2.7b").replace(dtype="float32", ssm_chunk=8)
+    p = ssm_mod.mamba2_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model)) * 0.5
+    y_chunk = ssm_mod.mamba2_forward(p, x, cfg)
+    cache = ssm_mod.make_ssm_cache(cfg, 2, jnp.float32)
+    ys = []
+    for t in range(32):
+        yt, cache = ssm_mod.mamba2_decode(p, x[:, t:t + 1], cache, cfg)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y_chunk),
+                               np.asarray(jnp.concatenate(ys, 1)), atol=1e-4)
+
+
+def test_rwkv6_chunked_equals_stepwise():
+    cfg = get_smoke("rwkv6-1.6b").replace(dtype="float32")
+    p = rwkv_mod.rwkv6_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model)) * 0.5
+    y_chunk = rwkv_mod.rwkv6_forward(p, x, cfg, chunk=8)
+    cache = rwkv_mod.make_rwkv_cache(cfg, 2, jnp.float32)
+    ys = []
+    for t in range(32):
+        yt, cache = rwkv_mod.rwkv6_decode(p, x[:, t:t + 1], cache, cfg)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y_chunk),
+                               np.asarray(jnp.concatenate(ys, 1)), atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "rwkv6-1.6b", "zamba2-2.7b"])
+def test_prefill_then_decode_matches_forward(arch):
+    cfg = get_smoke(arch).replace(dtype="float32")
+    p = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+    S = 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, S + 4), 0, cfg.vocab_size)
+    logits_all, _ = tfm.lm_forward(p, toks, cfg)
+    lg, cache = tfm.lm_prefill(p, toks[:, :S], cfg, cache_len=32)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(logits_all[:, S - 1]),
+                               atol=2e-4)
+    for t in range(S, S + 4):
+        lg, cache = tfm.lm_decode(p, toks[:, t:t + 1], cache, jnp.int32(t), cfg)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(logits_all[:, t]),
+                                   atol=2e-4)
+
+
+def test_moe_prefill_decode_high_capacity():
+    """With generous capacity (no drops), MoE decode matches forward."""
+    cfg = get_smoke("qwen2-moe-a2.7b").replace(dtype="float32", capacity_factor=8.0)
+    p = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+    S = 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, S + 2), 0, cfg.vocab_size)
+    logits_all, _ = tfm.lm_forward(p, toks, cfg)
+    lg, cache = tfm.lm_prefill(p, toks[:, :S], cfg, cache_len=32)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(logits_all[:, S - 1]),
+                               atol=2e-4)
+    for t in range(S, S + 2):
+        lg, cache = tfm.lm_decode(p, toks[:, t:t + 1], cache, jnp.int32(t), cfg)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(logits_all[:, t]),
+                                   atol=2e-4)
+
+
+def test_sliding_window_ring_cache():
+    """Decode with cache_len == window < seq keeps only the last W tokens
+    and matches a windowed full forward."""
+    cfg = get_smoke("tinyllama-1.1b").replace(dtype="float32", sliding_window=8)
+    p = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+    T = 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, T), 0, cfg.vocab_size)
+    logits_all, _ = tfm.lm_forward(p, toks, cfg)   # windowed via cfg
+    cache = tfm.init_lm_cache(cfg, 1, cache_len=8)
+    for t in range(T):
+        lg, cache = tfm.lm_decode(p, toks[:, t:t + 1], cache, jnp.int32(t), cfg)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(logits_all[:, t]), atol=2e-4,
+                                   err_msg=f"t={t}")
+
+
+def test_whisper_prefill_decode():
+    cfg = get_smoke("whisper-tiny").replace(dtype="float32")
+    p = encdec.init_encdec(jax.random.PRNGKey(0), cfg)
+    frames = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.n_audio_frames, cfg.d_model))
+    T = 12
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, T), 0, cfg.vocab_size)
+    enc = encdec.encode(p, frames, cfg)
+    logits_all = encdec.decode_train(p, toks, enc, cfg)
+    cache = encdec.init_encdec_cache(p, enc, cfg, 2, cache_len=16)
+    for t in range(T):
+        lg, cache = encdec.encdec_decode(p, toks[:, t:t + 1], cache, jnp.int32(t), cfg)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(logits_all[:, t]), atol=2e-4)

@@ -1,0 +1,172 @@
+"""FairEnergy controller unit tests (Algorithm 1 pieces)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ChannelConfig, FairEnergyConfig
+from repro.core import baselines as bl
+from repro.core.channel import comm_energy, shannon_rate
+from repro.core.fairenergy import init_state, solve_round
+from repro.core.fairness import contribution_score, ema_update
+from repro.core.gss import golden_section_minimize
+
+N0 = ChannelConfig().noise_density
+
+
+# ------------------------------------------------------------------- GSS ----
+def test_gss_quadratic():
+    f = lambda x: (x - 3.7) ** 2 + 1.0
+    x, fx = golden_section_minimize(f, jnp.zeros(()), 10.0, iters=60)
+    # fp32 GSS accuracy limit is sqrt(eps) in x (~3e-4 here)
+    assert float(x) == pytest.approx(3.7, abs=1e-3)
+    assert float(fx) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_gss_batched():
+    targets = jnp.asarray([1.0, 2.5, 9.0])
+    f = lambda x: (x - targets) ** 2
+    x, _ = golden_section_minimize(f, jnp.zeros(3), 10.0, iters=60)
+    np.testing.assert_allclose(np.asarray(x), [1.0, 2.5, 9.0], atol=1e-3)
+
+
+def test_gss_finds_bandwidth_min():
+    """phi(B) = E(B) + lam*B is unimodal; GSS must beat a dense grid scan."""
+    P, h, s_bits, i_bits, lam = 2e-4, 1e-9, 6.4e7, 2e6, 1e-10
+    phi = lambda B: comm_energy(0.5, B, P, h, s_bits, i_bits, N0) + lam * B
+    x, fx = golden_section_minimize(phi, jnp.asarray(1e3), 1e7, iters=80)
+    grid = np.asarray(phi(jnp.linspace(1e3, 1e7, 20000)))
+    assert float(fx) <= grid.min() * 1.0001
+
+
+# --------------------------------------------------------------- channel ----
+def test_rate_monotone_in_bandwidth_and_saturates():
+    B = jnp.linspace(1e5, 9e5, 9)   # evenly spaced
+    r = shannon_rate(B, 2e-4, 1e-9, N0)
+    assert (jnp.diff(r) > 0).all()
+    # rate is concave in B: per-step gains shrink
+    gains = np.diff(np.asarray(r))
+    assert gains[-1] < gains[0]
+
+
+def test_energy_decreasing_in_bandwidth():
+    B = jnp.linspace(1e4, 1e7, 100)
+    e = comm_energy(0.5, B, 2e-4, 1e-9, 6.4e7, 2e6, N0)
+    assert (jnp.diff(e) < 0).all()
+
+
+def test_energy_increasing_in_gamma():
+    g = jnp.linspace(0.1, 1.0, 10)
+    e = comm_energy(g, 2e5, 2e-4, 1e-9, 6.4e7, 2e6, N0)
+    assert (jnp.diff(e) > 0).all()
+
+
+# ------------------------------------------------------------- fairness ----
+def test_ema_definition():
+    q = ema_update(jnp.asarray(0.5), jnp.asarray(1.0), 0.6)
+    assert float(q) == pytest.approx(0.6 * 0.5 + 0.4 * 1.0)
+
+
+def test_score_definition():
+    s = contribution_score(jnp.asarray(3.0), jnp.asarray(0.5))
+    assert float(s) == 1.5
+
+
+# ------------------------------------------------------------ controller ----
+def _round_inputs(n=20, seed=0):
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.uniform(0.5, 5.0, n), jnp.float32)
+    h = jnp.asarray(1e-3 * rng.uniform(50, 500, n) ** -3.0 *
+                    rng.exponential(1.0, n), jnp.float32)
+    P = jnp.asarray(rng.uniform(1e-4, 3e-4, n), jnp.float32)
+    return u, h, P
+
+
+def _solve(fe, u, h, P, state=None, n=20):
+    state = state or init_state(fe, n)
+    return solve_round(u, h, P, state, fe_cfg=fe, s_bits=6.4e7, i_bits=2e6,
+                       b_tot=10e6, n0=N0)
+
+
+def test_bandwidth_budget_respected():
+    fe = FairEnergyConfig(eta=1e-3, eta_auto=False)
+    u, h, P = _round_inputs()
+    dec, _ = _solve(fe, u, h, P)
+    assert float(dec.bw_used) <= 10e6 * (1 + 1e-6)
+
+
+def test_selected_have_positive_gamma_and_bandwidth():
+    fe = FairEnergyConfig(eta=1e-3, eta_auto=False)
+    u, h, P = _round_inputs()
+    dec, _ = _solve(fe, u, h, P)
+    x = np.asarray(dec.x)
+    if x.any():
+        assert (np.asarray(dec.gamma)[x] >= fe.gamma_min - 1e-6).all()
+        assert (np.asarray(dec.bandwidth)[x] > 0).all()
+    assert (np.asarray(dec.gamma)[~x] == 0).all()
+    assert (np.asarray(dec.bandwidth)[~x] == 0).all()
+    assert (np.asarray(dec.energy)[~x] == 0).all()
+
+
+def test_threshold_rule_selects_high_score_clients():
+    """With two identical-channel clients, the higher-norm one must be
+    selected whenever the lower-norm one is."""
+    fe = FairEnergyConfig(eta=5e-4, eta_auto=False, pi_min=0.0)
+    n = 8
+    u = jnp.asarray([0.1, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0], jnp.float32)
+    h = jnp.full((n,), 1e-9, jnp.float32)
+    P = jnp.full((n,), 2e-4, jnp.float32)
+    dec, _ = _solve(fe, u, h, P, n=n)
+    x = np.asarray(dec.x)
+    # selection must be an upper set in score order
+    if x.any():
+        first = np.argmax(x)
+        assert x[first:].all(), x
+
+
+def test_fairness_pressure_revives_starved_clients():
+    """A client with q far below pi_min accumulates dual pressure and gets
+    selected within a few rounds even with a weak update."""
+    fe = FairEnergyConfig(eta=1e-4, eta_auto=False, alpha_mu=5e-3, pi_min=0.3)
+    n = 10
+    rng = np.random.default_rng(1)
+    u = jnp.asarray([0.01] + [5.0] * (n - 1), jnp.float32)   # client 0: tiny updates
+    h = jnp.asarray(1e-9 * np.ones(n), jnp.float32)
+    P = jnp.full((n,), 2e-4, jnp.float32)
+    state = init_state(fe, n)
+    state = state._replace(q=jnp.zeros(n))                   # everyone starved
+    selected0 = False
+    for r in range(25):
+        dec, state = solve_round(u, h, P, state, fe_cfg=fe, s_bits=6.4e7,
+                                 i_bits=2e6, b_tot=10e6, n0=N0)
+        if bool(dec.x[0]):
+            selected0 = True
+            break
+    assert selected0, "fairness dual never revived the starved client"
+
+
+def test_ema_state_updates():
+    fe = FairEnergyConfig(eta=1e-3, eta_auto=False)
+    u, h, P = _round_inputs()
+    state0 = init_state(fe, 20)
+    dec, state1 = _solve(fe, u, h, P, state=state0)
+    expected = fe.rho * np.asarray(state0.q) + (1 - fe.rho) * np.asarray(dec.x)
+    np.testing.assert_allclose(np.asarray(state1.q), expected, atol=1e-6)
+
+
+# -------------------------------------------------------------- baselines ----
+def test_scoremax_selects_top_k():
+    u = np.asarray([1.0, 5.0, 3.0, 2.0, 4.0])
+    h = np.full(5, 1e-9)
+    P = np.full(5, 2e-4)
+    dec = bl.score_max(u, h, P, 2, b_tot=10e6, s_bits=6.4e7, i_bits=2e6, n0=N0)
+    assert set(np.nonzero(np.asarray(dec.x))[0]) == {1, 4}
+    assert (np.asarray(dec.gamma)[np.asarray(dec.x)] == 1.0).all()
+
+
+def test_ecorandom_selects_k_random():
+    rng = np.random.default_rng(0)
+    dec = bl.eco_random(rng, 10, 3, gamma_min_obs=0.1, b_min_obs=1e5,
+                        h=np.full(10, 1e-9), P=np.full(10, 2e-4),
+                        s_bits=6.4e7, i_bits=2e6, n0=N0)
+    assert int(np.asarray(dec.x).sum()) == 3

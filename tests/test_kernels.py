@@ -1,0 +1,113 @@
+"""Per-kernel validation: shape/dtype sweeps, Pallas (interpret=True) vs
+the pure-jnp ref oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.score_norm.ops import l2_norm
+from repro.kernels.score_norm.ref import l2_norm_ref
+from repro.kernels.topk_sparsify.ops import block_topk_sparsify
+from repro.kernels.topk_sparsify.ref import block_topk_ref
+
+
+# ------------------------------------------------------------------ topk ----
+@pytest.mark.parametrize("n,block", [(4096, 4096), (8192, 2048), (10000, 4096),
+                                     (300, 256), (65536, 4096)])
+@pytest.mark.parametrize("gamma", [0.1, 0.37, 0.5, 1.0])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_matches_ref(n, block, gamma, dtype):
+    v = jax.random.normal(jax.random.PRNGKey(n + int(gamma * 10)), (n,), dtype)
+    got, k1 = block_topk_sparsify(v, gamma, block=block)
+    want, k2 = block_topk_ref(v, gamma, block=block)
+    assert k1 == k2
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_topk_keeps_exactly_k_per_block():
+    v = jax.random.normal(jax.random.PRNGKey(0), (8192,))
+    got, k = block_topk_sparsify(v, 0.25, block=2048)
+    nnz = np.asarray(got != 0).reshape(4, 2048).sum(axis=1)
+    assert (nnz == k).all()
+
+
+def test_topk_with_ties():
+    v = jnp.array([1.0, -1.0, 1.0, 0.5, 1.0, 0.0, -1.0, 0.25] * 32)
+    got, k = block_topk_sparsify(v, 0.5, block=256)
+    want, _ = block_topk_ref(v, 0.5, block=256)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int((got != 0).sum()) == k
+
+
+def test_topk_keeps_largest_magnitudes():
+    v = jnp.asarray(np.random.default_rng(0).normal(size=4096).astype(np.float32))
+    got, k = block_topk_sparsify(v, 0.1, block=4096)
+    kept = np.abs(np.asarray(v))[np.asarray(got != 0)]
+    dropped = np.abs(np.asarray(v))[np.asarray(got == 0)]
+    assert kept.min() >= dropped.max() - 1e-6
+
+
+# ------------------------------------------------------------- score norm ----
+@pytest.mark.parametrize("n", [1, 100, 4096, 65536, 1 << 20])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l2_norm(n, dtype):
+    v = jax.random.normal(jax.random.PRNGKey(n), (n,), dtype)
+    got = float(l2_norm(v))
+    want = float(l2_norm_ref(v))
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+# ------------------------------------------------------ flash attention ----
+@pytest.mark.parametrize("B,S,H,KV,D", [
+    (2, 512, 8, 2, 64), (1, 1024, 4, 4, 128), (2, 512, 6, 6, 64),
+    (1, 2048, 8, 1, 64),
+])
+def test_flash_causal(B, S, H, KV, D):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D)) * 0.3
+    k = jax.random.normal(ks[1], (B, S, KV, D)) * 0.3
+    v = jax.random.normal(ks[2], (B, S, KV, D)) * 0.3
+    got = flash_attention(q, k, v, causal=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6)
+
+
+@pytest.mark.parametrize("window", [128, 256])
+def test_flash_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 1024, 4, 64)) * 0.3
+    k = jax.random.normal(ks[1], (1, 1024, 2, 64)) * 0.3
+    v = jax.random.normal(ks[2], (1, 1024, 2, 64)) * 0.3
+    got = flash_attention(q, k, v, causal=True, window=window)
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6)
+
+
+def test_flash_bfloat16():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = (jax.random.normal(ks[0], (1, 512, 4, 64)) * 0.3).astype(jnp.bfloat16)
+    k = (jax.random.normal(ks[1], (1, 512, 4, 64)) * 0.3).astype(jnp.bfloat16)
+    v = (jax.random.normal(ks[2], (1, 512, 4, 64)) * 0.3).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v)
+    want = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2)
+
+
+def test_model_flash_path_matches_direct():
+    """The model-internal chunked flash (jnp custom-vjp) vs direct."""
+    import repro.models.attention as A
+    from repro.configs import get_smoke
+    cfg = get_smoke("tinyllama-1.1b").replace(dtype="float32")
+    p = A.attention_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 2048, cfg.d_model)) * 0.3
+    y_flash = A.attention_forward(p, x, cfg)
+    old = A._FLASH_THRESHOLD
+    A._FLASH_THRESHOLD = 10 ** 9
+    try:
+        y_direct = A.attention_forward(p, x, cfg)
+    finally:
+        A._FLASH_THRESHOLD = old
+    np.testing.assert_allclose(np.asarray(y_flash), np.asarray(y_direct), atol=2e-5)

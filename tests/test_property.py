@@ -1,0 +1,140 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ChannelConfig, FairEnergyConfig
+from repro.core.channel import comm_energy, shannon_rate
+from repro.core.fairness import contribution_score, ema_update
+from repro.core.fairenergy import init_state, solve_round
+from repro.core.gss import golden_section_minimize
+from repro.fl.compression import dequantize_int8, quantize_int8, payload_bits
+from repro.kernels.topk_sparsify.ref import block_topk_ref
+
+N0 = ChannelConfig().noise_density
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# --------------------------------------------------------------- fairness ----
+@given(q0=st.floats(0, 1), rho=st.floats(0.01, 0.99),
+       xs=st.lists(st.booleans(), min_size=1, max_size=50))
+@settings(**SETTINGS)
+def test_ema_stays_in_unit_interval(q0, rho, xs):
+    q = jnp.asarray(q0)
+    for x in xs:
+        q = ema_update(q, jnp.asarray(float(x)), rho)
+        assert 0.0 <= float(q) <= 1.0
+
+
+@given(rho=st.floats(0.05, 0.95), n=st.integers(5, 40))
+@settings(**SETTINGS)
+def test_always_selected_ema_converges_to_one(rho, n):
+    q = jnp.asarray(0.0)
+    for _ in range(n):
+        q = ema_update(q, jnp.asarray(1.0), rho)
+    assert float(q) >= 1.0 - rho ** n - 1e-6
+
+
+@given(norm=st.floats(0, 1e4), g1=st.floats(0.1, 1.0), g2=st.floats(0.1, 1.0))
+@settings(**SETTINGS)
+def test_score_monotone_in_gamma(norm, g1, g2):
+    lo, hi = sorted([g1, g2])
+    assert float(contribution_score(jnp.asarray(norm), jnp.asarray(lo))) <= \
+        float(contribution_score(jnp.asarray(norm), jnp.asarray(hi))) + 1e-9
+
+
+# ---------------------------------------------------------------- channel ----
+@given(P=st.floats(1e-5, 1e-2), h=st.floats(1e-13, 1e-6),
+       b1=st.floats(1e3, 1e7), b2=st.floats(1e3, 1e7))
+@settings(**SETTINGS)
+def test_rate_monotone_in_bandwidth(P, h, b1, b2):
+    lo, hi = sorted([b1, b2])
+    r_lo = float(shannon_rate(jnp.asarray(lo), P, h, N0))
+    r_hi = float(shannon_rate(jnp.asarray(hi), P, h, N0))
+    # fp32 tolerance: at SNR -> 0 the rate saturates at P h/(N0 ln2)
+    assert r_lo <= r_hi * (1 + 1e-3) + 1.0
+
+
+@given(P=st.floats(1e-5, 1e-3), h=st.floats(1e-12, 1e-7),
+       g=st.floats(0.1, 1.0), B=st.floats(1e4, 1e7))
+@settings(**SETTINGS)
+def test_energy_positive_and_finite(P, h, g, B):
+    e = float(comm_energy(jnp.asarray(g), B, P, h, 6.4e7, 2e6, N0))
+    assert np.isfinite(e) and e > 0
+
+
+# -------------------------------------------------------------------- GSS ----
+@given(center=st.floats(0.5, 9.5), scale=st.floats(0.1, 100.0))
+@settings(**SETTINGS)
+def test_gss_convex_quadratic(center, scale):
+    f = lambda x: scale * (x - center) ** 2
+    x, _ = golden_section_minimize(f, jnp.zeros(()), 10.0, iters=70)
+    assert abs(float(x) - center) < 5e-3   # fp32 sqrt(eps) limit
+
+
+# ------------------------------------------------------------- controller ----
+@given(seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_round_always_bandwidth_feasible(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 30))
+    fe = FairEnergyConfig(eta=float(rng.uniform(1e-5, 1e-2)), eta_auto=False)
+    u = jnp.asarray(rng.uniform(0.01, 10, n), jnp.float32)
+    h = jnp.asarray(1e-3 * rng.uniform(50, 500, n) ** -3.0 *
+                    rng.exponential(1.0, n), jnp.float32)
+    P = jnp.asarray(rng.uniform(1e-4, 3e-4, n), jnp.float32)
+    dec, state = solve_round(u, h, P, init_state(fe, n), fe_cfg=fe,
+                             s_bits=6.4e7, i_bits=2e6, b_tot=10e6, n0=N0)
+    assert float(dec.bw_used) <= 10e6 * (1 + 1e-6)
+    assert (np.asarray(state.q) >= 0).all() and (np.asarray(state.q) <= 1).all()
+    assert (np.asarray(dec.energy) >= 0).all()
+    assert float(state.lam) >= 0 and (np.asarray(state.mu) >= 0).all()
+
+
+# ------------------------------------------------------------ compression ----
+@given(n=st.integers(10, 5000), gamma=st.floats(0.05, 1.0),
+       seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_topk_nnz_bounded_by_gamma(n, gamma, seed):
+    v = jnp.asarray(np.random.default_rng(seed).normal(size=n).astype(np.float32))
+    out, k = block_topk_ref(v, gamma, block=1024)
+    nnz = int((out != 0).sum())
+    n_blocks = -(-n // 1024)
+    assert nnz <= k * n_blocks
+    # sparsified vector is a masked version of the original
+    mask = np.asarray(out != 0)
+    np.testing.assert_array_equal(np.asarray(out)[mask], np.asarray(v)[mask])
+
+
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-3, 1e3))
+@settings(**SETTINGS)
+def test_quantize_roundtrip_error_bound(seed, scale):
+    v = jnp.asarray(np.random.default_rng(seed).normal(size=256).astype(np.float32)) * scale
+    q, s = quantize_int8(v)
+    back = dequantize_int8(q, s)
+    max_err = float(jnp.abs(back - v).max())
+    assert max_err <= float(s) * 0.5 + 1e-9
+
+
+@given(gamma=st.floats(0.1, 1.0), n=st.integers(100, 10 ** 7))
+@settings(**SETTINGS)
+def test_payload_monotone(gamma, n):
+    assert payload_bits(n, gamma) <= payload_bits(n, 1.0)
+    assert payload_bits(n, gamma) >= payload_bits(n, 0.0)
+
+
+# ----------------------------------------------------------------- updates ----
+@given(seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_flatten_roundtrip(seed):
+    from repro.fl.updates import flatten_update, tree_spec, unflatten_update
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32)),
+            "b": {"c": jnp.asarray(rng.normal(size=7).astype(np.float32)),
+                  "d": jnp.asarray(rng.normal(size=(2, 2, 2)).astype(np.float32))}}
+    spec = tree_spec(tree)
+    vec = flatten_update(tree)
+    back = unflatten_update(vec, spec)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
