@@ -45,12 +45,12 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
         lg = cnn.cnn_forward(p, ti_j, cfg)
         return jnp.mean((jnp.argmax(lg, -1) == tl_j).astype(jnp.float32))
 
-    def make(strategy, **kw):
+    def make(controller, **kw):
         return FederatedTrainer(model_loss=loss_fn, model_params=params,
                                 client_datasets=datasets, eval_fn=eval_fn,
                                 fl_cfg=fl_cfg, fe_cfg=FairEnergyConfig(),
                                 ch_cfg=ChannelConfig(n_clients=n_clients),
-                                strategy=strategy, seed=seed, **kw)
+                                controller=controller, seed=seed, **kw)
     return make, fl_cfg
 
 

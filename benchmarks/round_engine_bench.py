@@ -1,0 +1,143 @@
+"""Microbenchmark: vectorized jitted round vs the seed's per-client Python
+loop, at the paper scale n_clients=50.
+
+Both paths run the identical workload — ``local_steps`` SGD steps per
+client on a small softmax model, block top-k sparsification of the
+selected updates, masked |D_i|-weighted aggregation — under the same
+ScoreMax decision rule (so controller solve cost is negligible and the
+round *mechanics* are what is timed):
+
+* ``loop``  — the seed implementation shape: a Python for-loop dispatching
+  the jitted single-client step per client, host-side selection, then a
+  per-selected-client flatten + ``block_topk`` + accumulate loop;
+* ``engine`` — the batched ``vmap`` client step (static local steps
+  unrolled) plus the
+  single jitted decide -> sparsify -> aggregate program
+  (``repro.fl.server.make_round_engine``).
+
+  PYTHONPATH=src python -m benchmarks.round_engine_bench
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ChannelConfig, FairEnergyConfig
+from repro.core.controllers import ControllerContext, make_controller
+from repro.fl import compression
+from repro.fl.client import local_update, make_batched_client_step, make_local_step
+from repro.fl.server import make_round_engine
+from repro.fl.updates import flatten_update, tree_spec, update_l2_norm
+
+N_CLIENTS = 50
+LOCAL_STEPS = 2
+BATCH = 32
+D_IN, D_HIDDEN, N_CLASSES = 64, 128, 10   # ~9.6k params
+
+
+def _setup(seed=0):
+    rng = np.random.default_rng(seed)
+    params = {"w1": jnp.asarray(rng.normal(size=(D_IN, D_HIDDEN)).astype(np.float32) * 0.05),
+              "w2": jnp.asarray(rng.normal(size=(D_HIDDEN, N_CLASSES)).astype(np.float32) * 0.05)}
+
+    def loss_fn(p, batch):
+        hid = jnp.tanh(batch["x"] @ p["w1"])
+        ll = jax.nn.log_softmax(hid @ p["w2"])
+        return -jnp.mean(jnp.take_along_axis(ll, batch["y"][:, None], 1)), {}
+
+    # one fixed stream of per-round stacked batches (shared by both paths)
+    x = rng.normal(size=(N_CLIENTS, LOCAL_STEPS, BATCH, D_IN)).astype(np.float32)
+    y = rng.integers(0, N_CLASSES, size=(N_CLIENTS, LOCAL_STEPS, BATCH))
+    batches = {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+    ch = ChannelConfig(n_clients=N_CLIENTS)
+    n_params = sum(int(np.prod(v.shape)) for v in params.values())
+    ctx = ControllerContext(n_clients=N_CLIENTS, b_tot=ch.bandwidth_total,
+                            s_bits=32.0 * n_params, i_bits=float(n_params),
+                            n0=ch.noise_density, fe_cfg=FairEnergyConfig(),
+                            fixed_k=10)
+    controller = make_controller("scoremax", ctx)
+    h = jnp.asarray(1e-3 * rng.uniform(50, 500, N_CLIENTS) ** -3.0, jnp.float32)
+    P = jnp.asarray(rng.uniform(1e-4, 3e-4, N_CLIENTS), jnp.float32)
+    weights = jnp.full((N_CLIENTS,), 1.0 / N_CLIENTS, jnp.float32)
+    return params, loss_fn, batches, controller, h, P, weights
+
+
+class _ListDataset:
+    """Feeds pre-drawn [steps, batch, ...] arrays like a ClientDataset."""
+
+    def __init__(self, batches, i):
+        self._b = [{k: np.asarray(v[i, s]) for k, v in batches.items()}
+                   for s in range(LOCAL_STEPS)]
+        self._s = 0
+
+    def next_batch(self):
+        b = self._b[self._s % LOCAL_STEPS]
+        self._s += 1
+        return b
+
+
+def loop_round(params, loss_fn, batches, controller, h, P, weights, local_step):
+    """The seed ``FederatedTrainer.run_round`` shape, minus eval."""
+    datasets = [_ListDataset(batches, i) for i in range(N_CLIENTS)]
+    updates, u_norms = [], np.zeros(N_CLIENTS)
+    for i, ds in enumerate(datasets):
+        delta, _ = local_update(params, ds, local_step, LOCAL_STEPS)
+        updates.append(delta)
+        u_norms[i] = float(update_l2_norm(delta))
+    from repro.core.controllers import RoundObservation
+    obs = RoundObservation(u_norms=jnp.asarray(u_norms, jnp.float32), h=h, P=P,
+                           round=jnp.int32(0), key=jax.random.PRNGKey(0))
+    dec, _ = controller.decide(obs, ())
+    x = np.asarray(dec.x)
+    gamma = np.asarray(dec.gamma)
+    agg, wsum = None, 0.0
+    for i in np.nonzero(x)[0]:
+        vec = flatten_update(updates[i])
+        vec, _ = compression.block_topk(vec, float(max(gamma[i], 1e-6)))
+        w = float(weights[i])
+        agg = vec * w if agg is None else agg + vec * w
+        wsum += w
+    return jax.block_until_ready(agg / wsum)
+
+
+def _time_ms(fn, warmup=2, iters=10):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e3
+
+
+def bench(iters: int = 10):
+    params, loss_fn, batches, controller, h, P, weights = _setup()
+    spec = tree_spec(params)
+
+    local_step = make_local_step(loss_fn, 0.05)
+    ms_loop = _time_ms(lambda: loop_round(params, loss_fn, batches, controller,
+                                          h, P, weights, local_step), iters=iters)
+
+    client_step = make_batched_client_step(loss_fn, 0.05)
+    engine = make_round_engine(controller=controller, spec=spec,
+                               weights=weights, server_lr=1.0)
+    key = jax.random.PRNGKey(0)
+
+    def vec_round():
+        updates, u_norms, _ = client_step(params, batches)
+        new_params, dec, _ = engine(params, updates, u_norms, h, P,
+                                    jnp.int32(0), key, ())
+        return jax.block_until_ready(new_params)
+
+    ms_vec = _time_ms(vec_round, iters=iters)
+    return [("round_loop_N50", ms_loop * 1e3, f"{LOCAL_STEPS} steps/client"),
+            ("round_engine_N50", ms_vec * 1e3, f"speedup {ms_loop / ms_vec:.1f}x")]
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, extra in bench():
+        print(f"{name},{us:.1f},{extra}")

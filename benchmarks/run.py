@@ -91,8 +91,10 @@ def main() -> None:
     ap.add_argument("--clients", type=int, default=20)
     args, _ = ap.parse_known_args()
 
+    from benchmarks.round_engine_bench import bench as bench_round_engine
     print("name,us_per_call,derived")
-    for name, us, extra in bench_kernels() + bench_controller():
+    for name, us, extra in (bench_kernels() + bench_controller()
+                            + bench_round_engine(iters=5)):
         print(f"{name},{us:.1f},{extra}")
 
     bench_roofline()

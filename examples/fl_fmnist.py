@@ -4,6 +4,10 @@ FairEnergy vs ScoreMax vs EcoRandom on non-IID FMNIST-like data.
   PYTHONPATH=src python examples/fl_fmnist.py [--clients 20 --rounds 40]
 """
 import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.fl_experiments import main
 

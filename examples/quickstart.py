@@ -1,30 +1,47 @@
-"""Quickstart: FairEnergy controller on a simulated wireless FL round.
+"""Quickstart: per-round controllers on a simulated wireless FL uplink.
+
+Controllers are registry entries sharing one API — ``init(n) -> state``,
+``decide(RoundObservation, state) -> (RoundDecision, state)`` — so
+FairEnergy (paper Algorithm 1) and every baseline drop into the same loop
+(and into ``FederatedTrainer(..., controller=<name>)``).
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ChannelConfig, FairEnergyConfig
 from repro.core.channel import WirelessNetwork
-from repro.core.fairenergy import init_state, solve_round
+from repro.core.controllers import (ControllerContext, RoundObservation,
+                                    available_controllers, make_controller)
 
 N = 20
 ch = ChannelConfig(n_clients=N)
-fe = FairEnergyConfig(eta=1e-3, eta_auto=False)
 net = WirelessNetwork(ch, seed=0)
-state = init_state(fe, N)
+ctx = ControllerContext(n_clients=N, b_tot=ch.bandwidth_total,
+                        s_bits=32.0 * 2e6, i_bits=2e6, n0=ch.noise_density,
+                        fe_cfg=FairEnergyConfig(eta=1e-3, eta_auto=False),
+                        fixed_k=5)
 
+print("registered controllers:", ", ".join(available_controllers()), "\n")
 rng = np.random.default_rng(0)
-print(f"{'round':>5s} {'selected':>9s} {'mean gamma':>11s} {'bw used MHz':>12s} {'energy mJ':>10s}")
-for r in range(8):
-    u_norms = jnp.asarray(rng.uniform(0.5, 5.0, N), jnp.float32)   # client update norms
-    h = jnp.asarray(net.gains(r), jnp.float32)
-    dec, state = solve_round(u_norms, h, jnp.asarray(net.power, jnp.float32),
-                             state, fe_cfg=fe, s_bits=32.0 * 2e6, i_bits=2e6,
-                             b_tot=ch.bandwidth_total, n0=ch.noise_density)
-    sel = np.asarray(dec.x)
-    g = np.asarray(dec.gamma)[sel]
-    print(f"{r:5d} {int(sel.sum()):9d} {g.mean() if sel.any() else 0:11.2f} "
-          f"{float(dec.bw_used)/1e6:12.2f} {float(np.asarray(dec.energy).sum())*1e3:10.3f}")
-print("\nEMA participation q:", np.asarray(state.q).round(2))
+P = jnp.asarray(net.power, jnp.float32)
+
+for name in ("fairenergy", "scoremax", "ecorandom"):
+    ctrl = make_controller(name, ctx)
+    state = ctrl.init(N)
+    print(f"--- {name} ---")
+    print(f"{'round':>5s} {'selected':>9s} {'mean gamma':>11s} {'bw used MHz':>12s} {'energy mJ':>10s}")
+    for r in range(4):
+        obs = RoundObservation(
+            u_norms=jnp.asarray(rng.uniform(0.5, 5.0, N), jnp.float32),
+            h=jnp.asarray(net.gains(r), jnp.float32), P=P,
+            round=jnp.int32(r), key=jax.random.fold_in(jax.random.PRNGKey(0), r))
+        dec, state = ctrl.decide(obs, state)
+        sel = np.asarray(dec.x)
+        g = np.asarray(dec.gamma)[sel]
+        print(f"{r:5d} {int(sel.sum()):9d} {g.mean() if sel.any() else 0:11.2f} "
+              f"{float(dec.bw_used)/1e6:12.2f} "
+              f"{float(np.asarray(dec.energy).sum())*1e3:10.3f}")
+    print()

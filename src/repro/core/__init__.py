@@ -1,3 +1,6 @@
 """FairEnergy core: the paper's contribution."""
-from . import baselines, channel, fairness, gss  # noqa: F401
+from . import channel, controllers, fairness, gss  # noqa: F401
+from .controllers import (ControllerContext, RoundObservation,  # noqa: F401
+                          available_controllers, make_controller,
+                          register_controller)
 from .fairenergy import ControllerState, RoundDecision, init_state, solve_round  # noqa: F401

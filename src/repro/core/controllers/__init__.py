@@ -1,0 +1,20 @@
+"""Registry-based per-round controllers (selection + bandwidth + compression).
+
+Usage:
+
+    from repro.core.controllers import ControllerContext, make_controller
+    ctx = ControllerContext(n_clients=50, b_tot=10e6, s_bits=6.4e7,
+                            i_bits=2e6, n0=4e-21, fe_cfg=FairEnergyConfig())
+    ctrl = make_controller("fairenergy", ctx)
+    state = ctrl.init(50)
+    dec, state = ctrl.decide(obs, state)
+
+Registered strategies: ``fairenergy`` (paper Algorithm 1), ``scoremax``,
+``ecorandom``, ``randomfull``, ``channelgreedy``. Add your own with
+``@register_controller("name")`` — see ``base.py`` for the protocol.
+"""
+from .base import (Controller, ControllerContext, RoundDecision,  # noqa: F401
+                   RoundObservation, available_controllers, make_controller,
+                   masked_decision, register_controller, topk_mask)
+from . import baselines, fairenergy  # noqa: F401  (registration side effects)
+from .fairenergy import FairEnergy  # noqa: F401

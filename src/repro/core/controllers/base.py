@@ -1,0 +1,144 @@
+"""Controller API: observation/decision types, context, and the registry.
+
+A *controller* is the per-round decision maker of the FL system: given a
+``RoundObservation`` (update norms, channel gains, transmit powers, round
+index, PRNG key) it returns a ``RoundDecision`` (selection x, sparsity
+gamma, bandwidth B, per-client energy) plus its carried state:
+
+    init(n_clients) -> state
+    decide(obs: RoundObservation, state) -> (RoundDecision, state)
+
+Both methods must be pure JAX (traceable under ``jax.jit``): any
+randomness comes from ``obs.key``, never from host-side RNGs, so the whole
+decide -> sparsify -> aggregate round can be one jitted program (see
+``repro.fl.server.make_round_engine``).
+
+Controllers register under a name with ``@register_controller("name")``
+and are built from a ``ControllerContext`` — the static per-run constants
+(bandwidth budget, payload sizes, noise density, baseline knobs) shared by
+every strategy.  ``make_controller`` accepts either a registry name or an
+already-constructed instance, so callers can plug in custom controllers
+without touching the trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+from ..channel import comm_energy
+from ..fairenergy import RoundDecision
+
+Array = jnp.ndarray
+
+
+class RoundObservation(NamedTuple):
+    """Everything a controller may look at in round r."""
+    u_norms: Array    # [N] — ||u_i^r||_2 reported by each client
+    h: Array          # [N] — instantaneous channel gains h_i^r
+    P: Array          # [N] — transmit powers P_i
+    round: Array      # scalar int32 — round index r
+    key: Array        # PRNG key for this round (stochastic controllers)
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerContext:
+    """Static per-run constants controllers are constructed from.
+
+    ``fe_cfg`` is the FairEnergy hyper-parameter dataclass (also supplies
+    gamma bounds for baselines); ``fixed_k``/``eco_gamma``/``eco_bandwidth``
+    parameterize the paper's fixed-K baselines.
+    """
+    n_clients: int
+    b_tot: float                       # total uplink bandwidth B_tot (Hz)
+    s_bits: float                      # full-precision payload S (bits)
+    i_bits: float                      # index/mask overhead I (bits)
+    n0: float                          # noise density N0 (W/Hz)
+    fe_cfg: Any = None
+    fixed_k: Optional[int] = None
+    eco_gamma: float = 0.1
+    eco_bandwidth: Optional[float] = None
+
+    @property
+    def k(self) -> int:
+        """Baseline selection size K (paper: mean FairEnergy count)."""
+        return self.fixed_k if self.fixed_k is not None else max(1, self.n_clients // 5)
+
+    @property
+    def eco_bw(self) -> float:
+        """EcoRandom per-client bandwidth floor. ``is None`` check so an
+        explicit 0.0 is honoured rather than silently replaced."""
+        if self.eco_bandwidth is not None:
+            return self.eco_bandwidth
+        return self.b_tot / max(self.fixed_k or 10, 1)
+
+
+@runtime_checkable
+class Controller(Protocol):
+    """Structural type every strategy implements."""
+
+    def init(self, n_clients: int) -> Any: ...
+
+    def decide(self, obs: RoundObservation, state: Any) -> tuple[RoundDecision, Any]: ...
+
+
+_REGISTRY: dict[str, Callable[[ControllerContext], Controller]] = {}
+
+
+def register_controller(name: str):
+    """Class decorator: ``@register_controller("scoremax")``. The class must
+    be constructible as ``cls(ctx: ControllerContext)``."""
+
+    def deco(cls):
+        if name in _REGISTRY:
+            raise ValueError(f"controller {name!r} already registered")
+        _REGISTRY[name] = cls
+        cls.name = name
+        return cls
+
+    return deco
+
+
+def available_controllers() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def make_controller(spec: "str | Controller", ctx: ControllerContext) -> Controller:
+    """Resolve a registry name or pass through a ready instance."""
+    if isinstance(spec, str):
+        try:
+            cls = _REGISTRY[spec]
+        except KeyError:
+            raise KeyError(f"unknown controller {spec!r}; available: "
+                           f"{available_controllers()}") from None
+        return cls(ctx)
+    if not isinstance(spec, Controller):
+        raise TypeError(f"controller must be a registry name or implement "
+                        f"init/decide, got {type(spec).__name__}")
+    return spec
+
+
+# ------------------------------------------------------------ helpers ----
+def topk_mask(scores: Array, k: int) -> Array:
+    """Boolean mask of the k largest entries; ties break toward the lower
+    index (matches ``np.argsort(-scores)[:k]``)."""
+    n = scores.shape[0]
+    order = jnp.argsort(-scores)                      # stable
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    return ranks < k
+
+
+def masked_decision(x: Array, gamma: Array, bandwidth: Array,
+                    obs: RoundObservation, ctx: ControllerContext) -> RoundDecision:
+    """Assemble a ``RoundDecision`` from raw (x, gamma, B) arrays: charges
+    E_i = P_i (gamma_i S + I)/R_i(B_i) on selected clients, zeroes
+    gamma/B/E elsewhere."""
+    xf = x.astype(jnp.float32)
+    energy = xf * comm_energy(jnp.asarray(gamma), jnp.asarray(bandwidth),
+                              obs.P, obs.h, ctx.s_bits, ctx.i_bits, ctx.n0)
+    return RoundDecision(x=x, gamma=jnp.asarray(gamma) * xf,
+                         bandwidth=jnp.asarray(bandwidth) * xf, energy=energy,
+                         lam=jnp.float32(0), mu=jnp.zeros_like(xf),
+                         n_inner=jnp.int32(0),
+                         bw_used=jnp.sum(jnp.asarray(bandwidth) * xf))

@@ -1,0 +1,82 @@
+"""Pure-JAX baseline controllers (paper Sec. VII).
+
+* **ScoreMax** — top-K contribution scores, full precision (gamma=1),
+  B_tot split equally among the K selected. Isolates importance-driven
+  selection [refs 8, 21 in the paper].
+* **EcoRandom** — random K clients, every one transmitting at the minimum
+  compression ratio and minimum bandwidth observed for FairEnergy
+  (communication-cost floor) [refs 4, 22].
+* extras (beyond-paper sanity baselines): **RandomFull** (random K,
+  gamma=1, equal bandwidth) and **ChannelGreedy** (FedCS-style
+  best-channel first).
+
+K is fixed to the mean number of devices FairEnergy selects per round
+("to ensure a fair comparison", Sec. VII).
+
+All four are stateless (``init`` returns ``()``) and fully traceable:
+random selection draws from ``obs.key`` via ``jax.random`` — no host-side
+``np.random.Generator`` side channel — so they compose into the jitted
+round engine and are reproducible from the trainer seed alone.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import (ControllerContext, RoundObservation, masked_decision,
+                   register_controller, topk_mask)
+
+
+class _StatelessController:
+    def __init__(self, ctx: ControllerContext):
+        self.ctx = ctx
+
+    def init(self, n_clients: int):
+        return ()
+
+    def _random_k_mask(self, obs: RoundObservation):
+        """Uniform random K-subset: mask the K smallest of N iid uniforms."""
+        u = jax.random.uniform(obs.key, (self.ctx.n_clients,))
+        return topk_mask(-u, self.ctx.k)
+
+
+@register_controller("scoremax")
+class ScoreMax(_StatelessController):
+    def decide(self, obs: RoundObservation, state):
+        ctx = self.ctx
+        x = topk_mask(obs.u_norms, ctx.k)
+        gamma = jnp.ones_like(obs.u_norms)
+        bw = jnp.full_like(obs.u_norms, ctx.b_tot / max(ctx.k, 1))
+        return masked_decision(x, gamma, bw, obs, ctx), state
+
+
+@register_controller("ecorandom")
+class EcoRandom(_StatelessController):
+    def decide(self, obs: RoundObservation, state):
+        ctx = self.ctx
+        x = self._random_k_mask(obs)
+        gamma = jnp.full_like(obs.u_norms, ctx.eco_gamma)
+        bw = jnp.full_like(obs.u_norms, ctx.eco_bw)
+        return masked_decision(x, gamma, bw, obs, ctx), state
+
+
+@register_controller("randomfull")
+class RandomFull(_StatelessController):
+    def decide(self, obs: RoundObservation, state):
+        ctx = self.ctx
+        x = self._random_k_mask(obs)
+        gamma = jnp.ones_like(obs.u_norms)
+        bw = jnp.full_like(obs.u_norms, ctx.b_tot / max(ctx.k, 1))
+        return masked_decision(x, gamma, bw, obs, ctx), state
+
+
+@register_controller("channelgreedy")
+class ChannelGreedy(_StatelessController):
+    """FedCS-like: pick the K best instantaneous channels, gamma=1."""
+
+    def decide(self, obs: RoundObservation, state):
+        ctx = self.ctx
+        x = topk_mask(obs.h, ctx.k)
+        gamma = jnp.ones_like(obs.h)
+        bw = jnp.full_like(obs.h, ctx.b_tot / max(ctx.k, 1))
+        return masked_decision(x, gamma, bw, obs, ctx), state

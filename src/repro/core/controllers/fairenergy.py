@@ -1,0 +1,57 @@
+"""FairEnergy as a registered controller.
+
+Thin adapter over ``repro.core.fairenergy.solve_round`` (the jitted
+Algorithm 1 solver) so the paper's controller plugs into the same registry
+surface as the baselines. ``decide`` forwards to ``solve_round`` verbatim
+— the regression test in ``tests/test_controllers.py`` pins the two to
+bit-for-bit identical decisions.
+
+eta_auto calibration (round 0: scale the score weight so the median score
+benefit matches the median energy cost at gamma=0.5, B=B_tot/N) is a
+host-side, one-shot step: ``calibrate`` freezes ``eta`` into the config.
+Callers embedding ``decide`` in a jitted program must calibrate before
+tracing (the trainer rebuilds its round engine after calibration).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..channel import comm_energy
+from ..fairenergy import init_state, solve_round
+from .base import ControllerContext, RoundObservation, register_controller
+
+
+@register_controller("fairenergy")
+class FairEnergy:
+    def __init__(self, ctx: ControllerContext):
+        if ctx.fe_cfg is None:
+            raise ValueError("FairEnergy controller requires ctx.fe_cfg")
+        self.ctx = ctx
+        self.fe_cfg = ctx.fe_cfg
+
+    def init(self, n_clients: int):
+        return init_state(self.fe_cfg, n_clients)
+
+    @property
+    def needs_calibration(self) -> bool:
+        return bool(self.fe_cfg.eta_auto)
+
+    def calibrate(self, u_norms, h, P) -> None:
+        """eta_auto: make the score benefit commensurate with energy cost —
+        eta := eta_rel * median_i E_i(gamma=.5, B=B_tot/N) / median_i s_i(.5)."""
+        ctx = self.ctx
+        e = np.asarray(comm_energy(
+            0.5, ctx.b_tot / ctx.n_clients,
+            jnp.asarray(P), jnp.asarray(h), ctx.s_bits, ctx.i_bits, ctx.n0))
+        s = 0.5 * np.asarray(u_norms)
+        eta = self.fe_cfg.eta_rel * float(np.median(e)) / max(float(np.median(s)), 1e-12)
+        self.fe_cfg = dataclasses.replace(self.fe_cfg, eta=eta, eta_auto=False)
+
+    def decide(self, obs: RoundObservation, state):
+        ctx = self.ctx
+        return solve_round(obs.u_norms, obs.h, obs.P, state,
+                           fe_cfg=self.fe_cfg, s_bits=ctx.s_bits,
+                           i_bits=ctx.i_bits, b_tot=ctx.b_tot, n0=ctx.n0)

@@ -9,8 +9,15 @@ class ClientDataset:
 
     def __init__(self, images: np.ndarray, labels: np.ndarray, batch: int, seed: int):
         assert len(images) == len(labels)
+        if len(labels) == 0:
+            raise ValueError("ClientDataset shard is empty — drop the client "
+                             "or re-draw the partition")
         self.images, self.labels = images, labels
-        self.batch = min(batch, len(labels))
+        # Batches are always exactly ``batch`` examples (shards smaller than
+        # a batch wrap around within the epoch) so per-client batches stack
+        # into the [n_clients, steps, batch, ...] layout the vectorized
+        # client step expects.
+        self.batch = batch
         self._rng = np.random.default_rng(seed)
         self._perm = self._rng.permutation(len(labels))
         self._cursor = 0
@@ -19,9 +26,14 @@ class ClientDataset:
         return len(self.labels)
 
     def next_batch(self) -> dict:
-        if self._cursor + self.batch > len(self._perm):
-            self._perm = self._rng.permutation(len(self.labels))
-            self._cursor = 0
-        idx = self._perm[self._cursor:self._cursor + self.batch]
-        self._cursor += self.batch
+        parts, need = [], self.batch
+        while need > 0:
+            if self._cursor >= len(self._perm):
+                self._perm = self._rng.permutation(len(self.labels))
+                self._cursor = 0
+            take = min(need, len(self._perm) - self._cursor)
+            parts.append(self._perm[self._cursor:self._cursor + take])
+            self._cursor += take
+            need -= take
+        idx = np.concatenate(parts) if len(parts) > 1 else parts[0]
         return {"images": self.images[idx], "labels": self.labels[idx]}

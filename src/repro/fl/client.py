@@ -38,3 +38,36 @@ def local_update(params, dataset, local_step, n_steps: int):
         p, metrics = local_step(p, batch)
     delta = jax.tree_util.tree_map(lambda a, b: a - b, p, params)
     return delta, metrics
+
+
+def make_batched_client_step(loss_fn: Callable, lr: float, opt_name: str = "sgd"):
+    """Vectorized replacement for the per-client Python loop.
+
+    Returns a jitted ``fn(params, batches) -> (updates [N,D], u_norms [N],
+    losses [N])`` where ``batches`` is a pytree whose leaves carry leading
+    dims ``[n_clients, local_steps, ...]``. All clients run together under
+    ``vmap`` from the same global params; the (small, static) local-step
+    count is unrolled rather than ``lax.scan``-ed — XLA:CPU while-loops
+    serialize the conv grads badly (measured 6x slower than unrolled on
+    the FMNIST CNN) and local_steps is 1-4 in every config. Updates come
+    back flattened (fp32) and stacked, ready for the fused
+    sparsify/aggregate in the round engine. ``losses`` is each client's
+    last-step training loss (matches the metrics of the loop path).
+    """
+    from repro.fl.updates import flatten_update
+
+    opt_init, opt_update = make_optimizer(opt_name)
+
+    def one_client(params, client_batches):
+        n_steps = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+        p, loss = params, jnp.float32(0)
+        for s in range(n_steps):
+            batch = jax.tree_util.tree_map(lambda v: v[s], client_batches)
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+            state = opt_init(p)
+            p, _ = opt_update(grads, state, p, lr)
+        delta = jax.tree_util.tree_map(lambda a, b: a - b, p, params)
+        vec = flatten_update(delta)
+        return vec, jnp.sqrt(jnp.sum(vec * vec)), loss
+
+    return jax.jit(jax.vmap(one_client, in_axes=(None, 0)))

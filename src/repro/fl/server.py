@@ -1,30 +1,40 @@
-"""Federated server: the per-round orchestration loop.
+"""Federated server: vectorized per-round orchestration on the controller API.
 
 Round r (paper Sec. II-A + Algorithm 1):
-  1. every client computes its local update u_i and reports ||u_i|| (a
-     scalar — negligible uplink) and the channel state h_i^r is measured;
-  2. the controller (FairEnergy or a baseline) outputs (x, gamma, B);
-  3. selected clients top-k sparsify u_i to gamma_i and "transmit" — the
-     server charges E_i = P_i (gamma_i S + I)/R_i(B_i);
-  4. the server aggregates sparse updates weighted by |D_i| and applies
-     them to the global model.
+  1. every client runs its local steps — all clients at once via a
+     ``vmap`` batched client step (static local steps unrolled) that
+     returns stacked flat
+     updates [N, D] and norms ||u_i|| (one jitted call, no per-client
+     Python loop);
+  2. a *controller* (any ``repro.core.controllers`` registry entry, or a
+     custom instance implementing init/decide) maps the round's
+     ``RoundObservation`` to a ``RoundDecision`` (x, gamma, B);
+  3. selected updates are top-k sparsified to their gamma_i and the server
+     charges E_i = P_i (gamma_i S + I)/R_i(B_i);
+  4. the sparse updates are combined by a fused masked |D_i|-weighted
+     aggregation and applied to the global model.
+
+Steps 2-4 — decide -> sparsify -> aggregate -> apply — execute as a single
+jitted program (``make_round_engine``); the only host work per round is
+batch gathering, channel fading draws, and logging. Strategy choice is
+data (``FederatedTrainer(..., controller="scoremax")`` or a controller
+instance), not a string if/elif in the trainer.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines as bl
 from repro.core.channel import WirelessNetwork
-from repro.core.fairenergy import init_state, solve_round
+from repro.core.controllers import (Controller, ControllerContext,
+                                    RoundObservation, make_controller)
 from repro.fl import compression
-from repro.fl.client import local_update, make_local_step
-from repro.fl.updates import (flatten_update, tree_spec, unflatten_update,
-                              update_l2_norm)
+from repro.fl.client import make_batched_client_step
+from repro.fl.updates import tree_spec, unflatten_update
 
 
 @dataclasses.dataclass
@@ -43,121 +53,139 @@ class RoundLog:
         return float(self.energy.sum())
 
 
-class FederatedTrainer:
-    """Drives FL rounds for a given strategy.
+def make_round_engine(*, controller: Controller, spec, weights: jnp.ndarray,
+                      server_lr: float, use_pallas: bool = False,
+                      block: int = compression.DEFAULT_BLOCK):
+    """Builds the jitted decide -> sparsify -> aggregate -> apply program.
 
-    strategy: "fairenergy" | "scoremax" | "ecorandom" | "randomfull" |
-              "channelgreedy"
+    Closes over the controller (its ``decide`` must be traceable), the
+    pytree spec of the model, and the static |D_i| aggregation weights.
+    Returns ``engine(params, updates, u_norms, h, P, r, key, ctrl_state)
+    -> (new_params, RoundDecision, ctrl_state)``.
+    """
+
+    @jax.jit
+    def engine(params, updates, u_norms, h, P, r, key, ctrl_state):
+        obs = RoundObservation(u_norms=u_norms, h=h, P=P, round=r, key=key)
+        dec, new_state = controller.decide(obs, ctrl_state)
+
+        xf = dec.x.astype(jnp.float32)
+        gamma = jnp.clip(dec.gamma, 1e-6, 1.0)
+        sparse = compression.batch_block_topk(updates, gamma, block=block,
+                                              use_pallas=use_pallas)
+        w = xf * weights                                        # [N]
+        wsum = jnp.sum(w)
+        agg = (w @ sparse) / jnp.maximum(wsum, 1e-12) * server_lr
+        agg = jnp.where(wsum > 0.0, agg, jnp.zeros_like(agg))
+        delta_tree = unflatten_update(agg, spec)
+        new_params = jax.tree_util.tree_map(
+            lambda p, d: p + d.astype(p.dtype), params, delta_tree)
+        return new_params, dec, new_state
+
+    return engine
+
+
+class FederatedTrainer:
+    """Drives FL rounds for a given controller.
+
+    controller: a registry name — "fairenergy" | "scoremax" | "ecorandom" |
+        "randomfull" | "channelgreedy" (see
+        ``repro.core.controllers.available_controllers()``) — or any object
+        implementing the Controller protocol.
+    ``strategy`` is accepted as a deprecated alias for ``controller``.
     """
 
     def __init__(self, *, model_loss, model_params, client_datasets,
-                 eval_fn, fl_cfg, fe_cfg, ch_cfg, strategy: str = "fairenergy",
+                 eval_fn, fl_cfg, fe_cfg, ch_cfg,
+                 controller: Union[str, Controller] = "fairenergy",
+                 strategy: Optional[str] = None,
                  fixed_k: Optional[int] = None,
                  eco_gamma: float = 0.1, eco_bandwidth: Optional[float] = None,
                  use_pallas_compression: bool = False, seed: int = 0):
+        if strategy is not None:
+            controller = strategy
         self.loss_fn = model_loss
         self.params = model_params
         self.datasets = client_datasets
         self.eval_fn = eval_fn
         self.fl_cfg, self.fe_cfg, self.ch_cfg = fl_cfg, fe_cfg, ch_cfg
-        self.strategy = strategy
         self.n_clients = len(client_datasets)
         self.network = WirelessNetwork(ch_cfg, seed=seed)
-        self.state = init_state(fe_cfg, self.n_clients)
-        self.rng = np.random.default_rng(seed + 1)
-        self.local_step = make_local_step(model_loss, fl_cfg.lr)
         self.spec = tree_spec(model_params)
         self.n_params = int(sum(np.prod(s) for s in self.spec.shapes))
         self.s_bits = 32.0 * self.n_params
         self.i_bits = float(self.n_params)            # 1-bit/coeff kept-mask
-        self.fixed_k = fixed_k
-        self.eco_gamma = eco_gamma
-        self.eco_bandwidth = eco_bandwidth or ch_cfg.bandwidth_total / max(fixed_k or 10, 1)
         self.use_pallas = use_pallas_compression
-        self.weights = np.array([len(d) for d in client_datasets], np.float64)
-        self.weights /= self.weights.sum()
+
+        ctx = ControllerContext(
+            n_clients=self.n_clients, b_tot=ch_cfg.bandwidth_total,
+            s_bits=self.s_bits, i_bits=self.i_bits, n0=ch_cfg.noise_density,
+            fe_cfg=fe_cfg, fixed_k=fixed_k, eco_gamma=eco_gamma,
+            eco_bandwidth=eco_bandwidth)
+        self.controller = make_controller(controller, ctx)
+        self.controller_name = (controller if isinstance(controller, str)
+                                else getattr(controller, "name",
+                                             type(controller).__name__.lower()))
+        self.ctrl_state = self.controller.init(self.n_clients)
+
+        self.key = jax.random.PRNGKey(seed + 1)
+        self._client_step = make_batched_client_step(model_loss, fl_cfg.lr)
+        self._engine = None
+        self._P = jnp.asarray(self.network.power, jnp.float32)
+        weights = np.array([len(d) for d in client_datasets], np.float64)
+        self.weights = weights / weights.sum()
         self.history: list[RoundLog] = []
 
-    # ------------------------------------------------------------------
-    def _calibrate_eta(self, u_norms: np.ndarray, h: np.ndarray):
-        """eta_auto: make the score benefit commensurate with energy cost —
-        eta := eta_rel * median_i E_i(gamma=.5, B=B_tot/N) / median_i s_i(.5)."""
-        from repro.core.channel import comm_energy
-        e = np.asarray(comm_energy(
-            0.5, self.ch_cfg.bandwidth_total / self.n_clients,
-            jnp.asarray(self.network.power), jnp.asarray(h),
-            self.s_bits, self.i_bits, self.ch_cfg.noise_density))
-        s = 0.5 * np.asarray(u_norms)
-        eta = self.fe_cfg.eta_rel * float(np.median(e)) / max(float(np.median(s)), 1e-12)
-        self.fe_cfg = dataclasses.replace(self.fe_cfg, eta=eta, eta_auto=False)
+    # back-compat alias (the old attribute name) --------------------------
+    @property
+    def strategy(self) -> str:
+        return self.controller_name
 
-    def _decide(self, u_norms: np.ndarray, h: np.ndarray):
-        P = self.network.power
-        kw = dict(b_tot=self.ch_cfg.bandwidth_total, s_bits=self.s_bits,
-                  i_bits=self.i_bits, n0=self.ch_cfg.noise_density)
-        if self.strategy == "fairenergy":
-            if self.fe_cfg.eta_auto:
-                self._calibrate_eta(u_norms, h)
-            dec, self.state = solve_round(
-                jnp.asarray(u_norms, jnp.float32), jnp.asarray(h, jnp.float32),
-                jnp.asarray(P, jnp.float32), self.state,
-                fe_cfg=self.fe_cfg, **kw)
-            return dec
-        k = self.fixed_k or max(1, self.n_clients // 5)
-        if self.strategy == "scoremax":
-            return bl.score_max(u_norms, h, P, k, **kw)
-        if self.strategy == "ecorandom":
-            return bl.eco_random(self.rng, self.n_clients, k,
-                                 gamma_min_obs=self.eco_gamma,
-                                 b_min_obs=self.eco_bandwidth, h=h, P=P,
-                                 s_bits=kw["s_bits"], i_bits=kw["i_bits"], n0=kw["n0"])
-        if self.strategy == "randomfull":
-            return bl.random_full(self.rng, self.n_clients, k, b_tot=kw["b_tot"],
-                                  h=h, P=P, s_bits=kw["s_bits"],
-                                  i_bits=kw["i_bits"], n0=kw["n0"])
-        if self.strategy == "channelgreedy":
-            return bl.channel_greedy(h, P, k, b_tot=kw["b_tot"],
-                                     s_bits=kw["s_bits"], i_bits=kw["i_bits"],
-                                     n0=kw["n0"])
-        raise ValueError(self.strategy)
+    # ------------------------------------------------------------------
+    def _stack_batches(self):
+        """Gather [n_clients, local_steps, batch, ...] stacked minibatches."""
+        steps = self.fl_cfg.local_steps
+        per_client = [[ds.next_batch() for _ in range(steps)]
+                      for ds in self.datasets]
+        keys = per_client[0][0].keys()
+        return {k: jnp.asarray(np.stack(
+                    [np.stack([b[k] for b in cb]) for cb in per_client]))
+                for k in keys}
+
+    def _get_engine(self):
+        if self._engine is None:
+            self._engine = make_round_engine(
+                controller=self.controller, spec=self.spec,
+                weights=jnp.asarray(self.weights, jnp.float32),
+                server_lr=self.fl_cfg.server_lr, use_pallas=self.use_pallas)
+        return self._engine
 
     # ------------------------------------------------------------------
     def run_round(self, r: int) -> RoundLog:
-        h = self.network.gains(r)
+        h = jnp.asarray(self.network.gains(r), jnp.float32)
+        batches = self._stack_batches()
+        updates, u_norms, losses = self._client_step(self.params, batches)
 
-        updates, u_norms, losses = [], np.zeros(self.n_clients), []
-        for i, ds in enumerate(self.datasets):
-            delta, metrics = local_update(self.params, ds, self.local_step,
-                                          self.fl_cfg.local_steps)
-            updates.append(delta)
-            u_norms[i] = float(update_l2_norm(delta))
-            losses.append(float(metrics["loss"]))
+        if getattr(self.controller, "needs_calibration", False):
+            # one-shot eta_auto; the engine traces the controller's config,
+            # so (re)build it only after calibration freezes eta
+            self.controller.calibrate(np.asarray(u_norms), np.asarray(h),
+                                      self.network.power)
+            self._engine = None
 
-        dec = self._decide(u_norms, h)
-        x = np.asarray(dec.x)
-        gamma = np.asarray(dec.gamma)
-
-        # aggregate sparsified updates from selected clients
-        agg = None
-        wsum = 0.0
-        for i in np.nonzero(x)[0]:
-            vec = flatten_update(updates[i])
-            vec, _ = compression.block_topk(vec, float(max(gamma[i], 1e-6)),
-                                            use_pallas=self.use_pallas)
-            w = self.weights[i]
-            agg = vec * w if agg is None else agg + vec * w
-            wsum += w
-        if agg is not None and wsum > 0:
-            agg = agg / wsum * self.fl_cfg.server_lr
-            delta_tree = unflatten_update(agg, self.spec)
-            self.params = jax.tree_util.tree_map(
-                lambda p, d: p + d.astype(p.dtype), self.params, delta_tree)
+        engine = self._get_engine()
+        key = jax.random.fold_in(self.key, r)
+        self.params, dec, self.ctrl_state = engine(
+            self.params, updates, u_norms, h, self._P,
+            jnp.int32(r), key, self.ctrl_state)
 
         acc = float(self.eval_fn(self.params))
-        log = RoundLog(round=r, selected=x, gamma=gamma,
+        x = np.asarray(dec.x)
+        log = RoundLog(round=r, selected=x, gamma=np.asarray(dec.gamma),
                        bandwidth=np.asarray(dec.bandwidth),
                        energy=np.asarray(dec.energy), accuracy=acc,
-                       loss=float(np.mean(losses)), n_selected=int(x.sum()))
+                       loss=float(np.mean(np.asarray(losses))),
+                       n_selected=int(x.sum()))
         self.history.append(log)
         return log
 
@@ -167,8 +195,9 @@ class FederatedTrainer:
         for r in range(rounds):
             log = self.run_round(r)
             if verbose and (r % log_every == 0 or r == rounds - 1):
-                print(f"[{self.strategy}] round {r:4d} acc={log.accuracy:.4f} "
-                      f"sel={log.n_selected:2d} E={log.total_energy*1e3:.3f} mJ")
+                print(f"[{self.controller_name}] round {r:4d} "
+                      f"acc={log.accuracy:.4f} sel={log.n_selected:2d} "
+                      f"E={log.total_energy*1e3:.3f} mJ")
         return self.history
 
     # -------------------------------------------------------- statistics ----

@@ -2,9 +2,9 @@
 
 TPU adaptation of gradient top-k (DESIGN.md §4.1): no sort. Each grid step
 owns one lane-aligned block resident in VMEM and finds the k-th largest
-magnitude by **bisection on the magnitude value** (40 fixed iterations —
-converges below fp32 resolution, so the kept set matches the exact-sort
-oracle for fp32 inputs), then resolves ties by index order with a cumsum.
+magnitude by **bisection on the fp32 bit pattern** (31 integer halvings —
+exact for any dynamic range; see ``ref.topk_threshold_mask``, shared with
+the pure-jnp fast path), then resolves ties by index order with a cumsum.
 Everything is vector ops in VREGs; the MXU is not needed.
 
 Grid: one program per block. BlockSpec keeps blocks in VMEM; block size
@@ -18,34 +18,23 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-_BISECT_ITERS = 40
+from .ref import topk_threshold_mask
 
 
 def _topk_block_kernel(x_ref, out_ref, *, k: int):
     x = x_ref[...].astype(jnp.float32)
-    mag = jnp.abs(x)
+    mask = topk_threshold_mask(x, k)
+    out_ref[...] = (x * mask.astype(jnp.float32)).astype(out_ref.dtype)
 
-    hi0 = jnp.max(mag)
-    lo0 = jnp.zeros_like(hi0)
 
-    def body(_, lohi):
-        lo, hi = lohi
-        mid = 0.5 * (lo + hi)
-        count = jnp.sum(mag > mid)           # strictly-greater count
-        # too many kept -> raise threshold; else lower it
-        new_lo = jnp.where(count > k, mid, lo)
-        new_hi = jnp.where(count > k, hi, mid)
-        return new_lo, new_hi
-
-    lo, hi = jax.lax.fori_loop(0, _BISECT_ITERS, body, (lo0, hi0))
-    thresh = hi                               # count(mag > thresh) <= k
-    greater = mag > thresh
-    n_greater = jnp.sum(greater)
-    equal = mag >= lo                          # within-eps band = tie candidates
-    equal = equal & ~greater
-    fill = jnp.cumsum(equal.astype(jnp.int32)) <= (k - n_greater)
-    mask = greater | (equal & fill)
+def _topk_rows_kernel(ks_ref, x_ref, out_ref):
+    # ks is scalar-prefetched: the per-row k lives in SMEM and is read by
+    # grid position, so one launch handles heterogeneous compression ratios.
+    k = ks_ref[pl.program_id(0)]
+    x = x_ref[...].astype(jnp.float32)
+    mask = topk_threshold_mask(x, k)
     out_ref[...] = (x * mask.astype(jnp.float32)).astype(out_ref.dtype)
 
 
@@ -65,3 +54,24 @@ def topk_sparsify_pallas(vec: jnp.ndarray, *, k: int, block: int = 4096,
         interpret=interpret,
     )(rows)
     return out.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def topk_sparsify_rows_pallas(rows: jnp.ndarray, ks: jnp.ndarray, *,
+                              interpret: bool = True) -> jnp.ndarray:
+    """rows: [R, block]; ks: [R] int32 (traced). Keeps top-ks[r] magnitudes
+    in row r — the dynamic-k companion to ``topk_sparsify_pallas``."""
+    assert rows.ndim == 2 and ks.shape == (rows.shape[0],), (rows.shape, ks.shape)
+    nb, block = rows.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i, ks: (i, 0))],
+        out_specs=pl.BlockSpec((1, block), lambda i, ks: (i, 0)),
+    )
+    return pl.pallas_call(
+        _topk_rows_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, block), rows.dtype),
+        interpret=interpret,
+    )(ks.astype(jnp.int32), rows)

@@ -5,14 +5,53 @@ split into fixed blocks; in each block exactly ``k = ceil(gamma*block)``
 coefficients are kept — those with the largest |x|, ties broken by index
 order (earlier index wins). Trailing padding (zeros) competes like any
 other value but the result is truncated back to the input length.
+
+``topk_threshold_mask`` is the shared sort-free implementation used by
+both the dynamic-k jnp fast path and the Pallas kernel bodies: it finds
+the exact k-th largest magnitude by bisecting on the fp32 *bit pattern*
+(non-negative floats order identically to their int32 bits, so 31 integer
+halvings pin the threshold exactly — no epsilon band, any dynamic range).
 """
 from __future__ import annotations
 
 import math
 
+import jax
 import jax.numpy as jnp
 
 Array = jnp.ndarray
+
+
+def topk_threshold_mask(x: Array, k: Array) -> Array:
+    """Keep-mask of the top-k magnitudes per row, ties to the lower index.
+
+    x: [..., block] float; k: int32 broadcastable to [..., 1] (clipped by
+    the caller to [1, block]). Matches the exact-sort oracle bit-for-bit:
+    the k-th largest |x| is found by integer bisection on the fp32 bit
+    pattern, which is monotone for non-negative floats.
+    """
+    mag = jnp.abs(x.astype(jnp.float32))
+    bits = jax.lax.bitcast_convert_type(mag, jnp.int32)      # >= 0 for |x|
+    k = jnp.broadcast_to(jnp.asarray(k, jnp.int32), mag.shape[:-1] + (1,))
+
+    # invariant: count(bits >= lo) >= k, count(bits >= hi) < k
+    lo = jnp.zeros_like(k)
+    hi = jnp.max(bits, axis=-1, keepdims=True) + 1
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = lo + (hi - lo) // 2
+        enough = jnp.sum((bits >= mid).astype(jnp.int32), axis=-1,
+                         keepdims=True) >= k
+        return jnp.where(enough, mid, lo), jnp.where(enough, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, 31, body, (lo, hi))
+    thresh = jax.lax.bitcast_convert_type(lo, jnp.float32)   # k-th largest |x|
+    greater = mag > thresh
+    n_greater = jnp.sum(greater.astype(jnp.int32), axis=-1, keepdims=True)
+    equal = mag == thresh
+    fill = jnp.cumsum(equal.astype(jnp.int32), axis=-1) <= (k - n_greater)
+    return greater | (equal & fill)
 
 
 def _pad_to_blocks(vec: Array, block: int) -> tuple[Array, int]:
@@ -44,3 +83,25 @@ def block_topk_ref(vec: Array, gamma: float, *, block: int = 4096) -> tuple[Arra
 def block_topk_mask_ref(vec: Array, gamma: float, *, block: int = 4096) -> Array:
     out, _ = block_topk_ref(vec, gamma, block=block)
     return out != 0
+
+
+def block_topk_rows_ref(rows: Array, ks: Array) -> Array:
+    """Traced-k variant: rows [R, block], ks [R] int32 (1 <= k <= block).
+
+    Same keep rule as ``block_topk_ref`` — per row, the ``ks[r]`` largest
+    magnitudes, ties broken by index order — but k is a runtime array, so
+    the call is jittable with per-row compression ratios (the round engine
+    feeds one gamma per client).
+    """
+    assert rows.ndim == 2 and ks.ndim == 1 and rows.shape[0] == ks.shape[0]
+    block = rows.shape[1]
+    ks = jnp.clip(ks.astype(jnp.int32), 1, block)
+    mag = jnp.abs(rows.astype(jnp.float32))
+    srt = jnp.sort(mag, axis=1)                                  # ascending
+    kth = jnp.take_along_axis(srt, (block - ks)[:, None], axis=1)  # [R,1]
+    greater = mag > kth
+    n_greater = greater.sum(axis=1, keepdims=True)
+    equal = mag == kth
+    fill = jnp.cumsum(equal.astype(jnp.int32), axis=1) <= (ks[:, None] - n_greater)
+    mask = greater | (equal & fill)
+    return rows * mask.astype(rows.dtype)

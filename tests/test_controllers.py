@@ -1,0 +1,136 @@
+"""Controller registry tests: every registered strategy returns a
+budget-feasible RoundDecision on a shared fixture, FairEnergy's new API is
+pinned bit-for-bit to the legacy ``solve_round`` entry point, and the
+registry surface itself (names, instances, errors) behaves."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ChannelConfig, FairEnergyConfig
+from repro.core.controllers import (ControllerContext, RoundObservation,
+                                    available_controllers, make_controller,
+                                    topk_mask)
+from repro.core.fairenergy import init_state, solve_round
+
+N0 = ChannelConfig().noise_density
+N = 16
+FE_CFG = FairEnergyConfig(eta=1e-3, eta_auto=False)
+B_TOT = 10e6
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return ControllerContext(n_clients=N, b_tot=B_TOT, s_bits=6.4e7,
+                             i_bits=2e6, n0=N0, fe_cfg=FE_CFG, fixed_k=4,
+                             eco_gamma=0.1, eco_bandwidth=1e5)
+
+
+@pytest.fixture(scope="module")
+def obs():
+    rng = np.random.default_rng(0)
+    return RoundObservation(
+        u_norms=jnp.asarray(rng.uniform(0.5, 5.0, N), jnp.float32),
+        h=jnp.asarray(1e-3 * rng.uniform(50, 500, N) ** -3.0 *
+                      rng.exponential(1.0, N), jnp.float32),
+        P=jnp.asarray(rng.uniform(1e-4, 3e-4, N), jnp.float32),
+        round=jnp.int32(0), key=jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------- shared feasibility ----
+@pytest.mark.parametrize("name", available_controllers())
+def test_decision_budget_feasible(name, ctx, obs):
+    ctrl = make_controller(name, ctx)
+    dec, _ = ctrl.decide(obs, ctrl.init(N))
+    x = np.asarray(dec.x)
+    bw = np.asarray(dec.bandwidth)
+    gamma = np.asarray(dec.gamma)
+    energy = np.asarray(dec.energy)
+    assert bw.sum() <= B_TOT * (1 + 1e-6)
+    assert float(dec.bw_used) == pytest.approx(bw.sum(), rel=1e-6)
+    if x.any():
+        assert (gamma[x] >= FE_CFG.gamma_min - 1e-6).all()
+        assert (gamma[x] <= 1.0 + 1e-6).all()
+    assert (gamma[~x] == 0).all()
+    assert (bw[~x] == 0).all()
+    assert (energy[~x] == 0).all()
+    assert (energy >= 0).all() and np.isfinite(energy).all()
+
+
+@pytest.mark.parametrize("name", available_controllers())
+def test_decide_is_jittable(name, ctx, obs):
+    """The whole point of the API: decide composes into jitted programs."""
+    ctrl = make_controller(name, ctx)
+    state = ctrl.init(N)
+    dec_eager, _ = ctrl.decide(obs, state)
+    dec_jit, _ = jax.jit(ctrl.decide)(obs, state)
+    np.testing.assert_array_equal(np.asarray(dec_eager.x), np.asarray(dec_jit.x))
+    np.testing.assert_allclose(np.asarray(dec_eager.bandwidth),
+                               np.asarray(dec_jit.bandwidth), rtol=1e-6)
+
+
+# ------------------------------------------------------- regression ----
+def test_fairenergy_controller_matches_solve_round(ctx, obs):
+    """New-API FairEnergy == legacy solve_round, bit for bit."""
+    ctrl = make_controller("fairenergy", ctx)
+    dec_new, st_new = ctrl.decide(obs, ctrl.init(N))
+    dec_old, st_old = solve_round(obs.u_norms, obs.h, obs.P,
+                                  init_state(FE_CFG, N), fe_cfg=FE_CFG,
+                                  s_bits=6.4e7, i_bits=2e6, b_tot=B_TOT, n0=N0)
+    for a, b, field in zip(dec_new, dec_old, dec_new._fields):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=field)
+    for a, b, field in zip(st_new, st_old, st_new._fields):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=field)
+
+
+# ------------------------------------------------------- randomness ----
+@pytest.mark.parametrize("name", ["ecorandom", "randomfull"])
+def test_random_controllers_select_k_and_are_key_deterministic(name, ctx, obs):
+    ctrl = make_controller(name, ctx)
+    dec1, _ = ctrl.decide(obs, ())
+    dec2, _ = ctrl.decide(obs, ())
+    assert int(np.asarray(dec1.x).sum()) == ctx.k
+    np.testing.assert_array_equal(np.asarray(dec1.x), np.asarray(dec2.x))
+    # a different key reshuffles (16 choose 4 — collision odds ~1/1820)
+    obs2 = obs._replace(key=jax.random.PRNGKey(1))
+    dec3, _ = ctrl.decide(obs2, ())
+    assert not np.array_equal(np.asarray(dec1.x), np.asarray(dec3.x))
+
+
+def test_topk_mask_matches_numpy_argsort():
+    scores = jnp.asarray([3.0, 1.0, 3.0, 5.0, 0.5], jnp.float32)
+    mask = np.asarray(topk_mask(scores, 3))
+    want = np.zeros(5, bool)
+    want[np.argsort(-np.asarray(scores), kind="stable")[:3]] = True
+    np.testing.assert_array_equal(mask, want)
+
+
+# -------------------------------------------------------- registry ----
+def test_unknown_controller_name_raises(ctx):
+    with pytest.raises(KeyError, match="unknown controller"):
+        make_controller("definitely-not-registered", ctx)
+
+
+def test_instance_passthrough(ctx):
+    inst = make_controller("scoremax", ctx)
+    assert make_controller(inst, ctx) is inst
+    with pytest.raises(TypeError):
+        make_controller(object(), ctx)
+
+
+def test_all_five_strategies_registered():
+    assert set(available_controllers()) >= {"fairenergy", "scoremax",
+                                            "ecorandom", "randomfull",
+                                            "channelgreedy"}
+
+
+def test_eco_bandwidth_zero_is_honoured():
+    """Regression: an explicit 0.0 used to be replaced by the default via
+    ``eco_bandwidth or ...``."""
+    ctx0 = ControllerContext(n_clients=N, b_tot=B_TOT, s_bits=6.4e7,
+                             i_bits=2e6, n0=N0, fixed_k=4, eco_bandwidth=0.0)
+    assert ctx0.eco_bw == 0.0
+    ctx_none = ControllerContext(n_clients=N, b_tot=B_TOT, s_bits=6.4e7,
+                                 i_bits=2e6, n0=N0, fixed_k=4,
+                                 eco_bandwidth=None)
+    assert ctx_none.eco_bw == pytest.approx(B_TOT / 4)

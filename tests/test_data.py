@@ -60,6 +60,23 @@ def test_client_dataset_cycles():
     assert len(seen) > 1
 
 
+def test_client_dataset_smaller_than_batch_wraps():
+    """Shards smaller than the batch yield full-size batches (wrap-around)
+    so per-client batches stack for the vectorized client step."""
+    imgs, labels = make_fmnist_like(10, seed=0)
+    ds = ClientDataset(imgs, labels, batch=32, seed=0)
+    b = ds.next_batch()
+    assert b["images"].shape[0] == 32
+    assert set(b["labels"].tolist()) == set(labels.tolist())
+
+
+def test_client_dataset_empty_shard_raises():
+    import numpy as np
+    import pytest
+    with pytest.raises(ValueError, match="empty"):
+        ClientDataset(np.zeros((0, 4)), np.zeros((0,), np.int32), batch=8, seed=0)
+
+
 def test_token_stream_markov():
     toks = make_token_stream(5000, 512, seed=0)
     assert toks.min() >= 0 and toks.max() < 512

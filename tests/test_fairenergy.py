@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ChannelConfig, FairEnergyConfig
-from repro.core import baselines as bl
 from repro.core.channel import comm_energy, shannon_rate
 from repro.core.fairenergy import init_state, solve_round
 from repro.core.fairness import contribution_score, ema_update
@@ -155,18 +154,32 @@ def test_ema_state_updates():
 
 
 # -------------------------------------------------------------- baselines ----
+def _baseline_obs(n, u=None, h=None, seed=0):
+    from repro.core.controllers import RoundObservation
+    return RoundObservation(
+        u_norms=jnp.asarray(u if u is not None else np.ones(n), jnp.float32),
+        h=jnp.asarray(h if h is not None else np.full(n, 1e-9), jnp.float32),
+        P=jnp.full((n,), 2e-4, jnp.float32),
+        round=jnp.int32(0), key=jax.random.PRNGKey(seed))
+
+
+def _baseline_ctx(n, k, **kw):
+    from repro.core.controllers import ControllerContext
+    return ControllerContext(n_clients=n, b_tot=10e6, s_bits=6.4e7,
+                             i_bits=2e6, n0=N0, fixed_k=k, **kw)
+
+
 def test_scoremax_selects_top_k():
-    u = np.asarray([1.0, 5.0, 3.0, 2.0, 4.0])
-    h = np.full(5, 1e-9)
-    P = np.full(5, 2e-4)
-    dec = bl.score_max(u, h, P, 2, b_tot=10e6, s_bits=6.4e7, i_bits=2e6, n0=N0)
+    from repro.core.controllers import make_controller
+    ctrl = make_controller("scoremax", _baseline_ctx(5, 2))
+    dec, _ = ctrl.decide(_baseline_obs(5, u=[1.0, 5.0, 3.0, 2.0, 4.0]), ctrl.init(5))
     assert set(np.nonzero(np.asarray(dec.x))[0]) == {1, 4}
     assert (np.asarray(dec.gamma)[np.asarray(dec.x)] == 1.0).all()
 
 
 def test_ecorandom_selects_k_random():
-    rng = np.random.default_rng(0)
-    dec = bl.eco_random(rng, 10, 3, gamma_min_obs=0.1, b_min_obs=1e5,
-                        h=np.full(10, 1e-9), P=np.full(10, 2e-4),
-                        s_bits=6.4e7, i_bits=2e6, n0=N0)
+    from repro.core.controllers import make_controller
+    ctrl = make_controller("ecorandom", _baseline_ctx(10, 3, eco_gamma=0.1,
+                                                      eco_bandwidth=1e5))
+    dec, _ = ctrl.decide(_baseline_obs(10), ctrl.init(10))
     assert int(np.asarray(dec.x).sum()) == 3

@@ -9,8 +9,9 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.score_norm.ops import l2_norm
 from repro.kernels.score_norm.ref import l2_norm_ref
-from repro.kernels.topk_sparsify.ops import block_topk_sparsify
-from repro.kernels.topk_sparsify.ref import block_topk_ref
+from repro.kernels.topk_sparsify.ops import (block_topk_sparsify,
+                                             block_topk_sparsify_rows)
+from repro.kernels.topk_sparsify.ref import block_topk_ref, block_topk_rows_ref
 
 
 # ------------------------------------------------------------------ topk ----
@@ -39,6 +40,52 @@ def test_topk_with_ties():
     want, _ = block_topk_ref(v, 0.5, block=256)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
     assert int((got != 0).sum()) == k
+
+
+def test_topk_rows_dynamic_k_matches_ref():
+    """Pallas rows kernel (scalar-prefetched per-row k) and the jitted
+    bisection fast path both match the sort-based rows oracle."""
+    from repro.fl.compression import _rows_topk_bisect
+    rows = jax.random.normal(jax.random.PRNGKey(3), (12, 1024))
+    ks = jnp.asarray([1, 7, 64, 100, 512, 1000, 1024, 3, 333, 900, 2, 50],
+                     jnp.int32)
+    want = block_topk_rows_ref(rows, ks)
+    got_pallas = block_topk_sparsify_rows(rows, ks)
+    got_bisect = jax.jit(_rows_topk_bisect)(rows, ks)
+    np.testing.assert_array_equal(np.asarray(got_pallas), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got_bisect), np.asarray(want))
+
+
+def test_topk_rows_extreme_dynamic_range():
+    """Bit-space bisection must stay exact with huge outliers — a naive
+    value-space bisection leaves an epsilon band ~max*2^-iters wide and
+    keeps the wrong coefficients here."""
+    row = np.ones(4096, np.float32)
+    row[-1] = 1e30
+    row[-11:-1] = 2.0
+    rows = jnp.asarray(row)[None, :]
+    ks = jnp.asarray([11], jnp.int32)
+    want = block_topk_rows_ref(rows, ks)
+    np.testing.assert_array_equal(np.asarray(block_topk_sparsify_rows(rows, ks)),
+                                  np.asarray(want))
+    from repro.fl.compression import _rows_topk_bisect
+    np.testing.assert_array_equal(np.asarray(jax.jit(_rows_topk_bisect)(rows, ks)),
+                                  np.asarray(want))
+    # and the oracle itself keeps exactly the outlier + the ten 2.0s
+    kept = np.nonzero(np.asarray(want)[0])[0]
+    np.testing.assert_array_equal(kept, np.arange(4085, 4096))
+
+
+def test_topk_rows_matches_per_vector_static():
+    """batch_block_topk with traced gamma == per-client static block_topk."""
+    from repro.fl.compression import batch_block_topk, block_topk
+    rng = np.random.default_rng(4)
+    mat = jnp.asarray(rng.normal(size=(5, 3000)).astype(np.float32))
+    gamma = jnp.asarray([0.05, 0.2, 0.5, 0.77, 1.0], jnp.float32)
+    want = jnp.stack([block_topk(mat[i], float(gamma[i]), block=1024)[0]
+                      for i in range(5)])
+    got = jax.jit(lambda m, g: batch_block_topk(m, g, block=1024))(mat, gamma)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_topk_keeps_largest_magnitudes():

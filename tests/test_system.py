@@ -29,12 +29,12 @@ def fl_setup():
         lg = cnn.cnn_forward(p, jnp.asarray(ti), cfg)
         return jnp.mean((jnp.argmax(lg, -1) == jnp.asarray(tl)).astype(jnp.float32))
 
-    def make(strategy, **kw):
+    def make(controller, **kw):
         return FederatedTrainer(model_loss=loss_fn, model_params=params,
                                 client_datasets=datasets, eval_fn=eval_fn,
                                 fl_cfg=fl_cfg, fe_cfg=FairEnergyConfig(),
                                 ch_cfg=ChannelConfig(n_clients=N),
-                                strategy=strategy, seed=0, **kw)
+                                controller=controller, seed=0, **kw)
     return make
 
 
