@@ -12,6 +12,7 @@ from __future__ import annotations
 import json
 import os
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -55,14 +56,18 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
 
 
 def run_all(n_clients=20, rounds=60, target=0.80, seed=0, verbose=True,
-            extra_baselines=False, **build_kw):
+            extra_baselines=False, eval_every=1, sweep_seeds=None, **build_kw):
     """Runs FairEnergy first (to fix K / eco params per paper protocol),
-    then the baselines. Returns the results dict."""
+    then the baselines — each through the fused ``run_scanned`` engine
+    (``eval_every`` strides the in-scan accuracy evaluation). With
+    ``sweep_seeds``, each strategy additionally runs a vmapped multi-seed
+    sweep (``run_sweep``) for mean±std error bars at roughly single-run
+    wall-clock. Returns the results dict."""
     make, fl_cfg = build(n_clients=n_clients, rounds=rounds, seed=seed, **build_kw)
 
     t0 = time.time()
     fe = make("fairenergy")
-    fe.run(rounds, verbose=verbose, log_every=max(rounds // 6, 1))
+    fe.run_scanned(rounds, eval_every=eval_every, verbose=verbose)
     k = max(1, int(round(np.mean([lg.n_selected for lg in fe.history]))))
     eco_gamma = float(min((g for lg in fe.history for g in lg.gamma[lg.selected]),
                           default=0.1))
@@ -76,9 +81,10 @@ def run_all(n_clients=20, rounds=60, target=0.80, seed=0, verbose=True,
     runs = {"fairenergy": fe}
     strategies = ["scoremax", "ecorandom"] + (
         ["randomfull", "channelgreedy"] if extra_baselines else [])
+    base_kw = dict(fixed_k=k, eco_gamma=eco_gamma, eco_bandwidth=eco_bw)
     for s in strategies:
-        tr = make(s, fixed_k=k, eco_gamma=eco_gamma, eco_bandwidth=eco_bw)
-        tr.run(rounds, verbose=verbose, log_every=max(rounds // 6, 1))
+        tr = make(s, **base_kw)
+        tr.run_scanned(rounds, eval_every=eval_every, verbose=verbose)
         runs[s] = tr
 
     results = {"k": k, "eco_gamma": eco_gamma, "eco_bandwidth": eco_bw,
@@ -95,14 +101,50 @@ def run_all(n_clients=20, rounds=60, target=0.80, seed=0, verbose=True,
             "mean_selected": float(np.mean([lg.n_selected for lg in tr.history])),
             "mean_gamma": tr.mean_gamma_selected(),
         }
+
+    if sweep_seeds:
+        sweep = {"seeds": [int(s) for s in sweep_seeds], "strategies": {}}
+        for name in runs:
+            kw = {} if name == "fairenergy" else base_kw
+            outs = make(name, **kw).run_sweep(sweep_seeds, rounds,
+                                              eval_every=eval_every)
+            acc, energy = outs["accuracy"], outs["energy"].sum(-1)
+            with warnings.catch_warnings():
+                # eval_every-skipped rounds are NaN in every lane — the
+                # all-NaN mean/std is the intended output, not a problem
+                warnings.simplefilter("ignore", RuntimeWarning)
+                acc_mean = np.nanmean(acc, axis=0).tolist()
+                acc_std = np.nanstd(acc, axis=0).tolist()
+            sweep["strategies"][name] = {
+                "final_acc_mean": float(np.nanmean(acc[:, -1])),
+                "final_acc_std": float(np.nanstd(acc[:, -1])),
+                "acc_mean": acc_mean,
+                "acc_std": acc_std,
+                "energy_per_round_mean_J": float(energy.mean()),
+                "energy_per_round_std_J": float(energy.mean(1).std()),
+            }
+        results["sweep"] = sweep
+        results["elapsed_s"] = round(time.time() - t0, 1)
     return results
+
+
+def _json_safe(obj):
+    """NaN -> null (eval_every-skipped rounds): bare NaN tokens are not
+    valid JSON and break strict parsers (jq, JSON.parse)."""
+    if isinstance(obj, float) and np.isnan(obj):
+        return None
+    if isinstance(obj, dict):
+        return {k: _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_json_safe(v) for v in obj]
+    return obj
 
 
 def main(out="experiments/fl_results.json", **kw):
     res = run_all(**kw)
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
-        json.dump(res, f, indent=1)
+        json.dump(_json_safe(res), f, indent=1)
     summarize(res)
     return res
 
@@ -126,6 +168,14 @@ def summarize(res):
         if fe and bt:
             print(f"FairEnergy uses {100 * (1 - fe / bt):.0f}% less energy than "
                   f"{base} to reach target (paper: 71% vs ScoreMax, 79% vs EcoRandom)")
+    if "sweep" in res:
+        sw = res["sweep"]
+        print(f"\n--- {len(sw['seeds'])}-seed sweep (vmapped scan engine) ---")
+        for name, s in sw["strategies"].items():
+            print(f"{name:14s} final acc {s['final_acc_mean']:.3f} "
+                  f"± {s['final_acc_std']:.3f}   E/round "
+                  f"{s['energy_per_round_mean_J']*1e3:.3f} "
+                  f"± {s['energy_per_round_std_J']*1e3:.3f} mJ")
 
 
 if __name__ == "__main__":
@@ -136,10 +186,16 @@ if __name__ == "__main__":
     ap.add_argument("--paper", action="store_true",
                     help="full paper scale: N=50, 150 rounds")
     ap.add_argument("--extra-baselines", action="store_true")
+    ap.add_argument("--seeds", type=int, default=0,
+                    help="N>0: vmapped N-seed sweep per strategy (error bars)")
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="accuracy-eval stride inside the scanned engine")
     ap.add_argument("--out", default="experiments/fl_results.json")
     a = ap.parse_args()
+    kw = dict(out=a.out, extra_baselines=a.extra_baselines,
+              eval_every=a.eval_every,
+              sweep_seeds=list(range(a.seeds)) if a.seeds else None)
     if a.paper:
-        main(out=a.out, n_clients=50, rounds=150, extra_baselines=a.extra_baselines)
+        main(n_clients=50, rounds=150, **kw)
     else:
-        main(out=a.out, n_clients=a.clients, rounds=a.rounds,
-             extra_baselines=a.extra_baselines)
+        main(n_clients=a.clients, rounds=a.rounds, **kw)

@@ -97,6 +97,14 @@ def main() -> None:
                             + bench_round_engine(iters=5)):
         print(f"{name},{us:.1f},{extra}")
 
+    from benchmarks.scan_engine_bench import bench as bench_scan_engine
+    scan = bench_scan_engine(rounds=10)
+    print(f"scan_engine_N{scan['n_clients']},"
+          f"legacy_loop={scan['legacy_loop_rounds_per_sec']}rps,"
+          f"scan={scan['scan_rounds_per_sec']}rps "
+          f"({scan['scan_speedup_vs_legacy_loop']}x; full run: python -m "
+          f"benchmarks.scan_engine_bench)")
+
     bench_roofline()
 
     if not args.skip_fl:

@@ -1,0 +1,211 @@
+"""Macrobenchmark: fused multi-round ``lax.scan`` engine vs the per-round
+drivers, at the paper scale n_clients=50 on the round_engine_bench
+workload (softmax model, ScoreMax decisions, 2 local steps/client).
+
+Three arms, identical round semantics:
+
+* ``legacy_loop`` — the pre-scan per-round driver shape: host-side
+  ``_stack_batches`` gather (O(N*steps) numpy indexing + H2D copy), a
+  host fading handoff, separate jitted client-step / round-engine / eval
+  dispatches, a forced eval sync, and per-field ``np.asarray`` logging
+  every round — what the fused engine replaced;
+* ``fused_round`` — today's ``run_round`` debug path: the same fused
+  step program as the scan, dispatched one round at a time with per-round
+  host logging;
+* ``scan`` — ``run_scanned``: a whole chunk of rounds as one donated
+  jitted ``lax.scan``, logs materialized once per chunk. Timed at
+  ``eval_every=1`` (strictly the same work as the loops) and
+  ``eval_every=5`` (the strided-eval operating point).
+
+Writes ``BENCH_scan_engine.json`` at the repo root for the perf
+trajectory (headline: scan rounds/sec over the legacy per-round driver).
+
+  PYTHONPATH=src python -m benchmarks.scan_engine_bench [--fast] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ChannelConfig, FairEnergyConfig, FLConfig
+from repro.fl import FederatedTrainer
+
+D_IN, D_HIDDEN, N_CLASSES = 64, 128, 10   # ~9.6k params (round_engine_bench)
+SHARD = 160
+
+REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+
+def _loss_fn(p, batch):
+    hid = jnp.tanh(batch["x"] @ p["w1"])
+    ll = jax.nn.log_softmax(hid @ p["w2"])
+    return -jnp.mean(jnp.take_along_axis(ll, batch["y"][:, None], 1)), {}
+
+
+def make_trainer(n_clients: int, local_steps: int, batch: int, seed=0):
+    rng = np.random.default_rng(seed)
+    params = {"w1": jnp.asarray(rng.normal(size=(D_IN, D_HIDDEN)).astype(np.float32) * 0.05),
+              "w2": jnp.asarray(rng.normal(size=(D_HIDDEN, N_CLASSES)).astype(np.float32) * 0.05)}
+    datasets = [{"x": rng.normal(size=(SHARD, D_IN)).astype(np.float32),
+                 "y": rng.integers(0, N_CLASSES, size=SHARD)}
+                for _ in range(n_clients)]
+    tx = jnp.asarray(rng.normal(size=(512, D_IN)).astype(np.float32))
+    ty = jnp.asarray(rng.integers(0, N_CLASSES, size=512))
+
+    def eval_fn(p):
+        lg = jnp.tanh(tx @ p["w1"]) @ p["w2"]
+        return jnp.mean((jnp.argmax(lg, -1) == ty).astype(jnp.float32))
+
+    fl_cfg = FLConfig(local_steps=local_steps, local_batch=batch, lr=0.05)
+    return FederatedTrainer(
+        model_loss=_loss_fn, model_params=params, client_datasets=datasets,
+        eval_fn=eval_fn, fl_cfg=fl_cfg, fe_cfg=FairEnergyConfig(eta_auto=False),
+        ch_cfg=ChannelConfig(n_clients=n_clients), controller="scoremax",
+        fixed_k=max(1, n_clients // 5), seed=seed)
+
+
+def _time_interleaved(arms: dict, rounds: int, reps: int = 3) -> dict:
+    """rounds/sec per arm, best of ``reps`` *interleaved* repetitions —
+    robust to the throughput drift of shared/throttled CPUs, which would
+    otherwise skew arms measured minutes apart."""
+    for fn in arms.values():
+        fn()                               # compile + warm caches
+    best = {name: float("inf") for name in arms}
+    for _ in range(reps):
+        for name, fn in arms.items():
+            t0 = time.perf_counter()
+            fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return {name: rounds / dt for name, dt in best.items()}
+
+
+class _HostShard:
+    """The seed ``ClientDataset`` iteration scheme (shuffled permutation,
+    cyclic wrap, exact-size batches) over arbitrary-keyed arrays — the
+    host-side gather the device-resident sampler replaced."""
+
+    def __init__(self, arrays: dict, batch: int, seed: int):
+        self.arrays = arrays
+        self.n = len(next(iter(arrays.values())))
+        self.batch = batch
+        self._rng = np.random.default_rng(seed)
+        self._perm = self._rng.permutation(self.n)
+        self._cursor = 0
+
+    def next_batch(self) -> dict:
+        parts, need = [], self.batch
+        while need > 0:
+            if self._cursor >= len(self._perm):
+                self._perm = self._rng.permutation(self.n)
+                self._cursor = 0
+            take = min(need, len(self._perm) - self._cursor)
+            parts.append(self._perm[self._cursor:self._cursor + take])
+            self._cursor += take
+            need -= take
+        idx = np.concatenate(parts) if len(parts) > 1 else parts[0]
+        return {k: v[idx] for k, v in self.arrays.items()}
+
+
+def _legacy_round_driver(tr, local_steps: int, batch: int):
+    """The pre-scan system (PR-1) as the perf-trajectory baseline: host
+    ``_stack_batches`` gather (O(N*steps) numpy indexing + H2D copy) +
+    numpy fading handoff + separate client-step / engine / eval dispatches
+    + per-field ``np.asarray`` logging, with the PR-1 engine semantics
+    (the sparsify pass always runs — no gamma=1 skip)."""
+    from repro.fl.server import RoundLog, make_round_engine
+
+    engine = make_round_engine(**tr._core_kwargs(), skip_full_sparsify=False)
+    host = {k: np.asarray(v) for k, v in tr._data.arrays.items()}
+    lengths = np.asarray(tr._data.lengths)
+    shards = [_HostShard({k: v[i][:lengths[i]] for k, v in host.items()},
+                         batch, seed=i) for i in range(tr.n_clients)]
+    history = []
+
+    def stack_batches():
+        per_client = [[ds.next_batch() for _ in range(local_steps)]
+                      for ds in shards]
+        keys = per_client[0][0].keys()
+        return {k: jnp.asarray(np.stack(
+                    [np.stack([b[k] for b in cb]) for cb in per_client]))
+                for k in keys}
+
+    def run_round(r):
+        h = jnp.asarray(tr.network.gains(r), jnp.float32)
+        batches = stack_batches()
+        updates, u_norms, losses = tr._client_step(tr.params, batches)
+        key = jax.random.fold_in(tr.key, r)
+        tr.params, dec, tr.ctrl_state = engine(
+            tr.params, updates, u_norms, h, tr._P, jnp.int32(r), key,
+            tr.ctrl_state)
+        acc = float(tr.eval_fn(tr.params))           # forced sync
+        x = np.asarray(dec.x)
+        history.append(RoundLog(
+            round=r, selected=x, gamma=np.asarray(dec.gamma),
+            bandwidth=np.asarray(dec.bandwidth), energy=np.asarray(dec.energy),
+            accuracy=acc, loss=float(np.mean(np.asarray(losses))),
+            n_selected=int(x.sum())))
+
+    return run_round
+
+
+def bench(n_clients=50, rounds=30, local_steps=2, batch=32, eval_every=5,
+          reps=3):
+    tr_legacy = make_trainer(n_clients, local_steps, batch)
+    legacy_round = _legacy_round_driver(tr_legacy, local_steps, batch)
+    tr_loop = make_trainer(n_clients, local_steps, batch)
+    tr_scan = make_trainer(n_clients, local_steps, batch)
+    tr_strided = make_trainer(n_clients, local_steps, batch)
+
+    rps = _time_interleaved({
+        "legacy": lambda: [legacy_round(r) for r in range(rounds)],
+        "fused": lambda: [tr_loop.run_round(r) for r in range(rounds)],
+        "scan": lambda: tr_scan.run_scanned(rounds, eval_every=1,
+                                            verbose=False),
+        "strided": lambda: tr_strided.run_scanned(rounds,
+                                                  eval_every=eval_every,
+                                                  verbose=False),
+    }, rounds, reps=reps)
+
+    return {
+        "workload": "round_engine_bench softmax / scoremax",
+        "n_clients": n_clients, "rounds_per_chunk": rounds,
+        "local_steps": local_steps, "batch": batch,
+        "legacy_loop_rounds_per_sec": round(rps["legacy"], 2),
+        "fused_round_rounds_per_sec": round(rps["fused"], 2),
+        "scan_rounds_per_sec": round(rps["scan"], 2),
+        "scan_speedup_vs_legacy_loop": round(rps["scan"] / rps["legacy"], 2),
+        "scan_speedup_vs_fused_round": round(rps["scan"] / rps["fused"], 2),
+        f"scan_eval_every{eval_every}_rounds_per_sec": round(rps["strided"], 2),
+        f"scan_eval_every{eval_every}_speedup_vs_legacy_loop":
+            round(rps["strided"] / rps["legacy"], 2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: tiny round count, result not meaningful")
+    ap.add_argument("--clients", type=int, default=50)
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--out", default=os.path.join(REPO_ROOT, "BENCH_scan_engine.json"))
+    a = ap.parse_args()
+    if a.fast:
+        res = bench(n_clients=8, rounds=4, eval_every=2)
+    else:
+        res = bench(n_clients=a.clients, rounds=a.rounds)
+    print(json.dumps(res, indent=1))
+    if not a.fast:
+        with open(a.out, "w") as f:
+            json.dump(res, f, indent=1)
+            f.write("\n")
+        print(f"wrote {a.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,5 +15,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=15)
     ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--seeds", type=int, default=0,
+                    help="N>0: add a vmapped N-seed error-bar sweep")
+    ap.add_argument("--eval-every", type=int, default=1)
     a = ap.parse_args()
-    main(out="experiments/fl_example.json", n_clients=a.clients, rounds=a.rounds)
+    main(out="experiments/fl_example.json", n_clients=a.clients,
+         rounds=a.rounds, eval_every=a.eval_every,
+         sweep_seeds=list(range(a.seeds)) if a.seeds else None)

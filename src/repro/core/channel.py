@@ -40,9 +40,32 @@ def comm_energy(gamma: Array, B: Array, P: Array, h: Array, s_bits: float,
     return P * comm_time(gamma, B, P, h, s_bits, i_bits, n0)
 
 
+def round_fading(key: Array, round_idx, n: int) -> Array:
+    """Rayleigh fading powers for round ``round_idx`` — a pure function of
+    (key, round): ``fold_in`` then an exponential draw, so the same round
+    always sees the same channels regardless of host call order, and the
+    draw is traceable inside jit/scan programs."""
+    rkey = jax.random.fold_in(key, round_idx)
+    return jax.random.exponential(rkey, (n,), jnp.float32)
+
+
+def round_gains(key: Array, pathloss: Array, round_idx, rayleigh: bool = True) -> Array:
+    """h_i^r = pathloss_i x fade_i^r (fade == 1 when Rayleigh is off)."""
+    pathloss = jnp.asarray(pathloss, jnp.float32)
+    if not rayleigh:
+        return pathloss
+    return pathloss * round_fading(key, round_idx, pathloss.shape[0])
+
+
 class WirelessNetwork:
-    """Static client geometry + per-round fading draws (host-side numpy RNG,
-    gains handed to the jitted controller as arrays)."""
+    """Static client geometry + per-round fading.
+
+    Fading is a pure function of (seed, round): ``gains(r)`` derives the
+    round's draw by folding ``r`` into a fixed PRNG key, so re-running or
+    resuming a round reproduces its channels exactly (the old host-side
+    ``np.random.Generator`` made gains depend on call *order*). The same
+    ``fade_key``/``pathloss`` feed the traced in-jit draw used by the
+    fused scan engine (``repro.fl.server``)."""
 
     def __init__(self, cfg, seed: int = 0):
         rng = np.random.default_rng(seed)
@@ -51,11 +74,11 @@ class WirelessNetwork:
         self.power = rng.uniform(cfg.power_min, cfg.power_max, n)          # P_i
         self.distance = rng.uniform(50.0, cfg.cell_radius_m, n)            # d_i
         self.pathloss = REF_GAIN_1M * self.distance ** (-cfg.pathloss_exp)
-        self._rng = rng
+        self.fade_key = jax.random.PRNGKey(seed)
+        self._pathloss_j = jnp.asarray(self.pathloss, jnp.float32)
 
-    def gains(self, round_idx: int | None = None) -> np.ndarray:
-        """h_i^r — pathloss x Rayleigh fading (exponential power)."""
-        if self.cfg.rayleigh:
-            fade = self._rng.exponential(1.0, len(self.pathloss))
-            return self.pathloss * fade
-        return self.pathloss.copy()
+    def gains(self, round_idx: int = 0) -> np.ndarray:
+        """h_i^r — pathloss x Rayleigh fading (exponential power), pure in
+        (seed, round_idx)."""
+        return np.asarray(round_gains(self.fade_key, self._pathloss_j,
+                                      round_idx, self.cfg.rayleigh))

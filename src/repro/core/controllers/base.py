@@ -11,7 +11,11 @@ gamma, bandwidth B, per-client energy) plus its carried state:
 Both methods must be pure JAX (traceable under ``jax.jit``): any
 randomness comes from ``obs.key``, never from host-side RNGs, so the whole
 decide -> sparsify -> aggregate round can be one jitted program (see
-``repro.fl.server.make_round_engine``).
+``repro.fl.server.make_round_engine``). State must additionally be a
+fixed-shape array pytree (or ``()``): it threads through the carry of the
+multi-round ``lax.scan`` engine and the vmapped seed sweep
+(``repro.fl.server.make_scan_engine``), so its structure and shapes cannot
+depend on the round.
 
 Controllers register under a name with ``@register_controller("name")``
 and are built from a ``ControllerContext`` — the static per-run constants

@@ -21,7 +21,9 @@ def golden_section_minimize(f: Callable, lo, hi, *, iters: int = 60):
     """Minimize scalar-unimodal ``f`` elementwise over broadcast bounds.
 
     ``f`` must accept and return arrays of the bracket's shape. Returns
-    (x_min, f(x_min)).
+    (x_min, f_min) — the better of the two interior probe points of the
+    final bracket, whose ``f`` values are already in hand, so convergence
+    costs no extra evaluation (f can be a full [N,G] energy model).
     """
     lo = jnp.asarray(lo, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
     hi = jnp.broadcast_to(jnp.asarray(hi, lo.dtype), jnp.broadcast_shapes(lo.shape, jnp.shape(hi)))
@@ -43,5 +45,5 @@ def golden_section_minimize(f: Callable, lo, hi, *, iters: int = 60):
     d0 = lo + INVPHI * (hi - lo)
     state = (lo, hi, c0, d0, f(c0), f(d0))
     a, b, c, d, fc, fd = jax.lax.fori_loop(0, iters, body, state)
-    x = 0.5 * (a + b)
-    return x, f(x)
+    take_c = fc <= fd
+    return jnp.where(take_c, c, d), jnp.where(take_c, fc, fd)

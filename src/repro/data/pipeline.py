@@ -1,6 +1,22 @@
-"""Minimal per-client batch pipeline with deterministic shuffling."""
+"""Per-client batch pipelines.
+
+Two forms, one keep rule (every batch is exactly ``batch`` examples):
+
+* ``ClientDataset`` — the host-side cyclic/shuffled iterator (debug path,
+  numpy indexing per call);
+* ``DeviceClientData`` + ``sample_round_batches`` — all client shards
+  padded to a common length and resident on device as ``[N, L, ...]``
+  stacks, with batch selection a *traced* pure function of
+  (key, round, client). This is what lets a whole chunk of FL rounds run
+  as one ``lax.scan`` program with zero host gathers
+  (``repro.fl.server.FederatedTrainer.run_scanned``).
+"""
 from __future__ import annotations
 
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -37,3 +53,62 @@ class ClientDataset:
             need -= take
         idx = np.concatenate(parts) if len(parts) > 1 else parts[0]
         return {"images": self.images[idx], "labels": self.labels[idx]}
+
+
+class DeviceClientData(NamedTuple):
+    """All client shards on device: each array is [N, L_pad, ...] with the
+    true shard sizes in ``lengths`` (padding rows are zeros and are never
+    sampled — indices are always drawn below ``lengths[i]``)."""
+    arrays: dict            # field -> [N, L_pad, ...] jnp array
+    lengths: jnp.ndarray    # [N] int32
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.lengths.shape[0])
+
+
+def stack_client_datasets(datasets) -> DeviceClientData:
+    """Pad + stack per-client shards into device-resident arrays.
+
+    ``datasets`` is a list of ``ClientDataset`` (mapped to their
+    images/labels fields) or a list of dicts of equal-keyed numpy/jnp
+    arrays with the example axis leading.
+    """
+    dicts = [{"images": d.images, "labels": d.labels}
+             if isinstance(d, ClientDataset) else dict(d) for d in datasets]
+    keys = list(dicts[0].keys())
+    lengths = np.array([len(next(iter(d.values()))) for d in dicts], np.int32)
+    if (lengths == 0).any():
+        raise ValueError("empty client shard — drop the client or re-draw "
+                         "the partition")
+    L = int(lengths.max())
+    arrays = {}
+    for k in keys:
+        parts = []
+        for d, n in zip(dicts, lengths):
+            a = np.asarray(d[k])
+            pad = [(0, L - int(n))] + [(0, 0)] * (a.ndim - 1)
+            parts.append(np.pad(a, pad))
+        arrays[k] = jnp.asarray(np.stack(parts))
+    return DeviceClientData(arrays=arrays, lengths=jnp.asarray(lengths))
+
+
+def sample_round_batches(data: DeviceClientData, key, round_idx,
+                         local_steps: int, batch: int) -> dict:
+    """Traced per-round minibatch gather: field -> [N, local_steps, batch, ...].
+
+    A pure function of (key, round, client): the round is folded into the
+    key, one subkey per client, and indices are drawn uniformly below the
+    client's true shard length (sampling with replacement — the traced
+    analogue of the host iterator's reshuffled epochs). Fully jit/scan
+    compatible; no host work.
+    """
+    rkey = jax.random.fold_in(key, round_idx)
+    ckeys = jax.random.split(rkey, data.lengths.shape[0])
+
+    def one_client(arrs, length, ck):
+        u = jax.random.uniform(ck, (local_steps, batch))
+        idx = jnp.minimum((u * length).astype(jnp.int32), length - 1)
+        return jax.tree_util.tree_map(lambda v: v[idx], arrs)
+
+    return jax.vmap(one_client)(data.arrays, data.lengths, ckeys)

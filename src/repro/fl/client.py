@@ -40,7 +40,8 @@ def local_update(params, dataset, local_step, n_steps: int):
     return delta, metrics
 
 
-def make_batched_client_step(loss_fn: Callable, lr: float, opt_name: str = "sgd"):
+def make_batched_client_step(loss_fn: Callable, lr: float, opt_name: str = "sgd",
+                             jit: bool = True):
     """Vectorized replacement for the per-client Python loop.
 
     Returns a jitted ``fn(params, batches) -> (updates [N,D], u_norms [N],
@@ -53,6 +54,9 @@ def make_batched_client_step(loss_fn: Callable, lr: float, opt_name: str = "sgd"
     back flattened (fp32) and stacked, ready for the fused
     sparsify/aggregate in the round engine. ``losses`` is each client's
     last-step training loss (matches the metrics of the loop path).
+
+    ``jit=False`` returns the bare vmapped function for composition into a
+    larger traced program (e.g. the multi-round ``lax.scan`` engine).
     """
     from repro.fl.updates import flatten_update
 
@@ -70,4 +74,5 @@ def make_batched_client_step(loss_fn: Callable, lr: float, opt_name: str = "sgd"
         vec = flatten_update(delta)
         return vec, jnp.sqrt(jnp.sum(vec * vec)), loss
 
-    return jax.jit(jax.vmap(one_client, in_axes=(None, 0)))
+    batched = jax.vmap(one_client, in_axes=(None, 0))
+    return jax.jit(batched) if jit else batched

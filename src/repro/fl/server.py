@@ -1,10 +1,9 @@
-"""Federated server: vectorized per-round orchestration on the controller API.
+"""Federated server: fused multi-round training on the controller API.
 
 Round r (paper Sec. II-A + Algorithm 1):
   1. every client runs its local steps — all clients at once via a
      ``vmap`` batched client step (static local steps unrolled) that
-     returns stacked flat
-     updates [N, D] and norms ||u_i|| (one jitted call, no per-client
+     returns stacked flat updates [N, D] and norms ||u_i|| (no per-client
      Python loop);
   2. a *controller* (any ``repro.core.controllers`` registry entry, or a
      custom instance implementing init/decide) maps the round's
@@ -14,27 +13,48 @@ Round r (paper Sec. II-A + Algorithm 1):
   4. the sparse updates are combined by a fused masked |D_i|-weighted
      aggregation and applied to the global model.
 
-Steps 2-4 — decide -> sparsify -> aggregate -> apply — execute as a single
-jitted program (``make_round_engine``); the only host work per round is
-batch gathering, channel fading draws, and logging. Strategy choice is
-data (``FederatedTrainer(..., controller="scoremax")`` or a controller
-instance), not a string if/elif in the trainer.
+Two drivers share one round body (``_make_round_core``):
+
+* ``run_round``/``run`` — the per-round **debug path**: one jitted
+  decide -> sparsify -> aggregate -> apply program per round, with host
+  logging after every round;
+* ``run_scanned`` — the **fused engine**: a whole chunk of rounds as one
+  donated jitted ``jax.lax.scan``. Batch sampling happens in-trace from
+  device-resident padded client shards (``repro.data.sample_round_batches``),
+  Rayleigh fading is drawn in-jit via ``jax.random.fold_in``
+  (``repro.core.channel.round_gains``), accuracy evaluation is strided
+  (``eval_every``), and per-round logs come back as stacked scan outputs
+  materialized on host once per chunk. Both paths draw identical batches,
+  fading, and controller keys, so they produce matching trajectories
+  (pinned by ``tests/test_scan_engine.py``).
+
+``run_sweep`` vmaps the scanned engine over per-seed key sets, producing
+multi-seed accuracy/energy curves at roughly single-run wall-clock.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.channel import WirelessNetwork
+from repro.core.channel import WirelessNetwork, round_gains
 from repro.core.controllers import (Controller, ControllerContext,
                                     RoundObservation, make_controller)
+from repro.data.pipeline import sample_round_batches, stack_client_datasets
 from repro.fl import compression
 from repro.fl.client import make_batched_client_step
 from repro.fl.updates import tree_spec, unflatten_update
+
+
+# PRNG stream tags (folded into the per-seed base key): far above any
+# realistic round index so the fading stream's fold_in(base, round) can
+# never collide with another stream's base key
+_CTRL_STREAM = 1 << 20
+_SAMPLE_STREAM = 2 << 20
 
 
 @dataclasses.dataclass
@@ -44,7 +64,7 @@ class RoundLog:
     gamma: np.ndarray
     bandwidth: np.ndarray
     energy: np.ndarray          # J per client
-    accuracy: float
+    accuracy: float             # NaN on rounds skipped by eval_every
     loss: float
     n_selected: int
 
@@ -53,26 +73,31 @@ class RoundLog:
         return float(self.energy.sum())
 
 
-def make_round_engine(*, controller: Controller, spec, weights: jnp.ndarray,
-                      server_lr: float, use_pallas: bool = False,
-                      block: int = compression.DEFAULT_BLOCK):
-    """Builds the jitted decide -> sparsify -> aggregate -> apply program.
+def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
+                     server_lr: float, use_pallas: bool = False,
+                     block: int = compression.DEFAULT_BLOCK,
+                     skip_full_sparsify: bool = True):
+    """Pure decide -> sparsify -> aggregate -> apply round body.
 
     Closes over the controller (its ``decide`` must be traceable), the
     pytree spec of the model, and the static |D_i| aggregation weights.
-    Returns ``engine(params, updates, u_norms, h, P, r, key, ctrl_state)
-    -> (new_params, RoundDecision, ctrl_state)``.
+    Returns ``core(params, updates, u_norms, h, P, r, key, ctrl_state)
+    -> (new_params, RoundDecision, ctrl_state)`` — traceable, shared by
+    the per-round jit and the multi-round scan.
     """
 
-    @jax.jit
-    def engine(params, updates, u_norms, h, P, r, key, ctrl_state):
+    def core(params, updates, u_norms, h, P, r, key, ctrl_state):
         obs = RoundObservation(u_norms=u_norms, h=h, P=P, round=r, key=key)
         dec, new_state = controller.decide(obs, ctrl_state)
 
         xf = dec.x.astype(jnp.float32)
-        gamma = jnp.clip(dec.gamma, 1e-6, 1.0)
+        # unselected rows carry zero aggregation weight, so their sparsity
+        # level is irrelevant — treat them as gamma=1 so full-precision
+        # rounds (every *selected* gamma == 1) skip the sparsify pass
+        gamma = jnp.where(dec.x, jnp.clip(dec.gamma, 1e-6, 1.0), 1.0)
         sparse = compression.batch_block_topk(updates, gamma, block=block,
-                                              use_pallas=use_pallas)
+                                              use_pallas=use_pallas,
+                                              skip_full=skip_full_sparsify)
         w = xf * weights                                        # [N]
         wsum = jnp.sum(w)
         agg = (w @ sparse) / jnp.maximum(wsum, 1e-12) * server_lr
@@ -82,7 +107,66 @@ def make_round_engine(*, controller: Controller, spec, weights: jnp.ndarray,
             lambda p, d: p + d.astype(p.dtype), params, delta_tree)
         return new_params, dec, new_state
 
-    return engine
+    return core
+
+
+def make_round_engine(*, controller: Controller, spec, weights: jnp.ndarray,
+                      server_lr: float, use_pallas: bool = False,
+                      block: int = compression.DEFAULT_BLOCK,
+                      skip_full_sparsify: bool = True):
+    """Jitted single-round engine (standalone / back-compat API)."""
+    return jax.jit(_make_round_core(
+        controller=controller, spec=spec, weights=weights,
+        server_lr=server_lr, use_pallas=use_pallas, block=block,
+        skip_full_sparsify=skip_full_sparsify))
+
+
+def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
+                     server_lr: float, client_step, eval_fn,
+                     pathloss: jnp.ndarray, P: jnp.ndarray, rayleigh: bool,
+                     local_steps: int, batch: int, use_pallas: bool = False,
+                     block: int = compression.DEFAULT_BLOCK, unroll: int = 1):
+    """Builds the fused multi-round scan program.
+
+    Returns ``scan_fn(params, ctrl_state, data, keys, start_round,
+    last_round, eval_every, n_rounds)`` executing ``n_rounds`` (static)
+    FL rounds as one ``lax.scan``: traced fading + batch sampling +
+    client vmap step + decide/sparsify/aggregate/apply + strided eval.
+    ``keys`` is ``dict(fade=..., sample=..., ctrl=...)`` PRNG keys;
+    ``eval_every`` is a traced int (accuracy is NaN on skipped rounds;
+    the ``last_round`` index is always evaluated). Outputs are stacked
+    per-round logs. Wrap in ``jax.jit(..., static_argnames="n_rounds",
+    donate_argnums=(0, 1))`` — or ``vmap`` over ``keys`` for sweeps.
+    """
+    core = _make_round_core(controller=controller, spec=spec, weights=weights,
+                            server_lr=server_lr, use_pallas=use_pallas,
+                            block=block)
+
+    def scan_fn(params, ctrl_state, data, keys, start_round, last_round,
+                eval_every, n_rounds: int):
+        def step(carry, r):
+            p, state = carry
+            h = round_gains(keys["fade"], pathloss, r, rayleigh)
+            batches = sample_round_batches(data, keys["sample"], r,
+                                           local_steps, batch)
+            updates, u_norms, losses = client_step(p, batches)
+            ckey = jax.random.fold_in(keys["ctrl"], r)
+            p, dec, state = core(p, updates, u_norms, h, P, r, ckey, state)
+            do_eval = ((r % eval_every) == 0) | (r == last_round)
+            acc = jax.lax.cond(do_eval,
+                               lambda q: eval_fn(q).astype(jnp.float32),
+                               lambda q: jnp.float32(jnp.nan), p)
+            out = dict(x=dec.x, gamma=dec.gamma, bandwidth=dec.bandwidth,
+                       energy=dec.energy, accuracy=acc,
+                       loss=jnp.mean(losses))
+            return (p, state), out
+
+        rs = start_round + jnp.arange(n_rounds, dtype=jnp.int32)
+        (params, ctrl_state), outs = jax.lax.scan(step, (params, ctrl_state),
+                                                  rs, unroll=unroll)
+        return params, ctrl_state, outs
+
+    return scan_fn
 
 
 class FederatedTrainer:
@@ -93,6 +177,11 @@ class FederatedTrainer:
         ``repro.core.controllers.available_controllers()``) — or any object
         implementing the Controller protocol.
     ``strategy`` is accepted as a deprecated alias for ``controller``.
+
+    Client shards live on device as padded ``[N, L, ...]`` stacks; batch
+    sampling and channel fading are pure functions of (seed, round), so
+    ``run_round`` (debug) and ``run_scanned`` (fused) see identical
+    randomness. ``eval_fn`` must be JAX-traceable (params -> scalar).
     """
 
     def __init__(self, *, model_loss, model_params, client_datasets,
@@ -105,8 +194,9 @@ class FederatedTrainer:
         if strategy is not None:
             controller = strategy
         self.loss_fn = model_loss
-        self.params = model_params
-        self.datasets = client_datasets
+        # private copy: the fused engine donates the params buffer, which
+        # must never consume the caller's (possibly shared) arrays
+        self.params = jax.tree_util.tree_map(jnp.array, model_params)
         self.eval_fn = eval_fn
         self.fl_cfg, self.fe_cfg, self.ch_cfg = fl_cfg, fe_cfg, ch_cfg
         self.n_clients = len(client_datasets)
@@ -128,11 +218,23 @@ class FederatedTrainer:
                                              type(controller).__name__.lower()))
         self.ctrl_state = self.controller.init(self.n_clients)
 
-        self.key = jax.random.PRNGKey(seed + 1)
-        self._client_step = make_batched_client_step(model_loss, fl_cfg.lr)
-        self._engine = None
+        self.seed = seed
+        # three independent streams off one per-seed base key (fading uses
+        # the base itself, folded by round): distinct stream tags far above
+        # any round index, so no stream ever reuses another's bits — which
+        # seed+1/seed+2 style bases would do across adjacent sweep seeds
+        base = jax.random.PRNGKey(seed)
+        self.key = jax.random.fold_in(base, _CTRL_STREAM)       # controller
+        self.sample_key = jax.random.fold_in(base, _SAMPLE_STREAM)
+        self._client_step_raw = make_batched_client_step(model_loss, fl_cfg.lr,
+                                                         jit=False)
+        self._client_step = jax.jit(self._client_step_raw)
+        self._scan_engine = None
+        self._scan_fn_raw = None
+        self._sweep_engine = None
         self._P = jnp.asarray(self.network.power, jnp.float32)
-        weights = np.array([len(d) for d in client_datasets], np.float64)
+        self._data = stack_client_datasets(client_datasets)
+        weights = np.asarray(self._data.lengths, np.float64)
         self.weights = weights / weights.sum()
         self.history: list[RoundLog] = []
 
@@ -142,52 +244,89 @@ class FederatedTrainer:
         return self.controller_name
 
     # ------------------------------------------------------------------
-    def _stack_batches(self):
-        """Gather [n_clients, local_steps, batch, ...] stacked minibatches."""
-        steps = self.fl_cfg.local_steps
-        per_client = [[ds.next_batch() for _ in range(steps)]
-                      for ds in self.datasets]
-        keys = per_client[0][0].keys()
-        return {k: jnp.asarray(np.stack(
-                    [np.stack([b[k] for b in cb]) for cb in per_client]))
-                for k in keys}
+    @functools.cached_property
+    def _sampler(self):
+        return jax.jit(functools.partial(
+            sample_round_batches, local_steps=self.fl_cfg.local_steps,
+            batch=self.fl_cfg.local_batch))
 
-    def _get_engine(self):
-        if self._engine is None:
-            self._engine = make_round_engine(
-                controller=self.controller, spec=self.spec,
-                weights=jnp.asarray(self.weights, jnp.float32),
-                server_lr=self.fl_cfg.server_lr, use_pallas=self.use_pallas)
-        return self._engine
+    def _round_batches(self, r: int):
+        """Round-r minibatches [N, steps, batch, ...], traced gather."""
+        return self._sampler(self._data, self.sample_key, r)
+
+    def _core_kwargs(self):
+        return dict(controller=self.controller, spec=self.spec,
+                    weights=jnp.asarray(self.weights, jnp.float32),
+                    server_lr=self.fl_cfg.server_lr, use_pallas=self.use_pallas)
+
+    def _get_scan_engine(self):
+        if self._scan_engine is None:
+            scan_fn = make_scan_engine(
+                **self._core_kwargs(), client_step=self._client_step_raw,
+                eval_fn=self.eval_fn,
+                pathloss=jnp.asarray(self.network.pathloss, jnp.float32),
+                P=self._P, rayleigh=self.ch_cfg.rayleigh,
+                local_steps=self.fl_cfg.local_steps,
+                batch=self.fl_cfg.local_batch)
+            self._scan_engine = jax.jit(scan_fn, static_argnames="n_rounds",
+                                        donate_argnums=(0, 1))
+            self._scan_fn_raw = scan_fn
+        return self._scan_engine
+
+    def _get_sweep_engine(self):
+        """vmap of the scan program over stacked per-seed keys, jitted and
+        cached (XLA caches per (n_rounds, lane-count) under one wrapper)."""
+        if self._sweep_engine is None:
+            self._get_scan_engine()
+            scan_fn = self._scan_fn_raw
+
+            @functools.partial(jax.jit, static_argnames="n_rounds")
+            def sweep(params, state, data, keys, eval_every, n_rounds: int):
+                def one(ks):
+                    _, _, outs = scan_fn(params, state, data, ks,
+                                         jnp.int32(0), jnp.int32(n_rounds - 1),
+                                         eval_every, n_rounds)
+                    return outs
+                return jax.vmap(one)(keys)
+
+            self._sweep_engine = sweep
+        return self._sweep_engine
+
+    def _invalidate_engines(self):
+        self._scan_engine = None
+        self._scan_fn_raw = None
+        self._sweep_engine = None
+
+    def _maybe_calibrate(self, r: int):
+        """One-shot eta_auto calibration from round-r observations. The
+        engines trace the controller's (static) config, so they are
+        rebuilt after calibration freezes eta."""
+        if not getattr(self.controller, "needs_calibration", False):
+            return
+        _, u_norms, _ = self._client_step(self.params, self._round_batches(r))
+        h = self.network.gains(r)
+        self.controller.calibrate(np.asarray(u_norms), np.asarray(h),
+                                  self.network.power)
+        self._invalidate_engines()
 
     # ------------------------------------------------------------------
     def run_round(self, r: int) -> RoundLog:
-        h = jnp.asarray(self.network.gains(r), jnp.float32)
-        batches = self._stack_batches()
-        updates, u_norms, losses = self._client_step(self.params, batches)
+        """One round, one host round-trip — the debug path.
 
-        if getattr(self.controller, "needs_calibration", False):
-            # one-shot eta_auto; the engine traces the controller's config,
-            # so (re)build it only after calibration freezes eta
-            self.controller.calibrate(np.asarray(u_norms), np.asarray(h),
-                                      self.network.power)
-            self._engine = None
-
-        engine = self._get_engine()
-        key = jax.random.fold_in(self.key, r)
-        self.params, dec, self.ctrl_state = engine(
-            self.params, updates, u_norms, h, self._P,
-            jnp.int32(r), key, self.ctrl_state)
-
-        acc = float(self.eval_fn(self.params))
-        x = np.asarray(dec.x)
-        log = RoundLog(round=r, selected=x, gamma=np.asarray(dec.gamma),
-                       bandwidth=np.asarray(dec.bandwidth),
-                       energy=np.asarray(dec.energy), accuracy=acc,
-                       loss=float(np.mean(np.asarray(losses))),
-                       n_selected=int(x.sum()))
-        self.history.append(log)
-        return log
+        Dispatches the *same* fused step program as ``run_scanned``
+        (a chunk of one round), so stepping round-by-round reproduces the
+        scanned trajectory — including knife-edge controller decisions
+        that a differently-fused program could flip (the two chunk
+        lengths still compile separately, so equality is last-ulp-tight
+        rather than guaranteed-bitwise).
+        """
+        self._maybe_calibrate(r)
+        engine = self._get_scan_engine()
+        self.params, self.ctrl_state, outs = engine(
+            self.params, self.ctrl_state, self._data, self._keys(),
+            jnp.int32(r), jnp.int32(r), jnp.int32(1), n_rounds=1)
+        self._append_chunk_logs(r, outs)
+        return self.history[-1]
 
     def run(self, rounds: Optional[int] = None, *, log_every: int = 10,
             verbose: bool = True):
@@ -199,6 +338,94 @@ class FederatedTrainer:
                       f"acc={log.accuracy:.4f} sel={log.n_selected:2d} "
                       f"E={log.total_energy*1e3:.3f} mJ")
         return self.history
+
+    # ------------------------------------------------------- fused engine ----
+    def _keys(self):
+        return {"fade": self.network.fade_key, "sample": self.sample_key,
+                "ctrl": self.key}
+
+    def _append_chunk_logs(self, start: int, outs) -> None:
+        """Materialize one chunk of stacked scan outputs (single host
+        sync) into per-round ``RoundLog``s."""
+        host = {k: np.asarray(v) for k, v in outs.items()}
+        for i in range(host["x"].shape[0]):
+            x = host["x"][i]
+            self.history.append(RoundLog(
+                round=start + i, selected=x, gamma=host["gamma"][i],
+                bandwidth=host["bandwidth"][i], energy=host["energy"][i],
+                accuracy=float(host["accuracy"][i]),
+                loss=float(host["loss"][i]), n_selected=int(x.sum())))
+
+    def run_scanned(self, rounds: Optional[int] = None, *,
+                    chunk: Optional[int] = None, eval_every: int = 1,
+                    verbose: bool = True):
+        """Run ``rounds`` FL rounds through the fused ``lax.scan`` engine.
+
+        ``chunk`` bounds the rounds per compiled program (default: all
+        rounds as one scan); ``eval_every`` strides the in-scan accuracy
+        evaluation (skipped rounds log ``accuracy=NaN``; the final round
+        is always evaluated). Appends to ``history`` exactly like
+        ``run`` and returns it.
+
+        Like ``run``, every call restarts at round 0 — and because all
+        randomness is pure in (seed, round), a second call replays the
+        identical batches and channel draws. Use fresh trainers (or
+        ``run_sweep`` seeds) for independent repetitions.
+        """
+        rounds = rounds or self.fl_cfg.rounds
+        chunk = min(chunk or rounds, rounds)
+        if eval_every < 1:
+            raise ValueError(f"eval_every must be >= 1, got {eval_every} "
+                             "(it strides the in-scan eval; use a large "
+                             "value to evaluate only the final round)")
+        self._maybe_calibrate(0)
+        engine = self._get_scan_engine()
+        keys = self._keys()
+        for s in range(0, rounds, chunk):
+            n = min(chunk, rounds - s)
+            self.params, self.ctrl_state, outs = engine(
+                self.params, self.ctrl_state, self._data, keys,
+                jnp.int32(s), jnp.int32(rounds - 1), jnp.int32(eval_every),
+                n_rounds=n)
+            self._append_chunk_logs(s, outs)
+            if verbose:
+                lg = self.history[-1]
+                print(f"[{self.controller_name}] rounds {s:4d}..{s + n - 1:4d} "
+                      f"acc={lg.accuracy:.4f} sel={lg.n_selected:2d} "
+                      f"E={lg.total_energy*1e3:.3f} mJ")
+        return self.history
+
+    def run_sweep(self, seeds, rounds: Optional[int] = None, *,
+                  eval_every: int = 1) -> dict:
+        """vmap the scanned engine over per-seed key sets.
+
+        Every lane starts from the trainer's *current* params and
+        controller state (the model init on a fresh trainer — sweep
+        before training for independent-run error bars) and shares the
+        client shards and geometry, but draws independent fading, batch,
+        and controller randomness — the multi-seed error-bar protocol at
+        roughly single-run wall-clock.
+        Returns stacked numpy arrays: ``accuracy``/``loss`` [S, R],
+        ``x``/``gamma``/``bandwidth``/``energy`` [S, R, N]. With
+        ``eta_auto`` controllers, eta is calibrated once from this
+        trainer's own round-0 draw and shared across seeds (it is a
+        static config traced into the program). ``history``/``params``
+        are left untouched.
+        """
+        rounds = rounds or self.fl_cfg.rounds
+        if eval_every < 1:
+            raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+        self._maybe_calibrate(0)
+        bases = [jax.random.PRNGKey(int(s)) for s in seeds]
+        keys = {"fade": jnp.stack(bases),
+                "ctrl": jnp.stack([jax.random.fold_in(b, _CTRL_STREAM)
+                                   for b in bases]),
+                "sample": jnp.stack([jax.random.fold_in(b, _SAMPLE_STREAM)
+                                     for b in bases])}
+        outs = self._get_sweep_engine()(
+            self.params, self.ctrl_state, self._data, keys,
+            jnp.int32(eval_every), n_rounds=rounds)
+        return {k: np.asarray(v) for k, v in outs.items()}
 
     # -------------------------------------------------------- statistics ----
     def participation_counts(self) -> np.ndarray:

@@ -176,6 +176,10 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # jax < 0.4.35 returned a one-element list of dicts; newer returns the
+    # dict itself — normalize so the .get() calls below work on both
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     n_dev = mesh.size
