@@ -28,7 +28,7 @@ DATA_KW = dict(confusion=0.55, label_noise=0.05, noise=0.9)
 
 
 def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
-          lr=0.05, local_steps=2):
+          lr=0.05, local_steps=2, mesh=None):
     cfg = CNN_FULL
     imgs, labels = make_fmnist_like(n_train, seed=seed, **DATA_KW)
     ti, tl = make_fmnist_like(n_test, seed=seed + 999,
@@ -51,7 +51,8 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
                                 client_datasets=datasets, eval_fn=eval_fn,
                                 fl_cfg=fl_cfg, fe_cfg=FairEnergyConfig(),
                                 ch_cfg=ChannelConfig(n_clients=n_clients),
-                                controller=controller, seed=seed, **kw)
+                                controller=controller, seed=seed, mesh=mesh,
+                                **kw)
     return make, fl_cfg
 
 
@@ -181,7 +182,8 @@ def summarize(res):
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
-    ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--clients", "--n-clients", dest="clients", type=int,
+                    default=20, help="number of FL clients N")
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--paper", action="store_true",
                     help="full paper scale: N=50, 150 rounds")
@@ -190,10 +192,21 @@ if __name__ == "__main__":
                     help="N>0: vmapped N-seed sweep per strategy (error bars)")
     ap.add_argument("--eval-every", type=int, default=1,
                     help="accuracy-eval stride inside the scanned engine")
+    ap.add_argument("--shard-clients", action="store_true",
+                    help="run the fused engine sharded over a `clients` "
+                         "mesh spanning all visible devices (force multiple "
+                         "CPU devices with XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=K); N is ghost-padded to "
+                         "mesh divisibility")
     ap.add_argument("--out", default="experiments/fl_results.json")
     a = ap.parse_args()
+    mesh = None
+    if a.shard_clients:
+        from repro.sharding import make_clients_mesh
+        mesh = make_clients_mesh()
+        print(f"sharding the client axis over {len(jax.devices())} devices")
     kw = dict(out=a.out, extra_baselines=a.extra_baselines,
-              eval_every=a.eval_every,
+              eval_every=a.eval_every, mesh=mesh,
               sweep_seeds=list(range(a.seeds)) if a.seeds else None)
     if a.paper:
         main(n_clients=50, rounds=150, **kw)

@@ -1,0 +1,184 @@
+"""Scaling sweep: client-axis sharded fused engine vs single device.
+
+Measures ``run_scanned`` rounds/sec for N in {50, 200, 800} clients on a
+1-device run vs an 8-forced-host-device ``clients`` mesh (the CPU stand-in
+for a real multi-chip topology: ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8``). Device count is fixed at process startup, so every
+(N, devices) arm runs in its own *worker subprocess* (same file,
+``--worker``); the orchestrator interleaves whole sweeps and keeps each
+arm's best rep — robust to the throughput drift of shared/throttled CPUs.
+
+Each worker compiles once, then times fresh-trainer repetitions against
+the cached engine (compile excluded). ScoreMax decisions, 2 local steps,
+``eval_every=5`` — the scan_engine_bench workload with a 4x wider hidden
+layer so per-client compute (not dispatch) dominates.
+
+Writes ``BENCH_sharded_engine.json`` at the repo root. Speedups are
+bounded by the *physical* core count — 8 forced host devices on a 2-core
+container cannot exceed ~2x; the JSON records both counts.
+
+  PYTHONPATH=src python -m benchmarks.sharded_engine_bench [--fast] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+D_IN, D_HIDDEN, N_CLASSES = 64, 256, 10
+SHARD = 160
+
+
+def _worker(devices: int, n_clients: int, rounds: int, reps: int,
+            local_steps: int, batch: int) -> None:
+    """Runs in a subprocess with the forced device count already in
+    XLA_FLAGS (set by the orchestrator). Prints one JSON line."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import ChannelConfig, FairEnergyConfig, FLConfig
+    from repro.fl import FederatedTrainer
+    from repro.sharding import make_clients_mesh
+
+    assert len(jax.devices()) >= devices, (len(jax.devices()), devices)
+
+    def loss_fn(p, b):
+        hid = jnp.tanh(b["x"] @ p["w1"])
+        ll = jax.nn.log_softmax(hid @ p["w2"])
+        return -jnp.mean(jnp.take_along_axis(ll, b["y"][:, None], 1)), {}
+
+    rng = np.random.default_rng(0)
+    params = {"w1": jnp.asarray(rng.normal(size=(D_IN, D_HIDDEN)).astype(np.float32) * 0.05),
+              "w2": jnp.asarray(rng.normal(size=(D_HIDDEN, N_CLASSES)).astype(np.float32) * 0.05)}
+    datasets = [{"x": rng.normal(size=(SHARD, D_IN)).astype(np.float32),
+                 "y": rng.integers(0, N_CLASSES, size=SHARD)}
+                for _ in range(n_clients)]
+    tx = jnp.asarray(rng.normal(size=(512, D_IN)).astype(np.float32))
+    ty = jnp.asarray(rng.integers(0, N_CLASSES, size=512))
+
+    def eval_fn(p):
+        lg = jnp.tanh(tx @ p["w1"]) @ p["w2"]
+        return jnp.mean((jnp.argmax(lg, -1) == ty).astype(jnp.float32))
+
+    mesh = make_clients_mesh(devices) if devices > 1 else None
+
+    def make_trainer():
+        return FederatedTrainer(
+            model_loss=loss_fn, model_params=params, client_datasets=datasets,
+            eval_fn=eval_fn,
+            fl_cfg=FLConfig(local_steps=local_steps, local_batch=batch, lr=0.05),
+            fe_cfg=FairEnergyConfig(eta_auto=False),
+            ch_cfg=ChannelConfig(n_clients=n_clients),
+            controller="scoremax", fixed_k=max(1, n_clients // 5), seed=0,
+            mesh=mesh)
+
+    warm = make_trainer()
+    t0 = time.perf_counter()
+    warm.run_scanned(rounds, eval_every=5, verbose=False)   # compile + run
+    first_s = time.perf_counter() - t0
+
+    best = float("inf")
+    for _ in range(reps):
+        tr = make_trainer()
+        tr._scan_engine = warm._scan_engine          # reuse compiled program
+        tr._scan_fn_raw = warm._scan_fn_raw
+        t0 = time.perf_counter()
+        tr.run_scanned(rounds, eval_every=5, verbose=False)
+        best = min(best, time.perf_counter() - t0)
+
+    print(json.dumps({"devices": devices, "n_clients": n_clients,
+                      "rounds_per_sec": round(rounds / best, 3),
+                      "best_rep_s": round(best, 3),
+                      "compile_plus_first_s": round(first_s, 3)}))
+
+
+def _spawn(devices: int, n_clients: int, rounds: int, reps: int,
+           local_steps: int, batch: int) -> dict:
+    env = dict(os.environ)
+    other = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    env["XLA_FLAGS"] = " ".join(
+        [f"--xla_force_host_platform_device_count={devices}"] + other)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--worker",
+         "--devices", str(devices), "--clients", str(n_clients),
+         "--rounds", str(rounds), "--reps", str(reps),
+         "--local-steps", str(local_steps), "--batch", str(batch)],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(f"worker devices={devices} N={n_clients} failed:\n"
+                           + out.stdout + out.stderr)
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def bench(client_counts, device_counts, rounds, reps=2, sweeps=2,
+          local_steps=2, batch=32) -> dict:
+    arms = [(n, d) for n in client_counts for d in device_counts]
+    best: dict = {}
+    for s in range(sweeps):        # interleave whole sweeps against drift
+        for n, d in arms:
+            r = _spawn(d, n, rounds, reps, local_steps, batch)
+            key = (n, d)
+            if key not in best or r["rounds_per_sec"] > best[key]["rounds_per_sec"]:
+                best[key] = r
+            print(f"sweep {s}: N={n} devices={d} "
+                  f"{r['rounds_per_sec']:.2f} rounds/s", file=sys.stderr)
+
+    res = {"workload": f"scoremax softmax d_hidden={D_HIDDEN}, "
+                       f"{local_steps} local steps, batch {batch}, "
+                       f"eval_every=5",
+           "rounds_per_chunk": rounds,
+           "physical_cpus": os.cpu_count(),
+           "device_counts": list(device_counts), "scaling": []}
+    base_dev = min(device_counts)
+    for n in client_counts:
+        row = {"n_clients": n}
+        for d in device_counts:
+            row[f"rounds_per_sec_{d}dev"] = best[(n, d)]["rounds_per_sec"]
+        top = max(d for d in device_counts)
+        row["speedup"] = round(best[(n, top)]["rounds_per_sec"]
+                               / best[(n, base_dev)]["rounds_per_sec"], 2)
+        res["scaling"].append(row)
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: tiny sweep, result not meaningful")
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--clients", type=int, default=200)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--out", default=os.path.join(REPO_ROOT,
+                                                  "BENCH_sharded_engine.json"))
+    a = ap.parse_args()
+    if a.worker:
+        _worker(a.devices, a.clients, a.rounds, a.reps, a.local_steps, a.batch)
+        return
+    if a.fast:
+        res = bench([16], [1, 2], rounds=3, reps=1, sweeps=1)
+    else:
+        res = bench([50, 200, 800], [1, 8], rounds=a.rounds, reps=a.reps)
+    print(json.dumps(res, indent=1))
+    if not a.fast:
+        with open(a.out, "w") as f:
+            json.dump(res, f, indent=1)
+            f.write("\n")
+        print(f"wrote {a.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,9 +18,20 @@ THERMAL_N0 = 4e-21
 REF_GAIN_1M = 1e-3  # -30 dB at 1 m
 
 
+# Bandwidths are clamped to this floor before the rate computation: the
+# true B -> 0 limit (P h / (N0 ln 2)) has unbounded SNR, which overflows
+# fp32 and makes the GSS bandwidth search numerically useless near zero.
+# Contract: callers must never allocate below 1 Hz — ControllerContext
+# rejects configs whose GSS bracket (b_min_frac * b_tot) probes under it.
+RATE_B_FLOOR_HZ = 1.0
+
+
 def shannon_rate(B: Array, P: Array, h: Array, n0: float = THERMAL_N0) -> Array:
-    """bits/s. Safe at B -> 0 (rate -> P h / (N0 ln 2))."""
-    B = jnp.maximum(B, 1.0)
+    """bits/s: R = B log2(1 + P h / (N0 B)), with B clamped to
+    ``RATE_B_FLOOR_HZ``. Below the floor the returned rate is the 1 Hz
+    rate, NOT the analytic B -> 0 limit P h / (N0 ln 2) — rates (and the
+    energies built on them) are only meaningful for B >= 1 Hz."""
+    B = jnp.maximum(B, RATE_B_FLOOR_HZ)
     snr = P * h / (n0 * B)
     return B * jnp.log2(1.0 + snr)
 

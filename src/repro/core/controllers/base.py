@@ -64,6 +64,19 @@ class ControllerContext:
     eco_gamma: float = 0.1
     eco_bandwidth: Optional[float] = None
 
+    def __post_init__(self):
+        # shannon_rate clamps bandwidth to a 1 Hz floor (repro.core.channel)
+        # — a GSS bracket whose lower endpoint b_min_frac * B_tot probes
+        # below that floor would get rates (and energies) from a different
+        # B than the one it charges for. Reject such configs up front.
+        if self.fe_cfg is not None:
+            b_min = getattr(self.fe_cfg, "b_min_frac", None)
+            if b_min is not None and b_min * self.b_tot < 1.0:
+                raise ValueError(
+                    f"b_min_frac * b_tot = {b_min * self.b_tot:.3g} Hz is "
+                    f"below the 1 Hz rate floor of shannon_rate; raise "
+                    f"b_min_frac (>= {1.0 / self.b_tot:.3g}) or b_tot")
+
     @property
     def k(self) -> int:
         """Baseline selection size K (paper: mean FairEnergy count)."""
@@ -72,10 +85,13 @@ class ControllerContext:
     @property
     def eco_bw(self) -> float:
         """EcoRandom per-client bandwidth floor. ``is None`` check so an
-        explicit 0.0 is honoured rather than silently replaced."""
+        explicit 0.0 is honoured rather than silently replaced. The default
+        splits B_tot over the *actual* selection size ``self.k`` (which
+        tracks ``n_clients`` when ``fixed_k`` is unset) — dividing by a
+        fixed 10 oversubscribed the budget 2x at N=100 with K=N//5."""
         if self.eco_bandwidth is not None:
             return self.eco_bandwidth
-        return self.b_tot / max(self.fixed_k or 10, 1)
+        return self.b_tot / max(self.k, 1)
 
 
 @runtime_checkable

@@ -1,8 +1,10 @@
 from .partition import dirichlet_partition, partition_stats
-from .pipeline import (ClientDataset, DeviceClientData, sample_round_batches,
+from .pipeline import (ClientDataset, DeviceClientData, client_sample_keys,
+                       sample_client_batches, sample_round_batches,
                        stack_client_datasets)
 from .synthetic import make_fmnist_like, make_token_stream
 
 __all__ = ["dirichlet_partition", "partition_stats", "ClientDataset",
            "DeviceClientData", "stack_client_datasets", "sample_round_batches",
+           "client_sample_keys", "sample_client_batches",
            "make_fmnist_like", "make_token_stream"]

@@ -13,7 +13,7 @@ Two forms, one keep rule (every batch is exactly ``batch`` examples):
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,21 +58,33 @@ class ClientDataset:
 class DeviceClientData(NamedTuple):
     """All client shards on device: each array is [N, L_pad, ...] with the
     true shard sizes in ``lengths`` (padding rows are zeros and are never
-    sampled — indices are always drawn below ``lengths[i]``)."""
+    sampled — indices are always drawn below ``lengths[i]``). When the
+    client axis is padded for mesh divisibility (``pad_to_multiple``), the
+    trailing *ghost* clients have ``lengths == 0`` — zero shard rows, zero
+    aggregation weight, and (by construction of the trainer) never appear
+    in any controller observation or decision."""
     arrays: dict            # field -> [N, L_pad, ...] jnp array
     lengths: jnp.ndarray    # [N] int32
 
     @property
     def n_clients(self) -> int:
+        """Client-axis size *including* ghost padding."""
         return int(self.lengths.shape[0])
 
 
-def stack_client_datasets(datasets) -> DeviceClientData:
+def stack_client_datasets(datasets, *, pad_to_multiple: int = 1) -> DeviceClientData:
     """Pad + stack per-client shards into device-resident arrays.
 
     ``datasets`` is a list of ``ClientDataset`` (mapped to their
     images/labels fields) or a list of dicts of equal-keyed numpy/jnp
     arrays with the example axis leading.
+
+    ``pad_to_multiple`` rounds the client axis up to a multiple (a mesh's
+    ``clients`` axis size) by appending all-zero *ghost* clients with
+    ``lengths == 0``. Real clients' rows and sampling streams are
+    unchanged by the padding (``client_sample_keys`` splits over the true
+    count and appends separate ghost keys), so a padded run reproduces
+    the unpadded one.
     """
     dicts = [{"images": d.images, "labels": d.labels}
              if isinstance(d, ClientDataset) else dict(d) for d in datasets]
@@ -81,34 +93,79 @@ def stack_client_datasets(datasets) -> DeviceClientData:
     if (lengths == 0).any():
         raise ValueError("empty client shard — drop the client or re-draw "
                          "the partition")
+    if pad_to_multiple < 1:
+        raise ValueError(f"pad_to_multiple must be >= 1, got {pad_to_multiple}")
+    n = len(dicts)
+    n_pad = -(-n // pad_to_multiple) * pad_to_multiple
     L = int(lengths.max())
     arrays = {}
     for k in keys:
         parts = []
-        for d, n in zip(dicts, lengths):
+        for d, ln in zip(dicts, lengths):
             a = np.asarray(d[k])
-            pad = [(0, L - int(n))] + [(0, 0)] * (a.ndim - 1)
+            pad = [(0, L - int(ln))] + [(0, 0)] * (a.ndim - 1)
             parts.append(np.pad(a, pad))
-        arrays[k] = jnp.asarray(np.stack(parts))
+        stacked = np.stack(parts)
+        if n_pad > n:
+            ghost = np.zeros((n_pad - n,) + stacked.shape[1:], stacked.dtype)
+            stacked = np.concatenate([stacked, ghost])
+        arrays[k] = jnp.asarray(stacked)
+    if n_pad > n:
+        lengths = np.concatenate([lengths, np.zeros(n_pad - n, np.int32)])
     return DeviceClientData(arrays=arrays, lengths=jnp.asarray(lengths))
 
 
-def sample_round_batches(data: DeviceClientData, key, round_idx,
-                         local_steps: int, batch: int) -> dict:
-    """Traced per-round minibatch gather: field -> [N, local_steps, batch, ...].
+def client_sample_keys(key, round_idx, n_real: int,
+                       n_padded: Optional[int] = None) -> jnp.ndarray:
+    """The full ``[n_padded]`` per-(round, client) batch key set.
 
-    A pure function of (key, round, client): the round is folded into the
-    key, one subkey per client, and indices are drawn uniformly below the
-    client's true shard length (sampling with replacement — the traced
-    analogue of the host iterator's reshuffled epochs). Fully jit/scan
-    compatible; no host work.
+    Real clients keep the historical stream — ``split(fold_in(key,
+    round), n_real)`` — so trajectories are identical no matter how many
+    ghost clients ride in the stack (``split``'s first-n keys change with
+    the split count, so ghosts must NOT enlarge the split). Ghost rows
+    get ``fold_in`` keys instead; their draws hit zero-length shards and
+    never carry weight, so their stream only needs to exist. Shards of a
+    ``clients`` mesh compute this full (tiny, [N, 2]) set and slice their
+    local chunk — every layout sees the same per-client keys.
     """
     rkey = jax.random.fold_in(key, round_idx)
-    ckeys = jax.random.split(rkey, data.lengths.shape[0])
+    ks = jax.random.split(rkey, n_real)
+    n_padded = n_padded if n_padded is not None else n_real
+    if n_padded > n_real:
+        ghost = jax.vmap(lambda i: jax.random.fold_in(rkey, i))(
+            jnp.arange(n_real, n_padded, dtype=jnp.int32))
+        ks = jnp.concatenate([ks, ghost])
+    return ks
+
+
+def sample_client_batches(arrays, lengths, ckeys, local_steps: int,
+                          batch: int) -> dict:
+    """Draw [n, local_steps, batch, ...] minibatches from stacked shards
+    given explicit per-client keys (the shard-local entry point: a device
+    holding clients [i0, i0+n) passes its slice of the global key set)."""
 
     def one_client(arrs, length, ck):
         u = jax.random.uniform(ck, (local_steps, batch))
         idx = jnp.minimum((u * length).astype(jnp.int32), length - 1)
+        idx = jnp.maximum(idx, 0)      # ghost clients: length 0 -> row 0 (zeros)
         return jax.tree_util.tree_map(lambda v: v[idx], arrs)
 
-    return jax.vmap(one_client)(data.arrays, data.lengths, ckeys)
+    return jax.vmap(one_client)(arrays, lengths, ckeys)
+
+
+def sample_round_batches(data: DeviceClientData, key, round_idx,
+                         local_steps: int, batch: int,
+                         n_real: Optional[int] = None) -> dict:
+    """Traced per-round minibatch gather: field -> [N, local_steps, batch, ...].
+
+    A pure function of (key, round, client): one subkey per client
+    (``client_sample_keys``), indices drawn uniformly below the client's
+    true shard length (sampling with replacement — the traced analogue of
+    the host iterator's reshuffled epochs). Fully jit/scan compatible; no
+    host work. For ghost-padded stacks pass ``n_real`` (the true client
+    count) so real clients keep their unpadded key stream.
+    """
+    n = data.lengths.shape[0]
+    ckeys = client_sample_keys(key, round_idx, n_real or n, n)
+    return sample_client_batches(data.arrays, data.lengths, ckeys,
+                                 local_steps, batch)

@@ -15,33 +15,43 @@ import jax.numpy as jnp
 from repro.optim import make_optimizer
 
 
-def make_local_step(loss_fn: Callable, lr: float, opt_name: str = "sgd"):
-    """Returns jitted fn(params, batch) -> (new_params, metrics)."""
-    opt_init, opt_update = make_optimizer(opt_name)
+def make_local_step(loss_fn: Callable, lr: float, opt_name: str = "sgd",
+                    **opt_kw):
+    """Returns jitted fn(params, batch, opt_state=None) -> (new_params,
+    opt_state, metrics). Pass the returned ``opt_state`` back into the
+    next call — re-initializing it every step silently degrades stateful
+    optimizers (momentum-SGD, AdamW) to their stateless updates. ``None``
+    (the default) initializes a fresh state."""
+    opt_init, opt_update = make_optimizer(opt_name, **opt_kw)
 
     @jax.jit
-    def step(params, batch):
+    def step(params, batch, opt_state):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
-        state = opt_init(params)
-        new_params, _ = opt_update(grads, state, params, lr)
-        return new_params, dict(metrics, loss=loss)
+        new_params, opt_state = opt_update(grads, opt_state, params, lr)
+        return new_params, opt_state, dict(metrics, loss=loss)
 
-    return step
+    def call(params, batch, opt_state=None):
+        if opt_state is None:
+            opt_state = opt_init(params)
+        return step(params, batch, opt_state)
+
+    return call
 
 
 def local_update(params, dataset, local_step, n_steps: int):
-    """Run ``n_steps`` minibatch steps; return (delta pytree, metrics)."""
+    """Run ``n_steps`` minibatch steps (optimizer state threaded through
+    the loop); return (delta pytree, metrics)."""
     p = params
-    metrics = None
+    state, metrics = None, None
     for _ in range(n_steps):
         batch = dataset.next_batch()
-        p, metrics = local_step(p, batch)
+        p, state, metrics = local_step(p, batch, state)
     delta = jax.tree_util.tree_map(lambda a, b: a - b, p, params)
     return delta, metrics
 
 
 def make_batched_client_step(loss_fn: Callable, lr: float, opt_name: str = "sgd",
-                             jit: bool = True):
+                             jit: bool = True, **opt_kw):
     """Vectorized replacement for the per-client Python loop.
 
     Returns a jitted ``fn(params, batches) -> (updates [N,D], u_norms [N],
@@ -60,16 +70,18 @@ def make_batched_client_step(loss_fn: Callable, lr: float, opt_name: str = "sgd"
     """
     from repro.fl.updates import flatten_update
 
-    opt_init, opt_update = make_optimizer(opt_name)
+    opt_init, opt_update = make_optimizer(opt_name, **opt_kw)
 
     def one_client(params, client_batches):
         n_steps = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
-        p, loss = params, jnp.float32(0)
+        # optimizer state initialized once and threaded through the local
+        # steps — momentum/Adam moments accumulate across the whole local
+        # epoch instead of resetting every minibatch
+        p, state, loss = params, opt_init(params), jnp.float32(0)
         for s in range(n_steps):
             batch = jax.tree_util.tree_map(lambda v: v[s], client_batches)
             (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
-            state = opt_init(p)
-            p, _ = opt_update(grads, state, p, lr)
+            p, state = opt_update(grads, state, p, lr)
         delta = jax.tree_util.tree_map(lambda a, b: a - b, p, params)
         vec = flatten_update(delta)
         return vec, jnp.sqrt(jnp.sum(vec * vec)), loss

@@ -30,6 +30,19 @@ Two drivers share one round body (``_make_round_core``):
 
 ``run_sweep`` vmaps the scanned engine over per-seed key sets, producing
 multi-seed accuracy/energy curves at roughly single-run wall-clock.
+
+**Client-axis sharding** (``FederatedTrainer(..., mesh=...)``): with a
+1-D ``clients`` mesh (``repro.sharding.make_clients_mesh``) the same scan
+program runs under ``shard_map`` — the ``[N, L, ...]`` data stacks,
+minibatch gathers, ``[N, D]`` update/sparsify buffers, and the weighted
+aggregation are all shard-local, with one ``psum`` for the global model
+delta. The tiny ``[N]`` observables (``u_norms``, ``h``, ``P``) are
+all-gathered so controllers — whose selection/repair needs global
+argsort/cumsum — run replicated and unchanged, bit-compatible with the
+single-device path (``tests/test_sharded_engine.py``). Client counts that
+don't divide the mesh are padded with zero-weight ghost clients
+(``stack_client_datasets(..., pad_to_multiple=...)``); ghosts never enter
+an observation or decision.
 """
 from __future__ import annotations
 
@@ -44,10 +57,13 @@ import numpy as np
 from repro.core.channel import WirelessNetwork, round_gains
 from repro.core.controllers import (Controller, ControllerContext,
                                     RoundObservation, make_controller)
-from repro.data.pipeline import sample_round_batches, stack_client_datasets
+from repro.data.pipeline import (client_sample_keys, sample_client_batches,
+                                 sample_round_batches, stack_client_datasets)
 from repro.fl import compression
 from repro.fl.client import make_batched_client_step
 from repro.fl.updates import tree_spec, unflatten_update
+from repro.sharding.fl import (CLIENTS_AXIS, clients_axis_size,
+                               replicated_specs, shard_client_data)
 
 
 # PRNG stream tags (folded into the per-seed base key): far above any
@@ -76,7 +92,9 @@ class RoundLog:
 def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                      server_lr: float, use_pallas: bool = False,
                      block: int = compression.DEFAULT_BLOCK,
-                     skip_full_sparsify: bool = True):
+                     skip_full_sparsify: bool = True,
+                     shard_axis: Optional[str] = None,
+                     n_real: Optional[int] = None):
     """Pure decide -> sparsify -> aggregate -> apply round body.
 
     Closes over the controller (its ``decide`` must be traceable), the
@@ -84,10 +102,30 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
     Returns ``core(params, updates, u_norms, h, P, r, key, ctrl_state)
     -> (new_params, RoundDecision, ctrl_state)`` — traceable, shared by
     the per-round jit and the multi-round scan.
+
+    With ``shard_axis``, the core runs *inside a shard_map shard* of the
+    client axis: ``updates``/``u_norms`` are the device-local
+    ``[n_local, D]``/``[n_local]`` chunk (``weights`` stays the full,
+    possibly ghost-padded ``[N_pad]`` vector, replicated by closure). The
+    tiny ``u_norms`` are all-gathered and sliced to the ``n_real`` true
+    clients, the controller decides on the same global ``[n_real]``
+    observation as the single-device path (replicated — selection masks
+    are identical), and the decision's x/gamma are sliced back to the
+    local chunk for the shard-local sparsify + weighted partial
+    aggregation; one ``psum`` pair yields the global model delta.
     """
+    sharded = shard_axis is not None
+    n_pad = int(weights.shape[0])
 
     def core(params, updates, u_norms, h, P, r, key, ctrl_state):
-        obs = RoundObservation(u_norms=u_norms, h=h, P=P, round=r, key=key)
+        if sharded:
+            n_local = u_norms.shape[0]
+            i0 = jax.lax.axis_index(shard_axis) * n_local
+            obs_norms = jax.lax.all_gather(u_norms, shard_axis,
+                                           tiled=True)[:n_real]
+        else:
+            obs_norms = u_norms
+        obs = RoundObservation(u_norms=obs_norms, h=h, P=P, round=r, key=key)
         dec, new_state = controller.decide(obs, ctrl_state)
 
         xf = dec.x.astype(jnp.float32)
@@ -95,12 +133,27 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
         # level is irrelevant — treat them as gamma=1 so full-precision
         # rounds (every *selected* gamma == 1) skip the sparsify pass
         gamma = jnp.where(dec.x, jnp.clip(dec.gamma, 1e-6, 1.0), 1.0)
+        if sharded:
+            # ghost rows: never selected (x=0), gamma=1 keeps the skip-full
+            # fast path available; then take this shard's local chunk
+            xf = jax.lax.dynamic_slice_in_dim(
+                jnp.pad(xf, (0, n_pad - n_real)), i0, n_local)
+            gamma = jax.lax.dynamic_slice_in_dim(
+                jnp.pad(gamma, (0, n_pad - n_real), constant_values=1.0),
+                i0, n_local)
+            w_data = jax.lax.dynamic_slice_in_dim(weights, i0, n_local)
+        else:
+            w_data = weights
         sparse = compression.batch_block_topk(updates, gamma, block=block,
                                               use_pallas=use_pallas,
                                               skip_full=skip_full_sparsify)
-        w = xf * weights                                        # [N]
+        w = xf * w_data                                         # [N | n_local]
         wsum = jnp.sum(w)
-        agg = (w @ sparse) / jnp.maximum(wsum, 1e-12) * server_lr
+        partial = w @ sparse                                    # [D]
+        if sharded:
+            wsum = jax.lax.psum(wsum, shard_axis)
+            partial = jax.lax.psum(partial, shard_axis)
+        agg = partial / jnp.maximum(wsum, 1e-12) * server_lr
         agg = jnp.where(wsum > 0.0, agg, jnp.zeros_like(agg))
         delta_tree = unflatten_update(agg, spec)
         new_params = jax.tree_util.tree_map(
@@ -125,7 +178,9 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                      server_lr: float, client_step, eval_fn,
                      pathloss: jnp.ndarray, P: jnp.ndarray, rayleigh: bool,
                      local_steps: int, batch: int, use_pallas: bool = False,
-                     block: int = compression.DEFAULT_BLOCK, unroll: int = 1):
+                     block: int = compression.DEFAULT_BLOCK, unroll: int = 1,
+                     mesh=None, mesh_axis: str = CLIENTS_AXIS,
+                     n_real: Optional[int] = None):
     """Builds the fused multi-round scan program.
 
     Returns ``scan_fn(params, ctrl_state, data, keys, start_round,
@@ -137,21 +192,59 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
     the ``last_round`` index is always evaluated). Outputs are stacked
     per-round logs. Wrap in ``jax.jit(..., static_argnames="n_rounds",
     donate_argnums=(0, 1))`` — or ``vmap`` over ``keys`` for sweeps.
+
+    With ``mesh`` (a 1-D mesh carrying ``mesh_axis``), the whole scan is
+    wrapped in ``shard_map``: ``data`` comes in sharded on its client
+    axis (``repro.sharding.shard_client_data``; the padded client count
+    must divide the mesh), sampling / client step / sparsify /
+    aggregation run shard-local with one psum pair for the model delta,
+    and params, controller state, keys, and the stacked per-round logs
+    are replicated. ``n_real`` is the true client count — the decision
+    arrays in the outputs keep that (unpadded) size.
     """
+    sharded = mesh is not None
+    axis = mesh_axis if sharded else None
+    if sharded:
+        n_pad = int(weights.shape[0])
+        n_real = n_real if n_real is not None else n_pad
+        n_dev = clients_axis_size(mesh, mesh_axis)
+        if n_pad % n_dev != 0:
+            raise ValueError(
+                f"padded client count {n_pad} does not divide the "
+                f"{mesh_axis!r} mesh axis ({n_dev}); stack the datasets "
+                f"with pad_to_multiple={n_dev}")
     core = _make_round_core(controller=controller, spec=spec, weights=weights,
                             server_lr=server_lr, use_pallas=use_pallas,
-                            block=block)
+                            block=block, shard_axis=axis, n_real=n_real)
 
-    def scan_fn(params, ctrl_state, data, keys, start_round, last_round,
-                eval_every, n_rounds: int):
+    n_pad_keys = int(weights.shape[0])
+    n_real_keys = n_real if n_real is not None else n_pad_keys
+
+    def scan_body(params, ctrl_state, data, keys, start_round, last_round,
+                  eval_every, n_rounds: int):
+        n_local = data.lengths.shape[0]             # per-shard when sharded
+        if sharded:
+            i0 = jax.lax.axis_index(mesh_axis) * n_local
+        else:
+            i0 = jnp.int32(0)
+
         def step(carry, r):
             p, state = carry
             h = round_gains(keys["fade"], pathloss, r, rayleigh)
-            batches = sample_round_batches(data, keys["sample"], r,
-                                           local_steps, batch)
+            # every shard derives the full (tiny) per-client key set —
+            # real clients keep the unpadded split stream — and slices
+            # its local chunk: identical batches in every layout
+            ckeys = jax.lax.dynamic_slice_in_dim(
+                client_sample_keys(keys["sample"], r, n_real_keys,
+                                   n_pad_keys), i0, n_local)
+            batches = sample_client_batches(data.arrays, data.lengths, ckeys,
+                                            local_steps, batch)
             updates, u_norms, losses = client_step(p, batches)
             ckey = jax.random.fold_in(keys["ctrl"], r)
             p, dec, state = core(p, updates, u_norms, h, P, r, ckey, state)
+            if sharded:
+                losses = jax.lax.all_gather(losses, mesh_axis,
+                                            tiled=True)[:n_real]
             do_eval = ((r % eval_every) == 0) | (r == last_round)
             acc = jax.lax.cond(do_eval,
                                lambda q: eval_fn(q).astype(jnp.float32),
@@ -165,6 +258,30 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
         (params, ctrl_state), outs = jax.lax.scan(step, (params, ctrl_state),
                                                   rs, unroll=unroll)
         return params, ctrl_state, outs
+
+    if not sharded:
+        return scan_body
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as PS
+
+    def scan_fn(params, ctrl_state, data, keys, start_round, last_round,
+                eval_every, n_rounds: int):
+        body = functools.partial(scan_body, n_rounds=n_rounds)
+        # only `data` is split (leading client axis); everything else —
+        # params, controller state, keys, round bounds, stacked logs — is
+        # replicated. check_rep=False: the outputs *are* replicated (built
+        # from psum/all-gather results) but the static replication checker
+        # cannot see that through the scan carry.
+        sharded_fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(replicated_specs(params), replicated_specs(ctrl_state),
+                      PS(mesh_axis), PS(), PS(), PS(), PS()),
+            out_specs=(replicated_specs(params), replicated_specs(ctrl_state),
+                       PS()),
+            check_rep=False)
+        return sharded_fn(params, ctrl_state, data, keys, start_round,
+                          last_round, eval_every)
 
     return scan_fn
 
@@ -182,6 +299,14 @@ class FederatedTrainer:
     sampling and channel fading are pure functions of (seed, round), so
     ``run_round`` (debug) and ``run_scanned`` (fused) see identical
     randomness. ``eval_fn`` must be JAX-traceable (params -> scalar).
+
+    ``mesh``: a 1-D mesh with a ``clients`` axis (``mesh_axis``) — e.g.
+    ``repro.sharding.make_clients_mesh()`` — switches the fused engine to
+    client-axis sharded execution: data stacks, update/sparsify buffers,
+    and the aggregation are split across devices (one psum for the global
+    delta), the ``[N]`` observables stay replicated, and the client count
+    is ghost-padded to mesh divisibility. Trajectories are bit-compatible
+    with ``mesh=None`` (same masks; params/energy to last-ulp tolerance).
     """
 
     def __init__(self, *, model_loss, model_params, client_datasets,
@@ -190,7 +315,8 @@ class FederatedTrainer:
                  strategy: Optional[str] = None,
                  fixed_k: Optional[int] = None,
                  eco_gamma: float = 0.1, eco_bandwidth: Optional[float] = None,
-                 use_pallas_compression: bool = False, seed: int = 0):
+                 use_pallas_compression: bool = False, seed: int = 0,
+                 mesh=None, mesh_axis: str = CLIENTS_AXIS):
         if strategy is not None:
             controller = strategy
         self.loss_fn = model_loss
@@ -233,7 +359,16 @@ class FederatedTrainer:
         self._scan_fn_raw = None
         self._sweep_engine = None
         self._P = jnp.asarray(self.network.power, jnp.float32)
-        self._data = stack_client_datasets(client_datasets)
+        self.mesh, self.mesh_axis = mesh, mesh_axis
+        if mesh is not None:
+            size = clients_axis_size(mesh, mesh_axis)
+            self._data = stack_client_datasets(client_datasets,
+                                               pad_to_multiple=size)
+            self._data = shard_client_data(self._data, mesh, mesh_axis)
+        else:
+            self._data = stack_client_datasets(client_datasets)
+        self.n_padded = self._data.n_clients      # == n_clients when unsharded
+        # ghost clients have length 0 => exactly zero aggregation weight
         weights = np.asarray(self._data.lengths, np.float64)
         self.weights = weights / weights.sum()
         self.history: list[RoundLog] = []
@@ -248,7 +383,7 @@ class FederatedTrainer:
     def _sampler(self):
         return jax.jit(functools.partial(
             sample_round_batches, local_steps=self.fl_cfg.local_steps,
-            batch=self.fl_cfg.local_batch))
+            batch=self.fl_cfg.local_batch, n_real=self.n_clients))
 
     def _round_batches(self, r: int):
         """Round-r minibatches [N, steps, batch, ...], traced gather."""
@@ -267,7 +402,9 @@ class FederatedTrainer:
                 pathloss=jnp.asarray(self.network.pathloss, jnp.float32),
                 P=self._P, rayleigh=self.ch_cfg.rayleigh,
                 local_steps=self.fl_cfg.local_steps,
-                batch=self.fl_cfg.local_batch)
+                batch=self.fl_cfg.local_batch,
+                mesh=self.mesh, mesh_axis=self.mesh_axis,
+                n_real=self.n_clients)
             self._scan_engine = jax.jit(scan_fn, static_argnames="n_rounds",
                                         donate_argnums=(0, 1))
             self._scan_fn_raw = scan_fn
@@ -305,8 +442,9 @@ class FederatedTrainer:
             return
         _, u_norms, _ = self._client_step(self.params, self._round_batches(r))
         h = self.network.gains(r)
-        self.controller.calibrate(np.asarray(u_norms), np.asarray(h),
-                                  self.network.power)
+        # drop ghost-padded rows: calibration medians see only real clients
+        self.controller.calibrate(np.asarray(u_norms)[:self.n_clients],
+                                  np.asarray(h), self.network.power)
         self._invalidate_engines()
 
     # ------------------------------------------------------------------
@@ -417,6 +555,24 @@ class FederatedTrainer:
             raise ValueError(f"eval_every must be >= 1, got {eval_every}")
         self._maybe_calibrate(0)
         bases = [jax.random.PRNGKey(int(s)) for s in seeds]
+        if self.mesh is not None:
+            # sharded engine: shard_map doesn't vmap over the key lanes, so
+            # run the (already sharded, scanned) program once per seed —
+            # lanes stack on host. Fresh copies per lane: the engine
+            # donates its params/state arguments.
+            engine = self._get_scan_engine()
+            lanes = []
+            for b in bases:
+                keys = {"fade": b,
+                        "ctrl": jax.random.fold_in(b, _CTRL_STREAM),
+                        "sample": jax.random.fold_in(b, _SAMPLE_STREAM)}
+                p = jax.tree_util.tree_map(jnp.array, self.params)
+                st = jax.tree_util.tree_map(jnp.array, self.ctrl_state)
+                _, _, outs = engine(p, st, self._data, keys, jnp.int32(0),
+                                    jnp.int32(rounds - 1),
+                                    jnp.int32(eval_every), n_rounds=rounds)
+                lanes.append({k: np.asarray(v) for k, v in outs.items()})
+            return {k: np.stack([ln[k] for ln in lanes]) for k in lanes[0]}
         keys = {"fade": jnp.stack(bases),
                 "ctrl": jnp.stack([jax.random.fold_in(b, _CTRL_STREAM)
                                    for b in bases]),

@@ -1,3 +1,9 @@
+from .fl import (CLIENTS_AXIS, client_data_specs, client_stack_spec,
+                 clients_axis_size, make_clients_mesh, replicated_specs,
+                 shard_client_data)
 from .specs import (batch_axes, cache_specs, data_specs, param_specs, to_named)
 
-__all__ = ["param_specs", "data_specs", "cache_specs", "batch_axes", "to_named"]
+__all__ = ["param_specs", "data_specs", "cache_specs", "batch_axes", "to_named",
+           "CLIENTS_AXIS", "make_clients_mesh", "clients_axis_size",
+           "client_stack_spec", "client_data_specs", "replicated_specs",
+           "shard_client_data"]

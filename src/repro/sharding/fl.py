@@ -1,0 +1,91 @@
+"""Client-axis sharding for the fused FL engine.
+
+The fused ``lax.scan`` engine (``repro.fl.server.make_scan_engine``) holds
+every client's ``[N, L, ...]`` data stack and ``[N, D]`` update buffer on
+one device, which caps the reproducible scenarios at N ~ 50. This module
+supplies the mesh + PartitionSpec vocabulary to spread that client axis
+over a 1-D ``clients`` mesh:
+
+* the big per-client tensors — data stacks ``[N, L, ...]``, flat update /
+  sparsify buffers ``[N, D]``, minibatch gathers — are sharded on their
+  leading client axis;
+* the tiny per-client observables the controllers consume (``u_norms``,
+  ``h``, ``P``, all ``[N]``) are all-gathered/replicated, so selection /
+  repair logic that needs a *global* argsort or cumsum runs unchanged and
+  stays bit-compatible with the single-device path;
+* model params, controller state, and per-round logs are replicated.
+
+``N`` must divide the mesh — ``stack_client_datasets(...,
+pad_to_multiple=mesh_size)`` appends zero-weight ghost clients to round
+up (``repro.data.pipeline``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+CLIENTS_AXIS = "clients"
+
+
+def make_clients_mesh(n_devices: Optional[int] = None,
+                      axis: str = CLIENTS_AXIS) -> Mesh:
+    """1-D mesh over ``n_devices`` (default: all visible devices) with a
+    single ``clients`` axis. On CPU, force multiple host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` before importing
+    jax."""
+    n = n_devices if n_devices is not None else len(jax.devices())
+    if n < 1:
+        raise ValueError(f"need at least one device, got {n}")
+    if n > len(jax.devices()):
+        raise ValueError(f"requested {n} devices but only "
+                         f"{len(jax.devices())} are visible")
+    return jax.make_mesh((n,), (axis,))
+
+
+def clients_axis_size(mesh: Mesh, axis: str = CLIENTS_AXIS) -> int:
+    if axis not in mesh.shape:
+        raise ValueError(f"mesh has no {axis!r} axis; axes: "
+                         f"{tuple(mesh.shape)}")
+    return mesh.shape[axis]
+
+
+def client_stack_spec(ndim: int, axis: str = CLIENTS_AXIS) -> P:
+    """Spec for a ``[N, ...]`` per-client stack: leading axis sharded,
+    everything else replicated. Covers the ``[N, L, ...]`` data stacks,
+    ``[N, D]`` update/sparsify buffers, and ``[N]`` observables alike."""
+    return P(axis, *([None] * (ndim - 1)))
+
+
+def client_data_specs(data, axis: str = CLIENTS_AXIS):
+    """PartitionSpec pytree for a ``DeviceClientData``: every array (and
+    ``lengths``) sharded on its leading client axis."""
+    return type(data)(
+        arrays={k: client_stack_spec(v.ndim, axis)
+                for k, v in data.arrays.items()},
+        lengths=client_stack_spec(1, axis))
+
+
+def replicated_specs(tree) -> object:
+    """All-replicated spec pytree (params, controller state, scalars)."""
+    return jax.tree_util.tree_map(lambda _: P(), tree)
+
+
+def shard_client_data(data, mesh: Mesh, axis: str = CLIENTS_AXIS):
+    """device_put the client stacks onto the mesh (client axis split
+    across devices). The client count must already be mesh-divisible —
+    build the stacks with ``stack_client_datasets(...,
+    pad_to_multiple=clients_axis_size(mesh))``."""
+    n = int(data.lengths.shape[0])
+    size = clients_axis_size(mesh, axis)
+    if n % size != 0:
+        raise ValueError(
+            f"client count {n} does not divide the {axis!r} mesh axis "
+            f"({size}); stack with pad_to_multiple={size} to add ghost "
+            f"clients")
+    specs = client_data_specs(data, axis)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), data, specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,70 @@
+"""int8 quantization round-trip: error bounds, degenerate inputs, and the
+dequantize contract — shipped untested until now, and a prerequisite for
+wiring ``quantize_int8`` into the compression ladder."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl.compression import dequantize_int8, quantize_int8
+
+
+def test_int8_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    vec = jnp.asarray(rng.normal(scale=3.0, size=4096).astype(np.float32))
+    q, scale = quantize_int8(vec)
+    assert q.dtype == jnp.int8
+    out = dequantize_int8(q, scale)
+    # symmetric per-tensor quantization: |err| <= scale/2 everywhere,
+    # scale = max|v| / 127
+    max_err = float(jnp.max(jnp.abs(out - vec)))
+    assert max_err <= float(scale) / 2 + 1e-7
+    assert float(scale) == pytest.approx(float(jnp.max(jnp.abs(vec))) / 127.0)
+
+
+def test_int8_preserves_sign_and_extremes():
+    vec = jnp.asarray([-10.0, -0.04, 0.0, 0.04, 10.0], jnp.float32)
+    q, scale = quantize_int8(vec)
+    qn = np.asarray(q)
+    assert qn[0] == -127 and qn[-1] == 127         # extremes hit the rails
+    assert qn[2] == 0
+    out = np.asarray(dequantize_int8(q, scale))
+    np.testing.assert_allclose(out[[0, -1]], [-10.0, 10.0], rtol=1e-6)
+    assert np.sign(out[1]) in (0.0, -1.0) and np.sign(out[3]) in (0.0, 1.0)
+
+
+def test_int8_zero_vector_is_safe():
+    """All-zero input must not divide by zero: scale floors at 1e-12 and
+    the round-trip returns exact zeros."""
+    q, scale = quantize_int8(jnp.zeros(64, jnp.float32))
+    assert np.isfinite(float(scale)) and float(scale) > 0
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_array_equal(np.asarray(dequantize_int8(q, scale)), 0.0)
+
+
+def test_int8_sparse_masked_vector():
+    """The intended use: a top-k masked update — zeros stay exactly zero
+    through the round-trip (the kept-mask accounting relies on it)."""
+    rng = np.random.default_rng(1)
+    vec = rng.normal(size=256).astype(np.float32)
+    vec[rng.random(256) < 0.9] = 0.0
+    q, scale = quantize_int8(jnp.asarray(vec))
+    out = np.asarray(dequantize_int8(q, scale))
+    np.testing.assert_array_equal(out[vec == 0.0], 0.0)
+    nz = vec != 0.0
+    assert np.abs(out[nz] - vec[nz]).max() <= float(scale) / 2 + 1e-7
+
+
+def test_int8_nan_guard():
+    """NaN inputs must not silently alias to a valid quantized value at
+    the receiver: NaN clips to the rails (jnp.clip propagates NaN ->
+    cast is implementation-defined) — assert the finite lanes survive and
+    scale stays finite when NaNs are pre-masked, the documented contract."""
+    vec = jnp.asarray([1.0, -2.0, 0.5], jnp.float32)
+    q, scale = quantize_int8(vec)
+    assert np.isfinite(np.asarray(dequantize_int8(q, scale))).all()
+    # callers must mask NaNs first; jnp.nan_to_num is the supported guard
+    dirty = jnp.asarray([1.0, jnp.nan, -2.0], jnp.float32)
+    clean = jnp.nan_to_num(dirty)
+    q2, scale2 = quantize_int8(clean)
+    assert np.isfinite(float(scale2))
+    assert np.isfinite(np.asarray(dequantize_int8(q2, scale2))).all()

@@ -69,6 +69,29 @@ def test_decide_is_jittable(name, ctx, obs):
                                np.asarray(dec_jit.bandwidth), rtol=1e-6)
 
 
+@pytest.mark.parametrize("n", [30, 50, 200])
+@pytest.mark.parametrize("name", available_controllers())
+def test_budget_feasible_with_default_k(name, n):
+    """Regression for the eco_bw bug: with ``fixed_k=None`` every baseline
+    derives K = N//5, and EcoRandom's default per-client floor used to be
+    B_tot/10 regardless — oversubscribing the budget 2x at N=100+. Every
+    registered controller must satisfy sum(B_i) <= B_tot at any N."""
+    ctx_n = ControllerContext(n_clients=n, b_tot=B_TOT, s_bits=6.4e7,
+                              i_bits=2e6, n0=N0, fe_cfg=FE_CFG, fixed_k=None)
+    rng = np.random.default_rng(n)
+    obs_n = RoundObservation(
+        u_norms=jnp.asarray(rng.uniform(0.5, 5.0, n), jnp.float32),
+        h=jnp.asarray(1e-3 * rng.uniform(50, 500, n) ** -3.0 *
+                      rng.exponential(1.0, n), jnp.float32),
+        P=jnp.asarray(rng.uniform(1e-4, 3e-4, n), jnp.float32),
+        round=jnp.int32(0), key=jax.random.PRNGKey(n))
+    ctrl = make_controller(name, ctx_n)
+    dec, _ = ctrl.decide(obs_n, ctrl.init(n))
+    bw = np.asarray(dec.bandwidth)
+    assert bw.sum() <= B_TOT * (1 + 1e-6), \
+        f"{name} allocates {bw.sum():.3g} Hz > B_tot={B_TOT:.3g} at N={n}"
+
+
 # ------------------------------------------------------- regression ----
 def test_fairenergy_controller_matches_solve_round(ctx, obs):
     """New-API FairEnergy == legacy solve_round, bit for bit."""

@@ -93,6 +93,33 @@ def test_energy_increasing_in_gamma():
     assert (jnp.diff(e) > 0).all()
 
 
+def test_energy_monotone_near_rate_floor():
+    """The 1 Hz clamp in shannon_rate: energy is non-increasing in B down
+    to the floor, and constant (clamped) below it — never the exploding
+    analytic B->0 values."""
+    from repro.core.channel import RATE_B_FLOOR_HZ
+    assert RATE_B_FLOOR_HZ == 1.0
+    B = jnp.concatenate([jnp.linspace(1e-3, 1.0, 25),
+                         jnp.logspace(0.0, 3.0, 25)])
+    e = np.asarray(comm_energy(0.5, B, 2e-4, 1e-9, 6.4e7, 2e6, N0))
+    assert np.isfinite(e).all()
+    assert (np.diff(e) <= 0).all()                 # monotone toward the floor
+    below = e[np.asarray(B) <= 1.0]
+    np.testing.assert_allclose(below, below[0], rtol=1e-6)  # flat under 1 Hz
+
+
+def test_context_rejects_sub_floor_gss_bracket():
+    from repro.configs import FairEnergyConfig
+    from repro.core.controllers import ControllerContext
+    fe = FairEnergyConfig(b_min_frac=1e-8)
+    with pytest.raises(ValueError, match="1 Hz"):
+        ControllerContext(n_clients=10, b_tot=1e6, s_bits=6.4e7, i_bits=2e6,
+                          n0=N0, fe_cfg=fe)
+    # the default config clears the floor comfortably
+    ControllerContext(n_clients=10, b_tot=10e6, s_bits=6.4e7, i_bits=2e6,
+                      n0=N0, fe_cfg=FairEnergyConfig())
+
+
 # ------------------------------------------------------------- fairness ----
 def test_ema_definition():
     q = ema_update(jnp.asarray(0.5), jnp.asarray(1.0), 0.6)

@@ -1,0 +1,197 @@
+"""Client-axis sharded fused engine: single-device equivalence, ghost-
+client padding semantics, and the forced-multi-device equivalence run.
+
+The load-bearing property: the shard_map engine on a ``clients`` mesh
+must reproduce the single-device fused engine — identical selection
+masks, last-ulp params/energy/accuracy — because the controllers decide
+on all-gathered (replicated) observations and only the client-parallel
+heavy path (data, client step, sparsify, weighted aggregation) is split.
+The multi-device case needs ``XLA_FLAGS=--xla_force_host_platform_
+device_count=K`` *before* jax initializes, so it runs in a subprocess
+(this file doubles as the subprocess entry point); a 1-device mesh
+exercises the same shard_map program in-process on every CI run.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ChannelConfig, FairEnergyConfig, FLConfig
+from repro.data import client_sample_keys, stack_client_datasets
+from repro.fl import FederatedTrainer
+from repro.sharding import (client_stack_spec, clients_axis_size,
+                            make_clients_mesh, shard_client_data)
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+D_IN, D_HIDDEN, N_CLASSES = 16, 24, 5
+
+
+def _loss_fn(p, batch):
+    hid = jnp.tanh(batch["x"] @ p["w1"])
+    ll = jax.nn.log_softmax(hid @ p["w2"])
+    return -jnp.mean(jnp.take_along_axis(ll, batch["y"][:, None], 1)), {}
+
+
+def make_trainer(controller, n_clients, mesh=None, seed=0, **kw):
+    rng = np.random.default_rng(7)
+    params = {"w1": jnp.asarray(rng.normal(size=(D_IN, D_HIDDEN)).astype(np.float32) * 0.1),
+              "w2": jnp.asarray(rng.normal(size=(D_HIDDEN, N_CLASSES)).astype(np.float32) * 0.1)}
+    datasets = [{"x": rng.normal(size=(30 + 5 * (i % 7), D_IN)).astype(np.float32),
+                 "y": rng.integers(0, N_CLASSES, size=30 + 5 * (i % 7))}
+                for i in range(n_clients)]
+    tx = jnp.asarray(rng.normal(size=(128, D_IN)).astype(np.float32))
+    ty = jnp.asarray(rng.integers(0, N_CLASSES, size=128))
+
+    def eval_fn(p):
+        lg = jnp.tanh(tx @ p["w1"]) @ p["w2"]
+        return jnp.mean((jnp.argmax(lg, -1) == ty).astype(jnp.float32))
+
+    return FederatedTrainer(
+        model_loss=_loss_fn, model_params=params, client_datasets=datasets,
+        eval_fn=eval_fn, fl_cfg=FLConfig(local_steps=2, local_batch=16, lr=0.05),
+        fe_cfg=FairEnergyConfig(), ch_cfg=ChannelConfig(n_clients=n_clients),
+        controller=controller, seed=seed, mesh=mesh, **kw)
+
+
+def _flat(params):
+    return np.concatenate([np.ravel(np.asarray(v))
+                           for v in jax.tree_util.tree_leaves(params)])
+
+
+def _assert_equivalent(tr_ref, tr_sharded, n_clients):
+    assert len(tr_ref.history) == len(tr_sharded.history)
+    for la, lb in zip(tr_ref.history, tr_sharded.history):
+        assert lb.selected.shape == (n_clients,)     # logs stay unpadded
+        np.testing.assert_array_equal(la.selected, lb.selected,
+                                      err_msg=f"round {la.round}")
+        np.testing.assert_allclose(la.energy, lb.energy, rtol=1e-5, atol=0)
+        np.testing.assert_allclose(la.gamma, lb.gamma, rtol=1e-6, atol=0)
+        np.testing.assert_allclose(la.bandwidth, lb.bandwidth, rtol=1e-6, atol=0)
+        np.testing.assert_allclose(la.accuracy, lb.accuracy, rtol=1e-5)
+        np.testing.assert_allclose(la.loss, lb.loss, rtol=1e-5)
+    np.testing.assert_allclose(_flat(tr_ref.params), _flat(tr_sharded.params),
+                               rtol=0, atol=1e-6)
+
+
+def _run_equivalence(controller, n_clients, rounds, mesh, **kw):
+    tr_ref = make_trainer(controller, n_clients, mesh=None, **kw)
+    tr_ref.run_scanned(rounds, verbose=False)
+    tr_sh = make_trainer(controller, n_clients, mesh=mesh, **kw)
+    tr_sh.run_scanned(rounds, verbose=False)
+    _assert_equivalent(tr_ref, tr_sh, n_clients)
+    return tr_ref, tr_sh
+
+
+# --------------------------------------------------- data-layer padding ----
+def test_stack_pad_to_multiple_appends_zero_length_ghosts():
+    shards = [{"x": np.full((4 + i, 3), i + 1, np.float32),
+               "y": np.full((4 + i,), i, np.int32)} for i in range(5)]
+    data = stack_client_datasets(shards, pad_to_multiple=4)
+    assert data.n_clients == 8
+    np.testing.assert_array_equal(np.asarray(data.lengths),
+                                  [4, 5, 6, 7, 8, 0, 0, 0])
+    assert float(np.abs(np.asarray(data.arrays["x"])[5:]).max()) == 0.0
+    # already divisible / degenerate multiple: no-op
+    assert stack_client_datasets(shards, pad_to_multiple=5).n_clients == 5
+    assert stack_client_datasets(shards, pad_to_multiple=1).n_clients == 5
+    with pytest.raises(ValueError, match="pad_to_multiple"):
+        stack_client_datasets(shards, pad_to_multiple=0)
+
+
+def test_client_sample_keys_invariant_to_padding():
+    """Real clients keep the historical split(rkey, n_real) stream no
+    matter how many ghosts are appended (enlarging the *split* instead
+    would change the first-n keys and silently alter every trajectory)."""
+    key = jax.random.PRNGKey(3)
+    k5 = client_sample_keys(key, 2, 5)
+    k8 = client_sample_keys(key, 2, 5, 8)
+    assert k8.shape[0] == 8
+    np.testing.assert_array_equal(np.asarray(k5), np.asarray(k8)[:5])
+    np.testing.assert_array_equal(
+        np.asarray(k5),
+        np.asarray(jax.random.split(jax.random.fold_in(key, 2), 5)))
+
+
+def test_shard_client_data_requires_divisibility():
+    mesh = make_clients_mesh(1)
+    shards = [{"x": np.ones((4, 2), np.float32)} for _ in range(3)]
+    data = stack_client_datasets(shards)
+    out = shard_client_data(data, mesh)          # 3 % 1 == 0
+    assert out.n_clients == 3
+    assert clients_axis_size(mesh) == 1
+    with pytest.raises(ValueError, match="clients"):
+        clients_axis_size(jax.make_mesh((1,), ("model",)))
+    assert client_stack_spec(3) == jax.sharding.PartitionSpec(
+        "clients", None, None)
+
+
+# ------------------------------------------- in-process (1-device mesh) ----
+@pytest.mark.parametrize("controller,kw", [
+    ("fairenergy", {}),                       # stateful duals + eta_auto
+    ("randomfull", {"fixed_k": 3}),           # PRNG-driven selection
+])
+def test_sharded_engine_matches_single_device(controller, kw):
+    """The shard_map program itself (all-gather obs, slice, psum agg) on a
+    1-device mesh — runs on every CI configuration."""
+    mesh = make_clients_mesh(1)
+    _run_equivalence(controller, 10, 8, mesh, **kw)
+
+
+def test_sharded_sweep_matches_unsharded_sweep():
+    mesh = make_clients_mesh(1)
+    outs_sh = make_trainer("randomfull", 10, mesh=mesh, fixed_k=3).run_sweep(
+        [0, 4], rounds=4)
+    outs = make_trainer("randomfull", 10, fixed_k=3).run_sweep([0, 4], rounds=4)
+    assert outs_sh["x"].shape == (2, 4, 10)
+    np.testing.assert_array_equal(outs_sh["x"], outs["x"])
+    np.testing.assert_allclose(outs_sh["accuracy"], outs["accuracy"], rtol=1e-5)
+
+
+# ----------------------------------------------- forced 8-device run ----
+def _multi_device_equivalence(n_clients: int, rounds: int):
+    """Subprocess body: compare single-device vs 8-device trajectories."""
+    mesh = make_clients_mesh()
+    assert clients_axis_size(mesh) == 8, "expected 8 forced host devices"
+
+    # N divisible by the mesh: no ghosts — the acceptance configuration
+    tr_ref, tr_sh = _run_equivalence("fairenergy", n_clients, rounds, mesh)
+    assert tr_sh.n_padded == n_clients
+    assert any(lg.n_selected > 0 for lg in tr_sh.history)
+
+    # non-divisible N: ghost-padded, still identical to the unpadded
+    # single-device run, ghosts never selected / charged
+    n_odd = n_clients - 3
+    tr_ref, tr_sh = _run_equivalence("scoremax", n_odd, rounds, mesh,
+                                     fixed_k=max(1, n_odd // 5))
+    assert tr_sh.n_padded == -(-n_odd // 8) * 8 > n_odd
+    print(f"multi-device equivalence OK (N={n_clients} and ghost-padded "
+          f"N={n_odd} on 8 devices, {rounds} rounds)")
+
+
+@pytest.mark.slow
+def test_multi_device_equivalence_subprocess():
+    """The real thing: N=200 across 8 forced host CPU devices produces the
+    single-device trajectory (selection masks exact; params/energy/
+    accuracy to last-ulp tolerance — psum changes the reduction order)."""
+    env = dict(os.environ)
+    other = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    env["XLA_FLAGS"] = " ".join(
+        ["--xla_force_host_platform_device_count=8"] + other)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "200", "6"],
+        capture_output=True, text=True, env=env, timeout=560, cwd=REPO)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "multi-device equivalence OK" in out.stdout
+
+
+if __name__ == "__main__":
+    _multi_device_equivalence(int(sys.argv[1]) if len(sys.argv) > 1 else 200,
+                              int(sys.argv[2]) if len(sys.argv) > 2 else 6)
