@@ -57,13 +57,19 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
 
 
 def run_all(n_clients=20, rounds=60, target=0.80, seed=0, verbose=True,
-            extra_baselines=False, eval_every=1, sweep_seeds=None, **build_kw):
+            extra_baselines=False, eval_every=1, sweep_seeds=None,
+            config_sweep=None, **build_kw):
     """Runs FairEnergy first (to fix K / eco params per paper protocol),
     then the baselines — each through the fused ``run_scanned`` engine
     (``eval_every`` strides the in-scan accuracy evaluation). With
     ``sweep_seeds``, each strategy additionally runs a vmapped multi-seed
     sweep (``run_sweep``) for mean±std error bars at roughly single-run
-    wall-clock. Returns the results dict."""
+    wall-clock. ``config_sweep`` (a dict of FEParams overrides, e.g.
+    ``{"eta": [...], "rho": [...], "b_tot": [...]}`` — lists are crossed
+    into lanes by the CLI) additionally runs FairEnergy once per
+    hyper-parameter lane x seed, all inside ONE jitted program (the
+    config scalars are traced operands of the solver, so lanes share a
+    single trace). Returns the results dict."""
     make, fl_cfg = build(n_clients=n_clients, rounds=rounds, seed=seed, **build_kw)
 
     t0 = time.time()
@@ -126,6 +132,27 @@ def run_all(n_clients=20, rounds=60, target=0.80, seed=0, verbose=True,
             }
         results["sweep"] = sweep
         results["elapsed_s"] = round(time.time() - t0, 1)
+
+    if config_sweep:
+        seeds = sweep_seeds or [seed]
+        outs = make("fairenergy").run_sweep(seeds, rounds,
+                                            eval_every=eval_every,
+                                            configs=config_sweep)
+        acc, energy = outs["accuracy"], outs["energy"].sum(-1)  # [C,S,R]
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            lanes = []
+            for c in range(acc.shape[0]):
+                lanes.append({
+                    "config": {k: v[c] for k, v in outs["configs"].items()},
+                    "final_acc_mean": float(np.nanmean(acc[c, :, -1])),
+                    "final_acc_std": float(np.nanstd(acc[c, :, -1])),
+                    "energy_per_round_mean_J": float(energy[c].mean()),
+                    "mean_selected": float(outs["x"][c].sum(-1).mean()),
+                })
+        results["config_sweep"] = {"seeds": [int(s) for s in seeds],
+                                   "lanes": lanes}
+        results["elapsed_s"] = round(time.time() - t0, 1)
     return results
 
 
@@ -177,6 +204,16 @@ def summarize(res):
                   f"± {s['final_acc_std']:.3f}   E/round "
                   f"{s['energy_per_round_mean_J']*1e3:.3f} "
                   f"± {s['energy_per_round_std_J']*1e3:.3f} mJ")
+    if "config_sweep" in res:
+        cs = res["config_sweep"]
+        print(f"\n--- fairenergy config sweep ({len(cs['lanes'])} lanes x "
+              f"{len(cs['seeds'])} seeds, one jitted program) ---")
+        for ln in cs["lanes"]:
+            knobs = " ".join(f"{k}={v:.3g}" for k, v in ln["config"].items())
+            print(f"{knobs:40s} acc {ln['final_acc_mean']:.3f} "
+                  f"± {ln['final_acc_std']:.3f}  E/round "
+                  f"{ln['energy_per_round_mean_J']*1e3:.3f} mJ  "
+                  f"sel {ln['mean_selected']:.1f}")
 
 
 if __name__ == "__main__":
@@ -192,6 +229,14 @@ if __name__ == "__main__":
                     help="N>0: vmapped N-seed sweep per strategy (error bars)")
     ap.add_argument("--eval-every", type=int, default=1,
                     help="accuracy-eval stride inside the scanned engine")
+    ap.add_argument("--sweep-eta", default=None,
+                    help="comma-separated eta values: fairenergy config "
+                         "sweep lanes (crossed with --sweep-rho/--sweep-btot; "
+                         "all lanes x seeds run as one jitted program)")
+    ap.add_argument("--sweep-rho", default=None,
+                    help="comma-separated rho values (see --sweep-eta)")
+    ap.add_argument("--sweep-btot", default=None,
+                    help="comma-separated B_tot values in Hz (see --sweep-eta)")
     ap.add_argument("--shard-clients", action="store_true",
                     help="run the fused engine sharded over a `clients` "
                          "mesh spanning all visible devices (force multiple "
@@ -205,9 +250,22 @@ if __name__ == "__main__":
         from repro.sharding import make_clients_mesh
         mesh = make_clients_mesh()
         print(f"sharding the client axis over {len(jax.devices())} devices")
+    config_sweep = None
+    swept = {"eta": a.sweep_eta, "rho": a.sweep_rho, "b_tot": a.sweep_btot}
+    swept = {k: [float(x) for x in v.split(",")]
+             for k, v in swept.items() if v}
+    if swept:
+        # cross the swept knobs into flat lanes (itertools.product order)
+        import itertools
+        keys = list(swept)
+        lanes = list(itertools.product(*(swept[k] for k in keys)))
+        config_sweep = {k: [ln[i] for ln in lanes]
+                        for i, k in enumerate(keys)}
+        print(f"config sweep: {len(lanes)} lanes over {keys}")
     kw = dict(out=a.out, extra_baselines=a.extra_baselines,
               eval_every=a.eval_every, mesh=mesh,
-              sweep_seeds=list(range(a.seeds)) if a.seeds else None)
+              sweep_seeds=list(range(a.seeds)) if a.seeds else None,
+              config_sweep=config_sweep)
     if a.paper:
         main(n_clients=50, rounds=150, **kw)
     else:

@@ -136,10 +136,20 @@ class FairEnergyConfig:
     q0: float = 1.0                 # "initialize q_i^0 sufficiently large"
     alpha_lambda: float = 2e-4      # bandwidth dual step (normalized b units)
     alpha_mu: float = 1e-2          # fairness dual step
-    inner_iters: int = 30           # dual ascent iterations per round
+    inner_iters: int = 30           # dual ascent iteration cap per round
     gss_tol: float = 1e-3           # relative tol on bandwidth
     gss_max_iters: int = 60
     b_min_frac: float = 1e-4        # per-device min bandwidth fraction for GSS bracket
+    # --- bandwidth best-response solver (kernels.dual_solve) ---
+    bw_solver: str = "newton"       # "newton" (analytic, 3 steps) | "gss" (oracle)
+    newton_iters: int = 3           # Newton steps on the SNR stationarity
+                                    # (blended init => fp32-converged by 3)
+    use_pallas_solver: bool = False  # fused Pallas dual_solve kernel
+    # dual ascent early exit: stop once max(|d lam|/alpha_lambda,
+    # |d mu|/alpha_mu) — i.e. the largest constraint violation driving the
+    # duals, in primal units — falls below this; 0 disables (fixed-point
+    # exits only, which reproduce the full-cap trajectory exactly)
+    dual_tol: float = 1e-3
 
 
 @dataclass(frozen=True)

@@ -3,4 +3,5 @@ from . import channel, controllers, fairness, gss  # noqa: F401
 from .controllers import (ControllerContext, RoundObservation,  # noqa: F401
                           available_controllers, make_controller,
                           register_controller)
-from .fairenergy import ControllerState, RoundDecision, init_state, solve_round  # noqa: F401
+from .fairenergy import (ControllerState, FEParams, FEStatic,  # noqa: F401
+                         RoundDecision, init_state, make_params, solve_round)

@@ -25,15 +25,42 @@ REF_GAIN_1M = 1e-3  # -30 dB at 1 m
 # rejects configs whose GSS bracket (b_min_frac * b_tot) probes under it.
 RATE_B_FLOOR_HZ = 1.0
 
+# guard on the rate divisor in comm_time (and every energy model built on
+# it, incl. kernels.dual_solve): rates below this count as this
+RATE_EPS = 1e-9
+
+
+LN2 = 0.6931471805599453
+
 
 def shannon_rate(B: Array, P: Array, h: Array, n0: float = THERMAL_N0) -> Array:
     """bits/s: R = B log2(1 + P h / (N0 B)), with B clamped to
     ``RATE_B_FLOOR_HZ``. Below the floor the returned rate is the 1 Hz
     rate, NOT the analytic B -> 0 limit P h / (N0 ln 2) — rates (and the
-    energies built on them) are only meaningful for B >= 1 Hz."""
+    energies built on them) are only meaningful for B >= 1 Hz.
+
+    log2(1+x) is computed as log1p(x)/ln2: at low SNR the naive
+    ``log2(1.0 + snr)`` loses ~snr/eps relative precision in fp32 (the
+    1+snr rounding), which turned the bandwidth objective into a noisy
+    staircase that defeated both grid search and the analytic
+    best-response (``repro.kernels.dual_solve``)."""
     B = jnp.maximum(B, RATE_B_FLOOR_HZ)
     snr = P * h / (n0 * B)
-    return B * jnp.log2(1.0 + snr)
+    return B * jnp.log1p(snr) / LN2
+
+
+def snr_coeff(P: Array, h: Array, n0: float = THERMAL_N0) -> Array:
+    """c = P h / N0 (Hz). The SNR at bandwidth B is c / B; conversely
+    ``bandwidth_from_snr`` inverts the rate's SNR variable. The bandwidth
+    best-response (Yang et al., arXiv:1911.02417; ``kernels.dual_solve``)
+    is solved in t = c / B, where the stationarity condition is 1-D."""
+    return P * h / n0
+
+
+def bandwidth_from_snr(c: Array, t: Array) -> Array:
+    """Inverse-rate helper: the bandwidth (Hz) at which the SNR equals
+    ``t`` given the SNR coefficient ``c = P h / N0`` — B = c / t."""
+    return c / t
 
 
 def payload_bits(gamma: Array, s_bits: float, i_bits: float) -> Array:
@@ -42,7 +69,7 @@ def payload_bits(gamma: Array, s_bits: float, i_bits: float) -> Array:
 
 def comm_time(gamma: Array, B: Array, P: Array, h: Array, s_bits: float,
               i_bits: float, n0: float = THERMAL_N0) -> Array:
-    return payload_bits(gamma, s_bits, i_bits) / jnp.maximum(shannon_rate(B, P, h, n0), 1e-9)
+    return payload_bits(gamma, s_bits, i_bits) / jnp.maximum(shannon_rate(B, P, h, n0), RATE_EPS)
 
 
 def comm_energy(gamma: Array, B: Array, P: Array, h: Array, s_bits: float,

@@ -2,15 +2,21 @@
 
 Thin adapter over ``repro.core.fairenergy.solve_round`` (the jitted
 Algorithm 1 solver) so the paper's controller plugs into the same registry
-surface as the baselines. ``decide`` forwards to ``solve_round`` verbatim
-— the regression test in ``tests/test_controllers.py`` pins the two to
-bit-for-bit identical decisions.
+surface as the baselines. ``init`` embeds the traced solver config
+(``FEParams`` — every float hyper-parameter plus the channel scalars) into
+the carried ``ControllerState``; ``decide`` forwards to ``solve_round``
+reading that state — so the whole float configuration is an *operand* of
+the compiled round, and ``FederatedTrainer.run_sweep`` can vmap stacked
+config lanes through one trace. The regression test in
+``tests/test_controllers.py`` pins the two call styles to bit-for-bit
+identical decisions.
 
 eta_auto calibration (round 0: scale the score weight so the median score
 benefit matches the median energy cost at gamma=0.5, B=B_tot/N) is a
 host-side, one-shot step: ``calibrate`` freezes ``eta`` into the config.
-Callers embedding ``decide`` in a jitted program must calibrate before
-tracing (the trainer rebuilds its round engine after calibration).
+Because eta rides in the state's ``FEParams``, callers must rebuild the
+controller state after calibrating (``FederatedTrainer`` re-inits it and
+its engines).
 """
 from __future__ import annotations
 
@@ -33,7 +39,9 @@ class FairEnergy:
         self.fe_cfg = ctx.fe_cfg
 
     def init(self, n_clients: int):
-        return init_state(self.fe_cfg, n_clients)
+        ctx = self.ctx
+        return init_state(self.fe_cfg, n_clients, b_tot=ctx.b_tot,
+                          s_bits=ctx.s_bits, i_bits=ctx.i_bits, n0=ctx.n0)
 
     @property
     def needs_calibration(self) -> bool:
@@ -51,7 +59,7 @@ class FairEnergy:
         self.fe_cfg = dataclasses.replace(self.fe_cfg, eta=eta, eta_auto=False)
 
     def decide(self, obs: RoundObservation, state):
-        ctx = self.ctx
+        # channel scalars and float knobs come from state.params (set by
+        # init from the context) — config lanes vmap over the state
         return solve_round(obs.u_norms, obs.h, obs.P, state,
-                           fe_cfg=self.fe_cfg, s_bits=ctx.s_bits,
-                           i_bits=ctx.i_bits, b_tot=ctx.b_tot, n0=ctx.n0)
+                           fe_cfg=self.fe_cfg)

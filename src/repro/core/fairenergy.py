@@ -10,15 +10,29 @@ Lagrangian relaxation:
   separates per device (Sec. V-A);
 * affine in x => threshold rule
       x_i = 1  iff  E_i + lambda B_i < eta s_i + mu_i (1 - rho)     (Sec. V-B);
-* per selected device, gamma on a grid and B via Golden Section Search on
-  the unimodal phi(gamma, .) (Sec. V-C);
-* duals by projected subgradient ascent (Algorithm 1 lines 9/11);
+* per selected device, gamma on a grid and B by the *analytic* bandwidth
+  best-response: min_B E(gamma, B) + lambda B reduces to a 1-D
+  stationarity condition in the SNR variable t = P h/(N0 B) (Yang et al.,
+  arXiv:1911.02417), solved by a 3-step vectorized Newton in log space
+  (``repro.kernels.dual_solve.ref``). ``bw_solver="gss"`` keeps the
+  paper's blind Golden Section Search as the reference oracle (Sec. V-C);
+* duals by projected subgradient ascent (Algorithm 1 lines 9/11),
+  warm-started from the previous round's ``ControllerState`` and run as a
+  capped ``lax.while_loop`` with a residual-based early exit — the
+  residual is the largest constraint violation currently driving the
+  duals, so warm-started rounds converge in a handful of iterations and
+  ``RoundDecision.n_inner`` reports the true count;
 * greedy repair restores primal bandwidth feasibility after rounding.
 
 Implementation notes: bandwidth is normalized to fractions b = B/B_tot so
-dual scales are O(energy); the whole round solve is one jitted JAX program
-(vmapped GSS over clients x gamma grid, ``fori_loop`` dual ascent) — the
-controller itself is a composable JAX module usable inside larger programs.
+dual scales are O(energy). Static structure (gamma grid, iteration caps,
+solver choice) is split from traced scalars: every float knob — the
+FairEnergy hyper-parameters *and* the channel scalars (B_tot, S, I, N0) —
+rides in ``FEParams``, carried inside ``ControllerState``, so one trace
+serves every configuration and ``FederatedTrainer.run_sweep`` can vmap
+whole hyper-parameter sweeps over stacked config lanes. With
+``use_pallas_solver`` the [N, G] best-response + selection grid is fused
+into the ``kernels/dual_solve`` Pallas kernel and never touches HBM.
 """
 from __future__ import annotations
 
@@ -28,6 +42,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels.dual_solve import ops as _ds_ops
+from ..kernels.dual_solve import ref as _ds_ref
 from .channel import comm_energy
 from .fairness import contribution_score
 from .gss import golden_section_minimize
@@ -42,72 +58,211 @@ class RoundDecision(NamedTuple):
     energy: Array     # [N] J — communication energy (0 where unselected)
     lam: Array        # scalar dual (normalized-bandwidth price)
     mu: Array         # [N] fairness duals
-    n_inner: Array    # inner iterations run
+    n_inner: Array    # inner dual-ascent iterations actually run
     bw_used: Array    # sum of allocated bandwidth (Hz)
+
+
+class FEParams(NamedTuple):
+    """Traced solver scalars — hyper-parameters *and* channel constants.
+
+    Everything a config sweep may vary rides here (inside
+    ``ControllerState``), so changing any value reuses the compiled
+    solver and stacked lanes vmap. Shape/iteration structure stays in
+    ``FEStatic``."""
+    eta: Array           # score weight
+    rho: Array           # participation-EMA memory
+    pi_min: Array        # min participation rate
+    alpha_lambda: Array  # bandwidth dual step
+    alpha_mu: Array      # fairness dual step
+    b_min_frac: Array    # per-device min bandwidth fraction
+    dual_tol: Array      # dual-ascent early-exit residual (0 disables)
+    b_tot: Array         # total uplink bandwidth (Hz)
+    s_bits: Array        # full-precision payload S (bits)
+    i_bits: Array        # index/mask overhead I (bits)
+    n0: Array            # noise density N0 (W/Hz)
+
+
+class FEStatic(NamedTuple):
+    """Hashable solver structure — the only retrace triggers."""
+    gamma_grid: tuple
+    inner_iters: int
+    newton_iters: int
+    gss_iters: int
+    solver: str          # "newton" | "gss"
+    use_pallas: bool
 
 
 class ControllerState(NamedTuple):
     lam: Array
     mu: Array
-    q: Array          # EMA participation metric
+    q: Array             # EMA participation metric
+    params: FEParams     # traced config (constant within a run)
 
 
-def init_state(cfg, n_clients: int) -> ControllerState:
+def make_params(cfg, *, b_tot: float, s_bits: float, i_bits: float,
+                n0: float) -> FEParams:
+    f = lambda v: jnp.asarray(v, jnp.float32)
+    return FEParams(eta=f(cfg.eta), rho=f(cfg.rho), pi_min=f(cfg.pi_min),
+                    alpha_lambda=f(cfg.alpha_lambda), alpha_mu=f(cfg.alpha_mu),
+                    b_min_frac=f(cfg.b_min_frac),
+                    dual_tol=f(getattr(cfg, "dual_tol", 0.0)),
+                    b_tot=f(b_tot), s_bits=f(s_bits), i_bits=f(i_bits),
+                    n0=f(n0))
+
+
+def static_of(cfg) -> FEStatic:
+    solver = str(getattr(cfg, "bw_solver", "newton"))
+    if solver not in ("newton", "gss"):
+        raise ValueError(f"bw_solver must be 'newton' or 'gss', got "
+                         f"{solver!r}")
+    return FEStatic(gamma_grid=tuple(cfg.gamma_grid),
+                    inner_iters=int(cfg.inner_iters),
+                    newton_iters=int(getattr(cfg, "newton_iters", 3)),
+                    gss_iters=int(cfg.gss_max_iters),
+                    solver=solver,
+                    use_pallas=bool(getattr(cfg, "use_pallas_solver", False)))
+
+
+def init_state(cfg, n_clients: int, *, b_tot: float = None,
+               s_bits: float = None, i_bits: float = None,
+               n0: float = None) -> ControllerState:
+    """Fresh duals + participation EMA, with the traced config embedded.
+
+    Channel scalars default to NaN sentinels for legacy callers that
+    instead pass them to ``solve_round`` (which then rebuilds
+    ``state.params``); callers composing ``solve_round`` without explicit
+    scalars — the controller API path — must supply them here. The NaN
+    poisons every decision output if the two styles are mis-mixed, so
+    the mistake cannot pass silently as plausible zeros."""
+    nan = float("nan")
     return ControllerState(
         lam=jnp.zeros((), jnp.float32),
         mu=jnp.zeros((n_clients,), jnp.float32),
         q=jnp.full((n_clients,), cfg.q0, jnp.float32),
-    )
+        params=make_params(cfg, b_tot=nan if b_tot is None else b_tot,
+                           s_bits=nan if s_bits is None else s_bits,
+                           i_bits=nan if i_bits is None else i_bits,
+                           n0=nan if n0 is None else n0))
 
 
-@functools.partial(jax.jit, static_argnames=("fe_cfg", "s_bits", "i_bits", "b_tot", "n0"))
 def solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
-                *, fe_cfg, s_bits: float, i_bits: float, b_tot: float,
-                n0: float) -> tuple[RoundDecision, ControllerState]:
-    """One round of Algorithm 1. All client quantities are [N] arrays."""
+                *, fe_cfg, s_bits: float = None, i_bits: float = None,
+                b_tot: float = None, n0: float = None
+                ) -> tuple[RoundDecision, ControllerState]:
+    """One round of Algorithm 1. All client quantities are [N] arrays.
+
+    Only ``fe_cfg``'s *structure* (grid, iteration caps, solver choice)
+    is static. Two call styles:
+
+    * legacy/explicit — pass all four channel scalars; they and
+      ``fe_cfg``'s float fields become the round's traced ``FEParams``
+      (changing them does NOT retrace);
+    * state-carried — omit them; the solver reads ``state.params`` (the
+      controller-API path, which is what lets seed x config sweeps vmap
+      over stacked states).
+    """
+    given = (s_bits, i_bits, b_tot, n0)
+    if any(v is not None for v in given):
+        if any(v is None for v in given):
+            raise TypeError("solve_round: pass all of s_bits/i_bits/b_tot/n0 "
+                            "or none (to use state.params)")
+        state = state._replace(params=make_params(
+            fe_cfg, b_tot=b_tot, s_bits=s_bits, i_bits=i_bits, n0=n0))
+    return _solve_round(u_norms, h, P, state, static_of(fe_cfg))
+
+
+@functools.partial(jax.jit, static_argnames=("static",))
+def _solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
+                 static: FEStatic) -> tuple[RoundDecision, ControllerState]:
     N = u_norms.shape[0]
-    grid = jnp.asarray(fe_cfg.gamma_grid, jnp.float32)       # [G]
+    p = state.params
+    grid = jnp.asarray(static.gamma_grid, jnp.float32)       # [G]
     G = grid.shape[0]
-    rho, eta = fe_cfg.rho, fe_cfg.eta
-    b_lo = fe_cfg.b_min_frac
+    rho, eta = p.rho, p.eta
+    b_lo = p.b_min_frac
 
     Pg = P[:, None]
     hg = h[:, None]
     gam = jnp.broadcast_to(grid[None, :], (N, G))
 
     def energy_of(b_frac):                                   # [N,G] fractions
-        return comm_energy(gam, b_frac * b_tot, Pg, hg, s_bits, i_bits, n0)
+        return comm_energy(gam, b_frac * p.b_tot, Pg, hg, p.s_bits, p.i_bits,
+                           p.n0)
 
     score = contribution_score(u_norms[:, None], gam)        # [N,G]
 
-    def best_response(lam):
-        """Per-device (gamma*, b*, E*, phi*) for a given bandwidth price."""
+    def best_response_gss(lam):
+        """Reference oracle: blind GSS on the unimodal phi (Sec. V-C)."""
         def phi_b(b_frac):
             return energy_of(b_frac) + lam * b_frac          # score term const wrt b
         b_star, phi_star = golden_section_minimize(
-            phi_b, jnp.full((N, G), b_lo), 1.0, iters=fe_cfg.gss_max_iters)
+            phi_b, jnp.full((N, G), b_lo), 1.0, iters=static.gss_iters)
         phi_full = phi_star - eta * score                    # [N,G]
         g_idx = jnp.argmin(phi_full, axis=1)                 # [N]
         take = lambda t: jnp.take_along_axis(t, g_idx[:, None], 1)[:, 0]
         return take(gam), take(b_star), take(energy_of(b_star)), take(phi_full)
 
-    def inner(i, carry):
-        lam, mu = carry
+    # lam-independent stationarity constant, hoisted out of the dual loop
+    # (a loop-invariant while_loop operand; the Pallas kernel recomputes
+    # it in-register instead — one fused launch, no [N, G] HBM operand)
+    nt_base = None if (static.solver == "gss" or static.use_pallas) else \
+        _ds_ref.ln_k_base(Pg, hg, gam, b_tot=p.b_tot, s_bits=p.s_bits,
+                          i_bits=p.i_bits, n0=p.n0)
+
+    def best_response_newton(lam):
+        """Analytic best-response: Newton on the SNR stationarity."""
+        fn = _ds_ops.dual_solve if static.use_pallas else _ds_ref.dual_solve_ref
+        kw = {} if static.use_pallas else {"base": nt_base}
+        return fn(P, h, u_norms, lam, gamma_grid=static.gamma_grid,
+                  eta=eta, b_tot=p.b_tot, s_bits=p.s_bits, i_bits=p.i_bits,
+                  n0=p.n0, b_lo=b_lo, newton_iters=static.newton_iters, **kw)
+
+    best_response = (best_response_gss if static.solver == "gss"
+                     else best_response_newton)
+
+    def dual_step(lam, mu):
         gamma_i, b_i, e_i, _ = best_response(lam)
-        x = e_i + lam * b_i < eta * contribution_score(u_norms, gamma_i) + mu * (1.0 - rho)
+        x = e_i + lam * b_i < eta * contribution_score(u_norms, gamma_i) \
+            + mu * (1.0 - rho)
         xf = x.astype(jnp.float32)
         # Algorithm 1 line 11: bandwidth dual (normalized budget = 1)
-        lam = jnp.maximum(lam + fe_cfg.alpha_lambda * (jnp.sum(xf * b_i) - 1.0), 0.0)
+        new_lam = jnp.maximum(lam + p.alpha_lambda * (jnp.sum(xf * b_i) - 1.0),
+                              0.0)
         # Algorithm 1 line 9: fairness dual
-        mu = jnp.maximum(mu + fe_cfg.alpha_mu *
-                         (fe_cfg.pi_min - rho * state.q - (1.0 - rho) * xf), 0.0)
-        return lam, mu
+        new_mu = jnp.maximum(mu + p.alpha_mu *
+                             (p.pi_min - rho * state.q - (1.0 - rho) * xf),
+                             0.0)
+        return new_lam, new_mu
 
-    lam, mu = jax.lax.fori_loop(0, fe_cfg.inner_iters, inner, (state.lam, state.mu))
+    # warm-started dual ascent with residual early exit: the residual is
+    # the size of the (post-projection) dual updates in primal units —
+    # max(|d lam|/alpha_lambda, |d mu|/alpha_mu) = the largest constraint
+    # violation still moving the duals. Warm starts inherit near-converged
+    # duals from the previous round, so this exits in a few iterations;
+    # round 0 ramps lam from zero and runs much longer.
+    def cond(carry):
+        _, _, i, res = carry
+        return (i < static.inner_iters) & (res > p.dual_tol)
+
+    def body(carry):
+        lam, mu, i, _ = carry
+        new_lam, new_mu = dual_step(lam, mu)
+        # a zero dual step is a legal sweep point (that dual disabled);
+        # its updates are identically 0, so guard the 0/0 — the disabled
+        # dual contributes no residual rather than a NaN that would
+        # short-circuit the loop
+        res = jnp.maximum(
+            jnp.abs(new_lam - lam) / jnp.maximum(p.alpha_lambda, 1e-30),
+            jnp.max(jnp.abs(new_mu - mu)) / jnp.maximum(p.alpha_mu, 1e-30))
+        return new_lam, new_mu, i + 1, res
+
+    lam, mu, n_inner, _ = jax.lax.while_loop(
+        cond, body, (state.lam, state.mu, jnp.int32(0), jnp.float32(jnp.inf)))
 
     # final primal extraction at converged duals
     gamma_i, b_i, e_i, _ = best_response(lam)
-    benefit = eta * contribution_score(u_norms, gamma_i) + mu * (1.0 - rho) - e_i - lam * b_i
+    benefit = eta * contribution_score(u_norms, gamma_i) + mu * (1.0 - rho) \
+        - e_i - lam * b_i
     x = benefit > 0
 
     # ---- repair: greedy keep until the bandwidth budget fits.  Clients
@@ -115,7 +270,7 @@ def solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
     # FIRST (then by benefit) — a benefit-only repair silently undoes the
     # fairness the duals enforced (measured: min participation 0.14 < pi_min
     # at rho=0.6) ----
-    deficit = (fe_cfg.pi_min - rho * state.q) > 0.0          # violated if x_i=0
+    deficit = (p.pi_min - rho * state.q) > 0.0               # violated if x_i=0
     prio = jnp.where(deficit, 1e6, 0.0) + benefit
     order = jnp.argsort(jnp.where(x, -prio, jnp.inf))        # selected, priority first
     b_sorted = b_i[order] * x[order]
@@ -125,12 +280,11 @@ def solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
     x = x & keep
 
     xf = x.astype(jnp.float32)
-    bandwidth = xf * b_i * b_tot
+    bandwidth = xf * b_i * p.b_tot
     energy = xf * e_i
     q_new = rho * state.q + (1.0 - rho) * xf                 # eq. (1)
 
-    dec = RoundDecision(x=x, gamma=jnp.where(x, gamma_i, 0.0), bandwidth=bandwidth,
-                        energy=energy, lam=lam, mu=mu,
-                        n_inner=jnp.int32(fe_cfg.inner_iters),
-                        bw_used=jnp.sum(bandwidth))
-    return dec, ControllerState(lam=lam, mu=mu, q=q_new)
+    dec = RoundDecision(x=x, gamma=jnp.where(x, gamma_i, 0.0),
+                        bandwidth=bandwidth, energy=energy, lam=lam, mu=mu,
+                        n_inner=n_inner, bw_used=jnp.sum(bandwidth))
+    return dec, ControllerState(lam=lam, mu=mu, q=q_new, params=p)

@@ -29,7 +29,12 @@ Two drivers share one round body (``_make_round_core``):
   (pinned by ``tests/test_scan_engine.py``).
 
 ``run_sweep`` vmaps the scanned engine over per-seed key sets, producing
-multi-seed accuracy/energy curves at roughly single-run wall-clock.
+multi-seed accuracy/energy curves at roughly single-run wall-clock — and,
+with ``configs={...}``, additionally over stacked FairEnergy
+hyper-parameter lanes (eta, rho, B_tot, ...): the solver reads its float
+config from the carried controller state (``repro.core.fairenergy
+.FEParams``), so seeds x configs share one trace and run as one jitted
+program.
 
 **Client-axis sharding** (``FederatedTrainer(..., mesh=...)``): with a
 1-D ``clients`` mesh (``repro.sharding.make_clients_mesh``) the same scan
@@ -358,6 +363,7 @@ class FederatedTrainer:
         self._scan_engine = None
         self._scan_fn_raw = None
         self._sweep_engine = None
+        self._cfg_sweep_engine = None
         self._P = jnp.asarray(self.network.power, jnp.float32)
         self.mesh, self.mesh_axis = mesh, mesh_axis
         if mesh is not None:
@@ -429,15 +435,85 @@ class FederatedTrainer:
             self._sweep_engine = sweep
         return self._sweep_engine
 
+    def _get_config_sweep_engine(self):
+        """configs (outer vmap) x seeds (inner vmap) of the scan program:
+        the whole hyper-parameter sweep is one jitted XLA program. Config
+        lanes ride in the stacked controller states (``FEParams`` is a
+        traced operand of the solver), so no lane retraces."""
+        if self._cfg_sweep_engine is None:
+            self._get_scan_engine()
+            scan_fn = self._scan_fn_raw
+
+            @functools.partial(jax.jit, static_argnames="n_rounds")
+            def sweep(params, states, data, keys, eval_every, n_rounds: int):
+                def per_cfg(st):
+                    def one(ks):
+                        _, _, outs = scan_fn(params, st, data, ks,
+                                             jnp.int32(0),
+                                             jnp.int32(n_rounds - 1),
+                                             eval_every, n_rounds)
+                        return outs
+                    return jax.vmap(one)(keys)
+                return jax.vmap(per_cfg)(states)
+
+            self._cfg_sweep_engine = sweep
+        return self._cfg_sweep_engine
+
+    def _stack_config_states(self, configs: dict):
+        """Per-lane controller states from a dict of FEParams overrides
+        ({"eta": [...], "rho": [...], "b_tot": [...]}, equal-length or
+        scalar-broadcast values). Returns (stacked_states, n_lanes,
+        echo) — echo is the post-broadcast {field: [n_lanes values]}."""
+        from repro.core.fairenergy import FEParams
+        base = self.ctrl_state
+        if not (hasattr(base, "params") and isinstance(base.params, FEParams)):
+            raise ValueError(
+                "config sweep needs a controller whose state carries "
+                "FEParams (the fairenergy controller); "
+                f"got {type(self.controller).__name__}")
+        unknown = set(configs) - set(FEParams._fields)
+        if unknown:
+            raise KeyError(f"unknown FEParams field(s) {sorted(unknown)}; "
+                           f"sweepable: {list(FEParams._fields)}")
+        vals = {k: np.atleast_1d(np.asarray(v, np.float32))
+                for k, v in configs.items()}
+        n_lanes = max(v.shape[0] for v in vals.values())
+        for k, v in vals.items():
+            if v.shape[0] == 1:
+                vals[k] = np.broadcast_to(v, (n_lanes,))
+            elif v.shape[0] != n_lanes:
+                raise ValueError(f"config {k!r} has {v.shape[0]} values, "
+                                 f"expected 1 or {n_lanes}")
+        # the 1 Hz rate-floor contract (see ControllerContext) must hold
+        # on every lane, not just the trainer's own b_tot
+        b_lo = vals.get("b_min_frac",
+                        np.full(n_lanes, float(base.params.b_min_frac)))
+        b_tot = vals.get("b_tot", np.full(n_lanes, float(base.params.b_tot)))
+        bad = b_lo * b_tot < 1.0
+        if bad.any():
+            raise ValueError(
+                f"config lane(s) {np.nonzero(bad)[0].tolist()} probe "
+                "bandwidth below the 1 Hz rate floor "
+                "(b_min_frac * b_tot < 1); raise b_min_frac or b_tot")
+        lanes = [base._replace(params=base.params._replace(
+            **{k: jnp.float32(v[i]) for k, v in vals.items()}))
+            for i in range(n_lanes)]
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *lanes)
+        echo = {k: np.asarray(v).tolist() for k, v in vals.items()}
+        return stacked, n_lanes, echo
+
     def _invalidate_engines(self):
         self._scan_engine = None
         self._scan_fn_raw = None
         self._sweep_engine = None
+        self._cfg_sweep_engine = None
 
     def _maybe_calibrate(self, r: int):
         """One-shot eta_auto calibration from round-r observations. The
-        engines trace the controller's (static) config, so they are
-        rebuilt after calibration freezes eta."""
+        engines trace the controller's (static) structure, so they are
+        rebuilt after calibration — and because the float config rides in
+        the controller *state* (``FEParams``), the state is re-inited so
+        the calibrated eta reaches the solver."""
         if not getattr(self.controller, "needs_calibration", False):
             return
         _, u_norms, _ = self._client_step(self.params, self._round_batches(r))
@@ -445,6 +521,7 @@ class FederatedTrainer:
         # drop ghost-padded rows: calibration medians see only real clients
         self.controller.calibrate(np.asarray(u_norms)[:self.n_clients],
                                   np.asarray(h), self.network.power)
+        self.ctrl_state = self.controller.init(self.n_clients)
         self._invalidate_engines()
 
     # ------------------------------------------------------------------
@@ -533,9 +610,25 @@ class FederatedTrainer:
                       f"E={lg.total_energy*1e3:.3f} mJ")
         return self.history
 
+    @staticmethod
+    def _seed_keys(base):
+        """Per-seed sweep key streams, the single source of the stream
+        protocol (fade uses the base itself, folded by round; see the
+        stream-tag note in __init__)."""
+        return {"fade": base,
+                "ctrl": jax.random.fold_in(base, _CTRL_STREAM),
+                "sample": jax.random.fold_in(base, _SAMPLE_STREAM)}
+
+    @classmethod
+    def _stacked_seed_keys(cls, bases):
+        """[S]-stacked key-lane pytree for the vmapped sweep engines."""
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                      *[cls._seed_keys(b) for b in bases])
+
     def run_sweep(self, seeds, rounds: Optional[int] = None, *,
-                  eval_every: int = 1) -> dict:
-        """vmap the scanned engine over per-seed key sets.
+                  eval_every: int = 1, configs: Optional[dict] = None) -> dict:
+        """vmap the scanned engine over per-seed key sets — and, with
+        ``configs``, over stacked hyper-parameter lanes.
 
         Every lane starts from the trainer's *current* params and
         controller state (the model init on a fresh trainer — sweep
@@ -546,15 +639,26 @@ class FederatedTrainer:
         Returns stacked numpy arrays: ``accuracy``/``loss`` [S, R],
         ``x``/``gamma``/``bandwidth``/``energy`` [S, R, N]. With
         ``eta_auto`` controllers, eta is calibrated once from this
-        trainer's own round-0 draw and shared across seeds (it is a
-        static config traced into the program). ``history``/``params``
-        are left untouched.
+        trainer's own round-0 draw and shared across seeds (it seeds the
+        controller state's FEParams). ``history``/``params`` are left
+        untouched.
+
+        ``configs`` maps ``FEParams`` field names (``eta``, ``rho``,
+        ``b_tot``, ``pi_min``, ...) to equal-length value lists — C
+        config lanes riding in the stacked controller states, so seeds x
+        configs run as ONE jitted program (no retraces: the whole float
+        config is a traced operand of the solver). Output arrays gain a
+        leading config axis ([C, S, R, ...]) and the returned dict echoes
+        the lanes under ``"configs"``. Requires a controller whose state
+        carries ``FEParams`` (fairenergy).
         """
         rounds = rounds or self.fl_cfg.rounds
         if eval_every < 1:
             raise ValueError(f"eval_every must be >= 1, got {eval_every}")
         self._maybe_calibrate(0)
         bases = [jax.random.PRNGKey(int(s)) for s in seeds]
+        if configs is not None:
+            return self._run_config_sweep(bases, rounds, eval_every, configs)
         if self.mesh is not None:
             # sharded engine: shard_map doesn't vmap over the key lanes, so
             # run the (already sharded, scanned) program once per seed —
@@ -563,9 +667,7 @@ class FederatedTrainer:
             engine = self._get_scan_engine()
             lanes = []
             for b in bases:
-                keys = {"fade": b,
-                        "ctrl": jax.random.fold_in(b, _CTRL_STREAM),
-                        "sample": jax.random.fold_in(b, _SAMPLE_STREAM)}
+                keys = self._seed_keys(b)
                 p = jax.tree_util.tree_map(jnp.array, self.params)
                 st = jax.tree_util.tree_map(jnp.array, self.ctrl_state)
                 _, _, outs = engine(p, st, self._data, keys, jnp.int32(0),
@@ -573,15 +675,46 @@ class FederatedTrainer:
                                     jnp.int32(eval_every), n_rounds=rounds)
                 lanes.append({k: np.asarray(v) for k, v in outs.items()})
             return {k: np.stack([ln[k] for ln in lanes]) for k in lanes[0]}
-        keys = {"fade": jnp.stack(bases),
-                "ctrl": jnp.stack([jax.random.fold_in(b, _CTRL_STREAM)
-                                   for b in bases]),
-                "sample": jnp.stack([jax.random.fold_in(b, _SAMPLE_STREAM)
-                                     for b in bases])}
+        keys = self._stacked_seed_keys(bases)
         outs = self._get_sweep_engine()(
             self.params, self.ctrl_state, self._data, keys,
             jnp.int32(eval_every), n_rounds=rounds)
         return {k: np.asarray(v) for k, v in outs.items()}
+
+    def _run_config_sweep(self, bases, rounds: int, eval_every: int,
+                          configs: dict) -> dict:
+        """seeds x config lanes. Single-device: one jitted program
+        (configs and seeds both vmapped). Sharded: shard_map does not
+        vmap over lanes, so (config, seed) pairs run sequentially."""
+        # echo comes back post-broadcast: every key has exactly n_lanes
+        # values, matching the result arrays' leading config axis
+        states, n_lanes, echo = self._stack_config_states(configs)
+        if self.mesh is not None:
+            engine = self._get_scan_engine()
+            lanes = []
+            for c in range(n_lanes):
+                st_c = jax.tree_util.tree_map(lambda x: x[c], states)
+                per_seed = []
+                for b in bases:
+                    keys = self._seed_keys(b)
+                    p = jax.tree_util.tree_map(jnp.array, self.params)
+                    st = jax.tree_util.tree_map(jnp.array, st_c)
+                    _, _, outs = engine(p, st, self._data, keys, jnp.int32(0),
+                                        jnp.int32(rounds - 1),
+                                        jnp.int32(eval_every), n_rounds=rounds)
+                    per_seed.append({k: np.asarray(v) for k, v in outs.items()})
+                lanes.append({k: np.stack([s[k] for s in per_seed])
+                              for k in per_seed[0]})
+            res = {k: np.stack([ln[k] for ln in lanes]) for k in lanes[0]}
+            res["configs"] = echo
+            return res
+        keys = self._stacked_seed_keys(bases)
+        outs = self._get_config_sweep_engine()(
+            self.params, states, self._data, keys, jnp.int32(eval_every),
+            n_rounds=rounds)
+        res = {k: np.asarray(v) for k, v in outs.items()}
+        res["configs"] = echo
+        return res
 
     # -------------------------------------------------------- statistics ----
     def participation_counts(self) -> np.ndarray:

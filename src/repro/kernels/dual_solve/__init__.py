@@ -1,0 +1,9 @@
+"""Fused FairEnergy best-response + gamma-selection solver kernel.
+
+ref.py    — pure-jnp oracle: closed-form/Newton bandwidth best-response
+            (Lambert-W-type stationarity in the SNR variable) and the
+            [N, G] grid reduction
+kernel.py — Pallas TPU kernel: one client block per program, the gamma
+            grid unrolled in VREGs — the [N, G] grid never exists in HBM
+ops.py    — padded/jitted public wrapper (interpret=True on CPU)
+"""

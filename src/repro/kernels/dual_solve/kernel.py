@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: fused bandwidth best-response + gamma selection.
+
+One grid step owns a lane-aligned block of clients resident in VMEM and,
+for every level of the (static) gamma grid, solves the Newton bandwidth
+best-response (``ref.newton_snr``), evaluates the per-device objective
+phi = E + lam b - eta s, and keeps a running elementwise min — so the
+``[N, G]`` grid lives only in VREGs, G registers deep, and never
+round-trips through HBM (the jnp path materializes it [N, G] per dual
+iteration). Ties go to the lower grid index (strict ``<`` update),
+matching ``jnp.argmin`` in the ref.
+
+The traced scalars (lam, eta, b_tot, s_bits, i_bits, n0, b_lo) arrive as
+one scalar-prefetched SMEM vector — the dual price lam changes every
+inner iteration, so it must be an operand, not a compile-time constant.
+The gamma grid and Newton iteration count are static (baked via
+functools.partial), mirroring ``topk_sparsify``'s static-k layout.
+
+Grid: one program per client block. Block size must be a multiple of
+128 lanes (default 128; inputs are padded by ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import _channel, ln_k_gamma_free, newton_snr
+
+# scalar-prefetch vector layout
+N_SCALARS = 7
+(S_LAM, S_ETA, S_BTOT, S_SBITS, S_IBITS, S_N0, S_BLO) = range(N_SCALARS)
+
+def _best_response_block(P, h, u, sc, *, gamma_grid, newton_iters):
+    """Shared kernel body math on loaded [1, BLK] values. ``sc`` indexes
+    the scalar vector. Returns (gamma*, b*, e*, phi*).
+
+    The energy at the clipped best-response IS ``channel.comm_energy``,
+    called per (static) gamma level on the block values — elementwise
+    jnp lowers inside the kernel body, so the channel model stays the
+    single source of truth for floors and guards."""
+    lam, eta = sc[S_LAM], sc[S_ETA]
+    b_tot, s_bits, i_bits = sc[S_BTOT], sc[S_SBITS], sc[S_IBITS]
+    n0, b_lo = sc[S_N0], sc[S_BLO]
+    chan = _channel()
+
+    c = chan.snr_coeff(P, h, n0)
+    base = ln_k_gamma_free(P, h, n0=n0, b_tot=b_tot)   # hoisted over gammas
+    ln_lam = jnp.log(jnp.maximum(lam, 1e-30))
+
+    best = None
+    for g in gamma_grid:                                  # static unroll
+        D = g * s_bits + i_bits
+        ln_k = ln_lam + base - jnp.log(D)
+        t = newton_snr(ln_k, newton_iters)
+        b = jnp.clip(c / (t * b_tot), b_lo, 1.0)
+        e = chan.comm_energy(g, b * b_tot, P, h, s_bits, i_bits, n0)
+        phi = e + lam * b - eta * u * g
+        if best is None:
+            best = (jnp.full_like(phi, g), b, e, phi)
+        else:
+            bg, bb, be, bphi = best
+            upd = phi < bphi
+            best = (jnp.where(upd, g, bg), jnp.where(upd, b, bb),
+                    jnp.where(upd, e, be), jnp.where(upd, phi, bphi))
+    return best
+
+
+def _dual_solve_kernel(sc_ref, p_ref, h_ref, u_ref,
+                       gam_ref, b_ref, e_ref, phi_ref, *,
+                       gamma_grid, newton_iters):
+    P = p_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    gam, b, e, phi = _best_response_block(
+        P, h, u, sc_ref, gamma_grid=gamma_grid, newton_iters=newton_iters)
+    gam_ref[...] = gam
+    b_ref[...] = b
+    e_ref[...] = e
+    phi_ref[...] = phi
+
+
+@functools.partial(jax.jit, static_argnames=("gamma_grid", "newton_iters",
+                                             "block", "interpret"))
+def dual_solve_pallas(P: jnp.ndarray, h: jnp.ndarray, u_norms: jnp.ndarray,
+                      scalars: jnp.ndarray, *, gamma_grid: tuple,
+                      newton_iters: int = 3, block: int = 128,
+                      interpret: bool = True):
+    """P/h/u_norms: [n] with n % block == 0; scalars: [N_SCALARS] f32
+    (see the S_* layout). Returns (gamma*, b*, e*, phi*), each [n]."""
+    n = P.shape[0]
+    assert n % block == 0 and scalars.shape == (N_SCALARS,), \
+        (P.shape, scalars.shape)
+    nb = n // block
+    rows = lambda x: x.reshape(nb, block)
+    blk = pl.BlockSpec((1, block), lambda i, sc: (i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[blk, blk, blk],
+        out_specs=[blk, blk, blk, blk],
+    )
+    out = pl.pallas_call(
+        functools.partial(_dual_solve_kernel, gamma_grid=gamma_grid,
+                          newton_iters=newton_iters),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.float32)] * 4,
+        interpret=interpret,
+    )(scalars.astype(jnp.float32), rows(P), rows(h), rows(u_norms))
+    return tuple(o.reshape(-1) for o in out)

@@ -1,0 +1,43 @@
+"""jit'd public wrapper around the dual_solve Pallas kernel."""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from .kernel import (N_SCALARS, S_BLO, S_BTOT, S_ETA, S_IBITS, S_LAM, S_N0,
+                     S_SBITS, dual_solve_pallas)
+
+# interpret=True executes the kernel body on CPU; on a real TPU runtime set
+# REPRO_PALLAS_INTERPRET=0 (ops read it once at import).
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+BLOCK = 128
+
+
+def dual_solve(P: jnp.ndarray, h: jnp.ndarray, u_norms: jnp.ndarray,
+               lam: jnp.ndarray, *, gamma_grid: tuple, eta, b_tot, s_bits,
+               i_bits, n0, b_lo, newton_iters: int = 3):
+    """Same contract as ``ref.dual_solve_ref``: per-client
+    ``(gamma*, b*, e*, phi*)`` at bandwidth price ``lam``. The gamma grid
+    and Newton iteration count are static; every other scalar is traced
+    (packed into the kernel's scalar-prefetch vector). Pads the client
+    axis to the 128-lane block and truncates the outputs back."""
+    n = P.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        # padded lanes must stay finite through log/Newton: unit channel,
+        # zero score. They are sliced off before anything consumes them.
+        one = jnp.ones((pad,), jnp.float32)
+        P = jnp.concatenate([P, one])
+        h = jnp.concatenate([h, one])
+        u_norms = jnp.concatenate([u_norms, jnp.zeros((pad,), jnp.float32)])
+    sc = jnp.zeros((N_SCALARS,), jnp.float32)
+    sc = sc.at[S_LAM].set(lam).at[S_ETA].set(eta).at[S_BTOT].set(b_tot)
+    sc = sc.at[S_SBITS].set(s_bits).at[S_IBITS].set(i_bits)
+    sc = sc.at[S_N0].set(n0).at[S_BLO].set(b_lo)
+    gam, b, e, phi = dual_solve_pallas(
+        P.astype(jnp.float32), h.astype(jnp.float32),
+        u_norms.astype(jnp.float32), sc, gamma_grid=tuple(gamma_grid),
+        newton_iters=newton_iters, block=BLOCK, interpret=INTERPRET)
+    return gam[:n], b[:n], e[:n], phi[:n]

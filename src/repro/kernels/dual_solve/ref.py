@@ -1,0 +1,156 @@
+"""Pure-jnp oracle for the FairEnergy bandwidth best-response.
+
+The per-device subproblem of Algorithm 1's inner loop is
+
+    min_{b in [b_lo, 1]}  phi(b) = E(gamma, b B_tot) + lam b,
+
+with E = P D / R(B), R(B) = B log2(1 + c/B), c = P h / N0 the SNR
+coefficient and D = gamma S + I the payload. Following Yang et al.
+("Energy Efficient Federated Learning Over Wireless Communication
+Networks", arXiv:1911.02417), the stationarity condition is 1-D in the
+SNR variable t = c / B:
+
+    dphi/dB = 0   <=>   g(t) := t^2 A(t) / L(t)^2 = K,
+
+with L(t) = ln(1+t), A(t) = L(t) - t/(1+t) and
+K = lam c^2 / (P D B_tot ln 2). g is strictly increasing (g ~ t^2/2 as
+t -> 0, ~ t^2/ln t as t -> inf), so the root is unique — the Lambert-W
+form of the classic energy/bandwidth trade-off. We solve ln g(e^u) =
+ln K by Newton in u = ln t: ln g is quasi-linear in u (slope in (1, 2]),
+so 3 iterations reach fp32 accuracy from a regime-blended initializer
+(see ``newton_snr``). Everything is computed in log space — K itself can
+overflow fp32 (c^2 ~ 1e25 at strong channels).
+
+phi is unimodal in b, so the unconstrained stationary point clipped to
+[b_lo, 1] is the box minimum. lam <= 0 degenerates to ln K = -inf ->
+t* -> 0 -> B* -> inf -> b* = 1, which the clip handles without special
+casing (ln(max(lam, tiny)) keeps the iteration finite).
+
+``golden_section_minimize`` (repro.core.gss) remains the reference
+oracle: the GSS path in ``repro.core.fairenergy.solve_round``
+(``bw_solver="gss"``) evaluates the same phi by blind search, and the
+property suite pins Newton's phi to never exceed it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+# ln 2 — a mathematical constant, mirrored from core.channel.LN2 (a
+# module-level import would re-enter the core package cycle; see _channel)
+LN2 = 0.6931471805599453
+
+
+def _channel():
+    # deferred: repro.core.fairenergy imports this module at class-define
+    # time, and a module-level ``from repro.core.channel import ...`` here
+    # would re-enter repro.core's package __init__ mid-import. By first
+    # call, imports have settled and this is a sys.modules lookup.
+    from repro.core import channel
+    return channel
+
+
+# A(t) = log1p(t) - t/(1+t) cancels catastrophically below t ~ 1e-2 in
+# fp32 (A ~ t^2/2 while both terms are ~ t); newton_snr switches to the
+# series A = t^2/2 (1 - 4t/3 + 3t^2/2 - ...) there.
+def newton_snr(ln_k: Array, iters: int = 3) -> Array:
+    """Solve g(t) = t^2 A(t)/L(t)^2 = exp(ln_k) for t by Newton in
+    u = ln t. Fully elementwise/vectorized; ``iters`` is static.
+
+    Tuned for the solver's inner loop (it runs once per dual iteration):
+    a regime-blended initializer (t0 = sqrt(2K) from the small-t
+    asymptote, sqrt(K ln K / 2)-type log correction for large K) lands
+    within ~1e-2 of the root, so ``iters=3`` already reaches the fp32
+    noise floor (~1e-5); the body spends only three transcendentals
+    (exp, log1p, log). The residual is evaluated as
+    log((t/L)^2 A) - ln_k: t/L stays O(1)..O(t), so no intermediate ever
+    wanders into fp32 denormals (t^2 A alone reaches ~1e-36 at the
+    clamped small-t corner, and denormal arithmetic is microcode-slow on
+    CPUs). ln_k is clamped; the clamped tails land outside [b_lo, 1] and
+    are absorbed by the clip in ``bandwidth_best_response``."""
+    ln_k = jnp.clip(ln_k, -45.0, 55.0)
+    u_small = 0.5 * (ln_k + LN2)
+    u_large = 0.5 * ln_k + 0.5 * jnp.log(jnp.maximum(0.5 * ln_k, 1.0))
+    u = jnp.clip(jnp.where(ln_k > 2.0, u_large, u_small), -20.0, 25.0)
+
+    def body(_, u):
+        t = jnp.exp(u)
+        L = jnp.log1p(t)
+        A = jnp.where(t < 0.01,
+                      0.5 * t * t * (1.0 - (4.0 / 3.0) * t + 1.5 * t * t),
+                      L - t / (1.0 + t))
+        tL = t / L
+        F = jnp.log(tL * tL * A) - ln_k
+        dF = 2.0 + t * t / ((1.0 + t) ** 2 * A) - 2.0 * t / ((1.0 + t) * L)
+        return jnp.clip(u - F / dF, -20.0, 25.0)
+
+    return jnp.exp(jax.lax.fori_loop(0, iters, body, u))
+
+
+def ln_k_gamma_free(P: Array, h: Array, *, n0: Array, b_tot: Array) -> Array:
+    """The gamma- AND lam-independent part of the stationarity constant:
+    ln K = ln lam + ln_k_gamma_free - ln D. Split out so the Pallas
+    kernel can hoist it above its static gamma unroll while sharing one
+    formula with the jnp path."""
+    c = _channel().snr_coeff(P, h, n0)
+    return 2.0 * jnp.log(c) - jnp.log(P) - jnp.log(b_tot * LN2)
+
+
+def ln_k_base(P: Array, h: Array, gamma: Array, *, b_tot: Array,
+              s_bits: Array, i_bits: Array, n0: Array) -> Array:
+    """The lam-independent part of the stationarity constant:
+    ln K = ln lam + ln_k_base. Hoist it out of the dual-ascent loop — it
+    is fixed across inner iterations (only the price lam moves)."""
+    D = gamma * s_bits + i_bits
+    return ln_k_gamma_free(P, h, n0=n0, b_tot=b_tot) - jnp.log(D)
+
+
+def bandwidth_best_response(lam: Array, P: Array, h: Array, gamma: Array, *,
+                            b_tot: Array, s_bits: Array, i_bits: Array,
+                            n0: Array, b_lo: Array, iters: int = 3,
+                            base: Array = None) -> Array:
+    """argmin_{b in [b_lo, 1]} E(gamma, b B_tot) + lam b, elementwise
+    over broadcastable (P, h, gamma). Returns the bandwidth *fraction*.
+    ``base`` optionally supplies a precomputed ``ln_k_base``."""
+    c = _channel().snr_coeff(P, h, n0)
+    if base is None:
+        base = ln_k_base(P, h, gamma, b_tot=b_tot, s_bits=s_bits,
+                         i_bits=i_bits, n0=n0)
+    ln_k = jnp.log(jnp.maximum(lam, 1e-30)) + base
+    t = newton_snr(ln_k, iters)
+    return jnp.clip(c / (t * b_tot), b_lo, 1.0)
+
+
+def dual_solve_ref(P: Array, h: Array, u_norms: Array, lam: Array, *,
+                   gamma_grid, eta: Array, b_tot: Array, s_bits: Array,
+                   i_bits: Array, n0: Array, b_lo: Array,
+                   newton_iters: int = 3, base: Array = None):
+    """Per-client best response over the gamma grid — the jnp oracle for
+    the Pallas kernel (and the solver's default jnp fast path).
+
+    For every client i and grid level gamma_g, solves the bandwidth
+    best-response at price ``lam``, evaluates
+    phi = E + lam b - eta ||u_i|| gamma_g, and reduces over the grid
+    (ties to the lower index, matching ``jnp.argmin``). Returns
+    ``(gamma_star, b_star, e_star, phi_star)``, each ``[N]``; the
+    selection threshold is then ``phi_star < mu (1 - rho)``.
+
+    ``gamma_grid`` is a static tuple; scalars are traced. ``base``
+    optionally supplies the precomputed [N, G] ``ln_k_base`` so the
+    dual-ascent loop does not recompute its three logs per iteration.
+    """
+    grid = jnp.asarray(gamma_grid, jnp.float32)                  # [G]
+    Pg, hg, ug = P[:, None], h[:, None], u_norms[:, None]        # [N,1]
+    gam = jnp.broadcast_to(grid[None, :], (P.shape[0], grid.shape[0]))
+    b = bandwidth_best_response(lam, Pg, hg, gam, b_tot=b_tot,
+                                s_bits=s_bits, i_bits=i_bits, n0=n0,
+                                b_lo=b_lo, iters=newton_iters,
+                                base=base)                       # [N,G]
+    e = _channel().comm_energy(gam, b * b_tot, Pg, hg,
+                               s_bits, i_bits, n0)               # [N,G]
+    phi = e + lam * b - eta * ug * gam                           # [N,G]
+    g_idx = jnp.argmin(phi, axis=1)                              # [N]
+    take = lambda t: jnp.take_along_axis(t, g_idx[:, None], 1)[:, 0]
+    return take(gam), take(b), take(e), take(phi)

@@ -1,0 +1,400 @@
+"""The rebuilt Algorithm 1 solver: Newton bandwidth best-response vs the
+GSS oracle, warm-started early-exit dual ascent, the fused Pallas
+dual_solve kernel (interpret mode), de-staticized scalars (no retrace on
+float changes), and config-vmapped sweeps."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ChannelConfig, FairEnergyConfig
+from repro.core.channel import comm_energy
+from repro.core.fairenergy import (FEParams, init_state, make_params,
+                                   solve_round, static_of)
+from repro.core.gss import golden_section_minimize
+from repro.kernels.dual_solve import ops as ds_ops
+from repro.kernels.dual_solve import ref as ds_ref
+
+N0 = ChannelConfig().noise_density
+S_BITS, I_BITS = 6.4e7, 2e6
+# the properties must hold at the PRODUCTION iteration count, not a
+# cherry-picked deeper one
+NEWTON_ITERS = FairEnergyConfig().newton_iters
+
+
+# ---------------------------------------------- newton best-response ----
+def _phi(b_frac, P, h, gamma, lam, b_tot):
+    return comm_energy(gamma, b_frac * b_tot, P, h, S_BITS, I_BITS, N0) \
+        + lam * b_frac
+
+
+def _draws(m, seed=0):
+    rng = np.random.default_rng(seed)
+    return dict(
+        P=jnp.asarray(rng.uniform(1e-4, 3e-4, m), jnp.float32),
+        h=jnp.asarray(1e-3 * rng.uniform(50, 500, m) ** -3.0 *
+                      rng.exponential(1.0, m), jnp.float32),
+        gamma=jnp.asarray(rng.uniform(0.1, 1.0, m), jnp.float32),
+        lam=jnp.asarray(10.0 ** rng.uniform(-8, 1, m), jnp.float32),
+        b_tot=jnp.asarray(10.0 ** rng.uniform(6, 7.5, m), jnp.float32))
+
+
+def test_newton_never_loses_to_gss():
+    """phi at the Newton b* must never exceed phi at the GSS b* beyond
+    fp32 noise — the analytic stationary point IS the minimum (phi is
+    unimodal), GSS is the 60-iteration blind-search oracle."""
+    d = _draws(4096)
+    b_lo = jnp.float32(2e-4)
+    b_n = ds_ref.bandwidth_best_response(
+        d["lam"], d["P"], d["h"], d["gamma"], b_tot=d["b_tot"],
+        s_bits=S_BITS, i_bits=I_BITS, n0=N0, b_lo=b_lo, iters=NEWTON_ITERS)
+    phi = lambda b: _phi(b, d["P"], d["h"], d["gamma"], d["lam"], d["b_tot"])
+    b_g, phi_g = golden_section_minimize(phi, jnp.full_like(b_n, b_lo), 1.0,
+                                         iters=60)
+    excess = np.asarray((phi(b_n) - phi_g) / jnp.abs(phi_g))
+    assert excess.max() < 1e-5, excess.max()
+    assert (np.asarray(b_n) >= 2e-4 - 1e-9).all()
+    assert (np.asarray(b_n) <= 1.0).all()
+
+
+def test_newton_matches_gss_argmin_where_interior():
+    """Where the stationary point is strictly interior, Newton's b* and
+    GSS's b* bracket the same (flat) minimum: phi values agree to fp32."""
+    d = _draws(2048, seed=1)
+    b_lo = jnp.float32(2e-4)
+    b_n = ds_ref.bandwidth_best_response(
+        d["lam"], d["P"], d["h"], d["gamma"], b_tot=d["b_tot"],
+        s_bits=S_BITS, i_bits=I_BITS, n0=N0, b_lo=b_lo, iters=NEWTON_ITERS)
+    phi = lambda b: _phi(b, d["P"], d["h"], d["gamma"], d["lam"], d["b_tot"])
+    b_g, phi_g = golden_section_minimize(phi, jnp.full_like(b_n, b_lo), 1.0,
+                                         iters=60)
+    interior = (np.asarray(b_n) > 2e-4 * 1.5) & (np.asarray(b_n) < 0.98)
+    rel = np.abs(np.asarray(phi(b_n) - phi_g))[interior] \
+        / np.abs(np.asarray(phi_g))[interior]
+    assert rel.max() < 1e-5
+
+
+def test_lam_zero_takes_full_band():
+    """lam <= 0 degenerates to b* = 1 (energy strictly decreasing in B)
+    without NaNs — the log-space guard, not a special case."""
+    b = ds_ref.bandwidth_best_response(
+        jnp.zeros((3,)), jnp.full((3,), 2e-4), jnp.full((3,), 1e-9),
+        jnp.full((3,), 0.5), b_tot=jnp.float32(1e7), s_bits=S_BITS,
+        i_bits=I_BITS, n0=N0, b_lo=jnp.float32(1e-4), iters=NEWTON_ITERS)
+    np.testing.assert_array_equal(np.asarray(b), 1.0)
+
+
+try:
+    import hypothesis  # noqa: F401
+    _HYP = True
+except ImportError:
+    _HYP = False
+
+if _HYP:
+    from hypothesis import given, settings, strategies as st
+
+    @given(P=st.floats(1e-5, 1e-3), hexp=st.floats(-14, -8),
+           gamma=st.floats(0.1, 1.0), lamexp=st.floats(-8, 1),
+           btotexp=st.floats(6, 7.5))
+    @settings(max_examples=50, deadline=None)
+    def test_newton_bstar_property(P, hexp, gamma, lamexp, btotexp):
+        """Random (P, h, gamma, lam, B_tot): Newton's phi(b*) is within
+        tolerance of the GSS oracle's minimum."""
+        h, lam, b_tot = 10.0 ** hexp, 10.0 ** lamexp, 10.0 ** btotexp
+        b_lo = jnp.float32(max(2e-4, 1.5 / b_tot))
+        b_n = ds_ref.bandwidth_best_response(
+            jnp.float32(lam), jnp.float32(P), jnp.float32(h),
+            jnp.float32(gamma), b_tot=jnp.float32(b_tot), s_bits=S_BITS,
+            i_bits=I_BITS, n0=N0, b_lo=b_lo, iters=NEWTON_ITERS)
+        phi = lambda b: _phi(b, jnp.float32(P), jnp.float32(h),
+                             jnp.float32(gamma), jnp.float32(lam),
+                             jnp.float32(b_tot))
+        _, phi_g = golden_section_minimize(phi, b_lo, 1.0, iters=60)
+        assert float(phi(b_n)) <= float(phi_g) * (1 + 1e-5) + 1e-12
+
+
+# ------------------------------------------------ pallas kernel (interpret) ----
+GRID = FairEnergyConfig().gamma_grid
+
+
+def _kernel_inputs(n, seed=0):
+    rng = np.random.default_rng(seed)
+    P = jnp.asarray(rng.uniform(1e-4, 3e-4, n), jnp.float32)
+    h = jnp.asarray(1e-3 * rng.uniform(50, 500, n) ** -3.0 *
+                    rng.exponential(1.0, n), jnp.float32)
+    u = jnp.asarray(rng.uniform(0.1, 5.0, n), jnp.float32)
+    return P, h, u
+
+
+@pytest.mark.parametrize("n", [8, 128, 200, 513])
+@pytest.mark.parametrize("lam", [0.0, 1e-4, 3e-3])
+def test_dual_solve_kernel_matches_ref(n, lam):
+    """Pallas dual_solve (interpret mode, padded client axis) vs the jnp
+    oracle: same gamma choice, same b/e/phi to fp32."""
+    P, h, u = _kernel_inputs(n)
+    kw = dict(gamma_grid=GRID, eta=jnp.float32(1e-3), b_tot=jnp.float32(1e7),
+              s_bits=jnp.float32(S_BITS), i_bits=jnp.float32(I_BITS),
+              n0=jnp.float32(N0), b_lo=jnp.float32(1e-4), newton_iters=NEWTON_ITERS)
+    want = ds_ref.dual_solve_ref(P, h, u, jnp.float32(lam), **kw)
+    got = ds_ops.dual_solve(P, h, u, jnp.float32(lam), **kw)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]),
+                                  err_msg="gamma*")
+    for g, w, name in zip(got[1:], want[1:], ("b*", "e*", "phi*")):
+        # phi crosses zero (benefit threshold), so pair rtol with a tiny
+        # atol — observed kernel-vs-ref spread is O(1e-10) absolute
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-5,
+                                   atol=1e-8, err_msg=name)
+
+
+def test_solver_paths_agree_on_decisions():
+    """solve_round with the jnp Newton path, the Pallas kernel path, and
+    the GSS oracle path all pick identical selection masks and gammas
+    over warm-started rounds."""
+    rng = np.random.default_rng(3)
+    n = 24
+    u = jnp.asarray(rng.uniform(0.5, 5.0, n), jnp.float32)
+    h = jnp.asarray(1e-3 * rng.uniform(50, 500, n) ** -3.0 *
+                    rng.exponential(1.0, n), jnp.float32)
+    P = jnp.asarray(rng.uniform(1e-4, 3e-4, n), jnp.float32)
+    trajs = {}
+    for name, kw in [("newton", {}), ("pallas", dict(use_pallas_solver=True)),
+                     ("gss", dict(bw_solver="gss", dual_tol=0.0))]:
+        fe = FairEnergyConfig(eta=1e-3, eta_auto=False, **kw)
+        st = init_state(fe, n)
+        outs = []
+        for _ in range(4):
+            dec, st = solve_round(u, h, P, st, fe_cfg=fe, s_bits=S_BITS,
+                                  i_bits=I_BITS, b_tot=10e6, n0=N0)
+            outs.append(dec)
+        trajs[name] = outs
+    for r in range(4):
+        ref = trajs["newton"][r]
+        for other in ("pallas", "gss"):
+            np.testing.assert_array_equal(
+                np.asarray(ref.x), np.asarray(trajs[other][r].x),
+                err_msg=f"{other} round {r}")
+            np.testing.assert_array_equal(
+                np.asarray(ref.gamma), np.asarray(trajs[other][r].gamma),
+                err_msg=f"{other} round {r}")
+
+
+# ------------------------------------------- pinned trajectory equivalence ----
+def test_newton_solver_reproduces_gss_masks_on_pinned_trajectory():
+    """The new default solver (Newton best-response + early-exit duals)
+    reproduces the legacy GSS solver's selection masks on the pinned
+    12-round fairenergy trajectory of tests/test_scan_engine.py."""
+    from test_scan_engine import ROUNDS, make_trainer
+
+    tr_new = make_trainer("fairenergy")              # newton + dual_tol
+    tr_new.run_scanned(ROUNDS, verbose=False)
+    tr_old = make_trainer(
+        "fairenergy",
+        fe_cfg=FairEnergyConfig(bw_solver="gss", dual_tol=0.0))
+    tr_old.run_scanned(ROUNDS, verbose=False)
+    assert len(tr_new.history) == len(tr_old.history) == ROUNDS
+    for a, b in zip(tr_new.history, tr_old.history):
+        np.testing.assert_array_equal(a.selected, b.selected,
+                                      err_msg=f"round {a.round}")
+        np.testing.assert_array_equal(a.gamma, b.gamma,
+                                      err_msg=f"round {a.round}")
+        # bandwidths come from two different minimizers of a flat
+        # objective; energies inherit that spread
+        np.testing.assert_allclose(a.bandwidth, b.bandwidth, rtol=2e-3)
+
+
+# ------------------------------------------------- early-exit dual ascent ----
+def _warm_start_fixture():
+    n = 4
+    u = jnp.asarray([5.0, 4.0, 0.01, 0.01], jnp.float32)
+    h = jnp.asarray([1e-9, 1e-9, 1e-12, 1e-12], jnp.float32)
+    P = jnp.full((n,), 2e-4, jnp.float32)
+    fe = FairEnergyConfig(eta=1e-3, eta_auto=False, pi_min=0.0)
+    return fe, u, h, P, n
+
+
+def test_warm_started_rounds_use_fewer_inner_iterations():
+    """Round 0 ramps lam from zero (many dual iterations); warm-started
+    rounds inherit near-converged duals and exit in a handful —
+    n_inner must report the actual count, not the cap."""
+    fe, u, h, P, n = _warm_start_fixture()
+    st = init_state(fe, n)
+    n_inner = []
+    for _ in range(5):
+        dec, st = solve_round(u, h, P, st, fe_cfg=fe, s_bits=S_BITS,
+                              i_bits=I_BITS, b_tot=10e6, n0=N0)
+        n_inner.append(int(dec.n_inner))
+    assert n_inner[0] == fe.inner_iters                  # cold start: full ramp
+    assert all(ni < n_inner[0] for ni in n_inner[1:]), n_inner
+    assert all(ni <= 5 for ni in n_inner[2:]), n_inner   # converged: ~1 iter
+    assert float(dec.bw_used) <= 10e6 * (1 + 1e-6)
+
+
+def test_dual_tol_zero_runs_to_cap_when_duals_move():
+    """dual_tol=0 disables the residual exit: while duals keep moving the
+    loop runs the full cap (the legacy fixed-iteration behavior)."""
+    fe, u, h, P, n = _warm_start_fixture()
+    fe0 = dataclasses.replace(fe, dual_tol=0.0)
+    dec, _ = solve_round(u, h, P, init_state(fe0, n), fe_cfg=fe0,
+                         s_bits=S_BITS, i_bits=I_BITS, b_tot=10e6, n0=N0)
+    assert int(dec.n_inner) == fe0.inner_iters
+
+
+# ------------------------------------------------- no-retrace on scalars ----
+def test_float_config_changes_do_not_retrace():
+    """The tentpole de-staticization: every float knob (eta, rho, B_tot,
+    payload, noise) is a traced operand — one trace serves all configs.
+    Only structural changes (grid, iteration caps, solver) retrace."""
+    from repro.core.fairenergy import _solve_round
+
+    rng = np.random.default_rng(0)
+    n = 6
+    u = jnp.asarray(rng.uniform(0.5, 5.0, n), jnp.float32)
+    h = jnp.asarray(np.full(n, 1e-9), jnp.float32)
+    P = jnp.full((n,), 2e-4, jnp.float32)
+    base = _solve_round._cache_size()
+    variants = [
+        FairEnergyConfig(eta=1e-3, eta_auto=False),
+        FairEnergyConfig(eta=5e-4, eta_auto=False),          # eta change
+        FairEnergyConfig(eta=1e-3, eta_auto=False, rho=0.8), # rho change
+        FairEnergyConfig(eta=1e-3, eta_auto=False, alpha_mu=2e-2),
+    ]
+    b_tots = [10e6, 20e6, 10e6, 15e6]
+    for fe, b_tot in zip(variants, b_tots):
+        solve_round(u, h, P, init_state(fe, n), fe_cfg=fe, s_bits=S_BITS,
+                    i_bits=I_BITS, b_tot=b_tot, n0=N0)
+    assert _solve_round._cache_size() - base == 1, \
+        "float config changes must not retrace the solver"
+    # structural change: a shorter grid MUST retrace
+    fe_grid = FairEnergyConfig(eta=1e-3, eta_auto=False,
+                               gamma_grid=(0.25, 0.5, 1.0))
+    solve_round(u, h, P, init_state(fe_grid, n), fe_cfg=fe_grid,
+                s_bits=S_BITS, i_bits=I_BITS, b_tot=10e6, n0=N0)
+    assert _solve_round._cache_size() - base == 2
+
+
+# ------------------------------------------------- config-vmapped sweeps ----
+def test_run_sweep_config_lanes():
+    """seeds x configs in one jitted program: lanes vary (eta, rho,
+    B_tot) through the stacked controller states. Lane 0 replays the
+    plain seed sweep; a config that changes selection pressure changes
+    the trajectory."""
+    from test_scan_engine import make_trainer
+
+    fe = FairEnergyConfig(eta=2e-3, eta_auto=False)
+    tr = make_trainer("fairenergy", fe_cfg=fe)
+    cfgs = {"eta": [2e-3, 2e-3, 1e-5], "b_tot": [10e6, 3e6, 10e6]}
+    outs = tr.run_sweep([0, 1], rounds=4, configs=cfgs)
+    assert outs["x"].shape == (3, 2, 4, 8)
+    assert outs["accuracy"].shape == (3, 2, 4)
+    assert outs["configs"]["eta"] == pytest.approx([2e-3, 2e-3, 1e-5],
+                                                   rel=1e-6)
+    # lane 0 == the plain (no-configs) sweep, lane by lane
+    plain = make_trainer("fairenergy", fe_cfg=fe).run_sweep([0, 1], rounds=4)
+    np.testing.assert_array_equal(outs["x"][0], plain["x"])
+    np.testing.assert_allclose(outs["accuracy"][0], plain["accuracy"],
+                               rtol=1e-6)
+    # a 3x smaller band must shrink total allocated bandwidth
+    assert outs["bandwidth"][1].sum(-1).max() <= 3e6 * (1 + 1e-6)
+    # a near-zero score weight changes the selection trajectory
+    assert not np.array_equal(outs["x"][0], outs["x"][2])
+
+
+def test_run_sweep_config_lane_matches_rebuilt_trainer():
+    """Each config lane must equal a from-scratch trainer run with that
+    config baked in — the vmapped lane is not an approximation."""
+    from test_scan_engine import make_trainer
+
+    fe = FairEnergyConfig(eta=2e-3, eta_auto=False)
+    tr = make_trainer("fairenergy", fe_cfg=fe)
+    outs = tr.run_sweep([0], rounds=4, configs={"eta": [7e-4]})
+    fe_lane = FairEnergyConfig(eta=7e-4, eta_auto=False)
+    want = make_trainer("fairenergy", fe_cfg=fe_lane).run_sweep([0], rounds=4)
+    np.testing.assert_array_equal(outs["x"][0], want["x"])
+    np.testing.assert_allclose(outs["energy"][0], want["energy"], rtol=1e-5,
+                               atol=0)
+
+
+def test_config_sweep_scalar_broadcast_echoes_per_lane():
+    """A length-1 config value broadcasts across lanes AND the echoed
+    "configs" metadata comes back post-broadcast — one entry per lane,
+    so per-lane consumers can index it safely."""
+    from test_scan_engine import make_trainer
+
+    tr = make_trainer("fairenergy",
+                      fe_cfg=FairEnergyConfig(eta=2e-3, eta_auto=False))
+    outs = tr.run_sweep([0], rounds=2,
+                        configs={"eta": [2e-3, 5e-4], "b_tot": [10e6]})
+    assert outs["x"].shape[0] == 2
+    assert outs["configs"]["b_tot"] == pytest.approx([10e6, 10e6])
+    assert len(outs["configs"]["eta"]) == 2
+
+
+def test_config_sweep_sharded_matches_unsharded():
+    """The mesh path runs (config, seed) lanes sequentially through the
+    shard_map engine — same numbers as the vmapped single-device path."""
+    from test_scan_engine import make_trainer
+
+    from repro.sharding import make_clients_mesh
+
+    fe = FairEnergyConfig(eta=2e-3, eta_auto=False)
+    cfgs = {"eta": [2e-3, 5e-4]}
+    outs = make_trainer("fairenergy", fe_cfg=fe).run_sweep(
+        [0, 3], rounds=3, configs=cfgs)
+    outs_sh = make_trainer("fairenergy", fe_cfg=fe,
+                           mesh=make_clients_mesh(1)).run_sweep(
+        [0, 3], rounds=3, configs=cfgs)
+    assert outs_sh["x"].shape == outs["x"].shape == (2, 2, 3, 8)
+    np.testing.assert_array_equal(outs_sh["x"], outs["x"])
+    np.testing.assert_allclose(outs_sh["energy"], outs["energy"], rtol=1e-5)
+
+
+def test_config_sweep_rejects_bad_lanes():
+    from test_scan_engine import make_trainer
+
+    tr = make_trainer("fairenergy",
+                      fe_cfg=FairEnergyConfig(eta=1e-3, eta_auto=False))
+    with pytest.raises(KeyError, match="unknown FEParams"):
+        tr.run_sweep([0], rounds=2, configs={"not_a_knob": [1.0]})
+    with pytest.raises(ValueError, match="1 Hz"):
+        tr.run_sweep([0], rounds=2, configs={"b_tot": [1e3]})
+    tr2 = make_trainer("scoremax", fixed_k=3)
+    with pytest.raises(ValueError, match="FEParams"):
+        tr2.run_sweep([0], rounds=2, configs={"eta": [1e-3]})
+
+
+# --------------------------------------------------------- state carrying ----
+def test_solve_round_requires_all_or_no_scalars():
+    fe = FairEnergyConfig(eta=1e-3, eta_auto=False)
+    st = init_state(fe, 4)
+    u = jnp.ones((4,)); h = jnp.full((4,), 1e-9); P = jnp.full((4,), 2e-4)
+    with pytest.raises(TypeError, match="all of"):
+        solve_round(u, h, P, st, fe_cfg=fe, b_tot=10e6)
+
+
+def test_state_carried_params_match_explicit_scalars():
+    """init_state(channel scalars) + scalar-less solve_round == the
+    legacy explicit-scalar call, bit for bit."""
+    fe = FairEnergyConfig(eta=1e-3, eta_auto=False)
+    rng = np.random.default_rng(5)
+    n = 12
+    u = jnp.asarray(rng.uniform(0.5, 5.0, n), jnp.float32)
+    h = jnp.asarray(np.full(n, 1e-9), jnp.float32)
+    P = jnp.full((n,), 2e-4, jnp.float32)
+    st_a = init_state(fe, n, b_tot=10e6, s_bits=S_BITS, i_bits=I_BITS, n0=N0)
+    dec_a, _ = solve_round(u, h, P, st_a, fe_cfg=fe)
+    dec_b, _ = solve_round(u, h, P, init_state(fe, n), fe_cfg=fe,
+                           s_bits=S_BITS, i_bits=I_BITS, b_tot=10e6, n0=N0)
+    for a, b, field in zip(dec_a, dec_b, dec_a._fields):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=field)
+
+
+def test_make_params_covers_fe_floats():
+    p = make_params(FairEnergyConfig(), b_tot=1e7, s_bits=S_BITS,
+                    i_bits=I_BITS, n0=N0)
+    assert isinstance(p, FEParams)
+    assert float(p.b_tot) == 1e7 and float(p.rho) == pytest.approx(0.6)
+    st = static_of(FairEnergyConfig())
+    assert st.solver == "newton" and st.inner_iters == 30

@@ -27,7 +27,7 @@ def _loss_fn(p, batch):
     return -jnp.mean(jnp.take_along_axis(ll, batch["y"][:, None], 1)), {}
 
 
-def make_trainer(controller, seed=0, **kw):
+def make_trainer(controller, seed=0, fe_cfg=None, **kw):
     rng = np.random.default_rng(7)
     params = {"w1": jnp.asarray(rng.normal(size=(D_IN, D_HIDDEN)).astype(np.float32) * 0.1),
               "w2": jnp.asarray(rng.normal(size=(D_HIDDEN, N_CLASSES)).astype(np.float32) * 0.1)}
@@ -45,7 +45,8 @@ def make_trainer(controller, seed=0, **kw):
     return FederatedTrainer(
         model_loss=_loss_fn, model_params=params, client_datasets=datasets,
         eval_fn=eval_fn, fl_cfg=FLConfig(local_steps=2, local_batch=16, lr=0.05),
-        fe_cfg=FairEnergyConfig(), ch_cfg=ChannelConfig(n_clients=N_CLIENTS),
+        fe_cfg=fe_cfg or FairEnergyConfig(),
+        ch_cfg=ChannelConfig(n_clients=N_CLIENTS),
         controller=controller, seed=seed, **kw)
 
 
