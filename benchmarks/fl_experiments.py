@@ -23,18 +23,27 @@ from repro.configs.fmnist_cnn import CONFIG as CNN_FULL
 from repro.data import ClientDataset, dirichlet_partition, make_fmnist_like
 from repro.fl import FederatedTrainer
 from repro.models import cnn
+from repro.scenarios import available_scenarios, get_scenario
 
 DATA_KW = dict(confusion=0.55, label_noise=0.05, noise=0.9)
 
 
 def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
-          lr=0.05, local_steps=2, mesh=None):
+          lr=0.05, local_steps=2, mesh=None, scenario=None):
     cfg = CNN_FULL
+    scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    beta = scn.beta(0.3) if scn else 0.3
+    ch_cfg = ChannelConfig(n_clients=n_clients)
+    profile = None
+    if scn:
+        ch_cfg = scn.apply_channel(ch_cfg)
+        profile = scn.device_profile(n_clients, seed=seed)
     imgs, labels = make_fmnist_like(n_train, seed=seed, **DATA_KW)
     ti, tl = make_fmnist_like(n_test, seed=seed + 999,
                               **dict(DATA_KW, label_noise=0.0))
-    parts = dirichlet_partition(labels, n_clients, 0.3, seed=seed)
-    fl_cfg = FLConfig(rounds=rounds, local_batch=64, local_steps=local_steps, lr=lr)
+    parts = dirichlet_partition(labels, n_clients, beta, seed=seed)
+    fl_cfg = FLConfig(rounds=rounds, local_batch=64, local_steps=local_steps,
+                      lr=lr, dirichlet_beta=beta)
     datasets = [ClientDataset(imgs[p], labels[p], fl_cfg.local_batch, seed=i)
                 for i, p in enumerate(parts)]
     params = cnn.init_cnn(jax.random.PRNGKey(seed), cfg)
@@ -50,8 +59,8 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
         return FederatedTrainer(model_loss=loss_fn, model_params=params,
                                 client_datasets=datasets, eval_fn=eval_fn,
                                 fl_cfg=fl_cfg, fe_cfg=FairEnergyConfig(),
-                                ch_cfg=ChannelConfig(n_clients=n_clients),
-                                controller=controller, seed=seed, mesh=mesh,
+                                ch_cfg=ch_cfg, controller=controller,
+                                seed=seed, mesh=mesh, device_profile=profile,
                                 **kw)
     return make, fl_cfg
 
@@ -94,8 +103,11 @@ def run_all(n_clients=20, rounds=60, target=0.80, seed=0, verbose=True,
         tr.run_scanned(rounds, eval_every=eval_every, verbose=verbose)
         runs[s] = tr
 
+    scn = build_kw.get("scenario")
     results = {"k": k, "eco_gamma": eco_gamma, "eco_bandwidth": eco_bw,
                "rounds": rounds, "n_clients": n_clients,
+               "scenario": (scn if isinstance(scn, str) or scn is None
+                            else scn.name),
                "elapsed_s": round(time.time() - t0, 1), "strategies": {}}
     for name, tr in runs.items():
         part = tr.participation_counts()
@@ -178,8 +190,9 @@ def main(out="experiments/fl_results.json", **kw):
 
 
 def summarize(res):
+    scn = res.get("scenario")
     print(f"\n=== FL results (N={res['n_clients']}, {res['rounds']} rounds, "
-          f"K={res['k']}) ===")
+          f"K={res['k']}{', scenario=' + scn if scn else ''}) ===")
     print(f"{'strategy':14s}{'final_acc':>10s}{'E/round mJ':>12s}"
           f"{'E->80% J':>12s}{'part min/max/std':>20s}")
     for name, s in res["strategies"].items():
@@ -237,6 +250,10 @@ if __name__ == "__main__":
                     help="comma-separated rho values (see --sweep-eta)")
     ap.add_argument("--sweep-btot", default=None,
                     help="comma-separated B_tot values in Hz (see --sweep-eta)")
+    ap.add_argument("--scenario", default=None,
+                    choices=available_scenarios(),
+                    help="named scenario preset (repro.scenarios): device "
+                         "fleet + batteries + data skew + channel knobs")
     ap.add_argument("--shard-clients", action="store_true",
                     help="run the fused engine sharded over a `clients` "
                          "mesh spanning all visible devices (force multiple "
@@ -263,7 +280,7 @@ if __name__ == "__main__":
                         for i, k in enumerate(keys)}
         print(f"config sweep: {len(lanes)} lanes over {keys}")
     kw = dict(out=a.out, extra_baselines=a.extra_baselines,
-              eval_every=a.eval_every, mesh=mesh,
+              eval_every=a.eval_every, mesh=mesh, scenario=a.scenario,
               sweep_seeds=list(range(a.seeds)) if a.seeds else None,
               config_sweep=config_sweep)
     if a.paper:

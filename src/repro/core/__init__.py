@@ -1,5 +1,8 @@
 """FairEnergy core: the paper's contribution."""
-from . import channel, controllers, fairness, gss  # noqa: F401
+from . import channel, controllers, energy, fairness, gss  # noqa: F401
+from .energy import (DeviceProfile, comp_energy, comp_time,  # noqa: F401
+                     make_profile, tiered_profile, uniform_profile,
+                     with_batteries)
 from .controllers import (ControllerContext, RoundObservation,  # noqa: F401
                           available_controllers, make_controller,
                           register_controller)

@@ -103,9 +103,17 @@ class WirelessNetwork:
     resuming a round reproduces its channels exactly (the old host-side
     ``np.random.Generator`` made gains depend on call *order*). The same
     ``fade_key``/``pathloss`` feed the traced in-jit draw used by the
-    fused scan engine (``repro.fl.server``)."""
+    fused scan engine (``repro.fl.server``).
 
-    def __init__(self, cfg, seed: int = 0):
+    ``device_profile`` attaches a heterogeneous compute model
+    (``repro.core.energy.DeviceProfile``, or a kind string like
+    "tiered" built via ``make_profile``) WITHOUT touching the channel
+    randomness: profile constructors use their own rng streams, and this
+    constructor draws power/distance *before* resolving the profile — so
+    ``gains(r)``, ``power`` and ``pathloss`` are identical with or
+    without a profile (pinned by tests/test_energy.py)."""
+
+    def __init__(self, cfg, seed: int = 0, device_profile=None):
         rng = np.random.default_rng(seed)
         self.cfg = cfg
         n = cfg.n_clients
@@ -114,6 +122,13 @@ class WirelessNetwork:
         self.pathloss = REF_GAIN_1M * self.distance ** (-cfg.pathloss_exp)
         self.fade_key = jax.random.PRNGKey(seed)
         self._pathloss_j = jnp.asarray(self.pathloss, jnp.float32)
+        if isinstance(device_profile, str):
+            from .energy import make_profile
+            device_profile = make_profile(device_profile, n, seed=seed)
+        if device_profile is not None and device_profile.n_clients != n:
+            raise ValueError(f"device profile has {device_profile.n_clients} "
+                             f"clients, network has {n}")
+        self.device_profile = device_profile
 
     def gains(self, round_idx: int = 0) -> np.ndarray:
         """h_i^r — pathloss x Rayleigh fading (exponential power), pure in

@@ -44,6 +44,9 @@ class RoundObservation(NamedTuple):
     P: Array          # [N] — transmit powers P_i
     round: Array      # scalar int32 — round index r
     key: Array        # PRNG key for this round (stochastic controllers)
+    alive: Any = None  # [N] bool — battery not depleted (None = all alive).
+    #                    Controllers SHOULD avoid selecting dead clients;
+    #                    the round engine hard-masks them regardless.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,7 +55,11 @@ class ControllerContext:
 
     ``fe_cfg`` is the FairEnergy hyper-parameter dataclass (also supplies
     gamma bounds for baselines); ``fixed_k``/``eco_gamma``/``eco_bandwidth``
-    parameterize the paper's fixed-K baselines.
+    parameterize the paper's fixed-K baselines. ``e_cmp`` is the
+    per-client per-round computation energy (a length-N tuple of floats
+    so the frozen dataclass stays hashable; ``repro.core.energy``
+    computes it from a ``DeviceProfile``) — None means the legacy
+    communication-only energy model.
     """
     n_clients: int
     b_tot: float                       # total uplink bandwidth B_tot (Hz)
@@ -63,6 +70,7 @@ class ControllerContext:
     fixed_k: Optional[int] = None
     eco_gamma: float = 0.1
     eco_bandwidth: Optional[float] = None
+    e_cmp: Optional[tuple] = None      # [N] J/round computation energy
 
     def __post_init__(self):
         # shannon_rate clamps bandwidth to a 1 Hz floor (repro.core.channel)
@@ -76,6 +84,21 @@ class ControllerContext:
                     f"b_min_frac * b_tot = {b_min * self.b_tot:.3g} Hz is "
                     f"below the 1 Hz rate floor of shannon_rate; raise "
                     f"b_min_frac (>= {1.0 / self.b_tot:.3g}) or b_tot")
+        if self.e_cmp is not None:
+            # normalize to a tuple (frozen-dataclass hashability) and pin
+            # the length so a profile/client-count mismatch fails loudly
+            object.__setattr__(self, "e_cmp", tuple(float(v)
+                                                    for v in self.e_cmp))
+            if len(self.e_cmp) != self.n_clients:
+                raise ValueError(
+                    f"e_cmp has {len(self.e_cmp)} entries for "
+                    f"{self.n_clients} clients")
+
+    def e_cmp_array(self) -> Array:
+        """[N] f32 computation energy (zeros when no device profile)."""
+        if self.e_cmp is None:
+            return jnp.zeros((self.n_clients,), jnp.float32)
+        return jnp.asarray(self.e_cmp, jnp.float32)
 
     @property
     def k(self) -> int:
@@ -152,11 +175,13 @@ def topk_mask(scores: Array, k: int) -> Array:
 def masked_decision(x: Array, gamma: Array, bandwidth: Array,
                     obs: RoundObservation, ctx: ControllerContext) -> RoundDecision:
     """Assemble a ``RoundDecision`` from raw (x, gamma, B) arrays: charges
-    E_i = P_i (gamma_i S + I)/R_i(B_i) on selected clients, zeroes
+    E_i = P_i (gamma_i S + I)/R_i(B_i) + E_cmp,i on selected clients
+    (the computation term is zero without a device profile), zeroes
     gamma/B/E elsewhere."""
     xf = x.astype(jnp.float32)
-    energy = xf * comm_energy(jnp.asarray(gamma), jnp.asarray(bandwidth),
-                              obs.P, obs.h, ctx.s_bits, ctx.i_bits, ctx.n0)
+    energy = xf * (comm_energy(jnp.asarray(gamma), jnp.asarray(bandwidth),
+                               obs.P, obs.h, ctx.s_bits, ctx.i_bits, ctx.n0)
+                   + ctx.e_cmp_array())
     return RoundDecision(x=x, gamma=jnp.asarray(gamma) * xf,
                          bandwidth=jnp.asarray(bandwidth) * xf, energy=energy,
                          lam=jnp.float32(0), mu=jnp.zeros_like(xf),

@@ -34,17 +34,28 @@ class _StatelessController:
     def init(self, n_clients: int):
         return ()
 
+    @staticmethod
+    def _demote_dead(scores, obs: RoundObservation):
+        """Push battery-depleted clients below every live one in a top-K
+        ranking (obs.alive is None outside battery scenarios — identity).
+        If fewer than K clients are alive the ranking can still reach
+        dead ones; the round engine's hard mask drops those."""
+        if obs.alive is None:
+            return scores
+        return jnp.where(obs.alive, scores, -jnp.inf)
+
     def _random_k_mask(self, obs: RoundObservation):
-        """Uniform random K-subset: mask the K smallest of N iid uniforms."""
+        """Uniform random K-subset (of the alive clients, in battery
+        scenarios): mask the K smallest of N iid uniforms."""
         u = jax.random.uniform(obs.key, (self.ctx.n_clients,))
-        return topk_mask(-u, self.ctx.k)
+        return topk_mask(self._demote_dead(-u, obs), self.ctx.k)
 
 
 @register_controller("scoremax")
 class ScoreMax(_StatelessController):
     def decide(self, obs: RoundObservation, state):
         ctx = self.ctx
-        x = topk_mask(obs.u_norms, ctx.k)
+        x = topk_mask(self._demote_dead(obs.u_norms, obs), ctx.k)
         gamma = jnp.ones_like(obs.u_norms)
         bw = jnp.full_like(obs.u_norms, ctx.b_tot / max(ctx.k, 1))
         return masked_decision(x, gamma, bw, obs, ctx), state
@@ -76,7 +87,7 @@ class ChannelGreedy(_StatelessController):
 
     def decide(self, obs: RoundObservation, state):
         ctx = self.ctx
-        x = topk_mask(obs.h, ctx.k)
+        x = topk_mask(self._demote_dead(obs.h, obs), ctx.k)
         gamma = jnp.ones_like(obs.h)
         bw = jnp.full_like(obs.h, ctx.b_tot / max(ctx.k, 1))
         return masked_decision(x, gamma, bw, obs, ctx), state

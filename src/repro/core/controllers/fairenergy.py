@@ -41,19 +41,24 @@ class FairEnergy:
     def init(self, n_clients: int):
         ctx = self.ctx
         return init_state(self.fe_cfg, n_clients, b_tot=ctx.b_tot,
-                          s_bits=ctx.s_bits, i_bits=ctx.i_bits, n0=ctx.n0)
+                          s_bits=ctx.s_bits, i_bits=ctx.i_bits, n0=ctx.n0,
+                          e_cmp=ctx.e_cmp_array())
 
     @property
     def needs_calibration(self) -> bool:
         return bool(self.fe_cfg.eta_auto)
 
     def calibrate(self, u_norms, h, P) -> None:
-        """eta_auto: make the score benefit commensurate with energy cost —
-        eta := eta_rel * median_i E_i(gamma=.5, B=B_tot/N) / median_i s_i(.5)."""
+        """eta_auto: make the score benefit commensurate with the *total*
+        energy cost — eta := eta_rel * median_i [E_cmm,i(gamma=.5,
+        B=B_tot/N) + E_cmp,i] / median_i s_i(.5). Including the
+        computation term keeps the calibrated eta on the energy scale
+        the solver actually prices when a device profile is active."""
         ctx = self.ctx
         e = np.asarray(comm_energy(
             0.5, ctx.b_tot / ctx.n_clients,
             jnp.asarray(P), jnp.asarray(h), ctx.s_bits, ctx.i_bits, ctx.n0))
+        e = e + np.asarray(ctx.e_cmp_array())
         s = 0.5 * np.asarray(u_norms)
         eta = self.fe_cfg.eta_rel * float(np.median(e)) / max(float(np.median(s)), 1e-12)
         self.fe_cfg = dataclasses.replace(self.fe_cfg, eta=eta, eta_auto=False)
@@ -62,4 +67,4 @@ class FairEnergy:
         # channel scalars and float knobs come from state.params (set by
         # init from the context) — config lanes vmap over the state
         return solve_round(obs.u_norms, obs.h, obs.P, state,
-                           fe_cfg=self.fe_cfg)
+                           fe_cfg=self.fe_cfg, alive=obs.alive)

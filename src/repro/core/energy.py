@@ -1,0 +1,149 @@
+"""Heterogeneous device-energy model: local computation + batteries.
+
+The FairEnergy objective is *total* per-round energy. The wireless model
+(``repro.core.channel``) prices the uplink E_cmm = P * T; this module adds
+the local-computation side of the ledger (Yang et al., arXiv:1911.02417;
+BEFL, arXiv:2412.03950): a device running C cycles/sample at CPU
+frequency f with effective switched capacitance kappa spends
+
+    T_cmp = C * n_samples / f            (seconds)
+    E_cmp = kappa * C * n_samples * f^2  (Joules)
+
+per round, so fast CPUs trade quadratic energy for linear time. E_cmp is
+independent of the compression ratio gamma and the bandwidth allocation,
+so it enters the per-device subproblem of Algorithm 1 as an *additive
+constant*: the bandwidth best-response is unchanged, but the selection
+threshold (and hence the duals) prices comm + comp.
+
+``DeviceProfile`` is the array-of-structs carrying the per-client device
+parameters ([N] arrays: f, kappa, C, battery capacity). Profiles ride on
+``WirelessNetwork`` (exposure only — channel randomness is untouched),
+the per-round E_cmp rides in the FairEnergy ``ControllerState``
+(``e_cmp``), and battery charge threads through the fused scan engine's
+carry (``repro.fl.server``): a depleted client is masked unselectable the
+same way ghost-padded clients are.
+
+All constructors draw from their own ``np.random.default_rng`` streams —
+never from a caller's generator — so composing a profile with a
+``WirelessNetwork`` cannot shift the network's (seed, round)-pure
+power/distance/fading draws.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+# profile randomness stream offsets (kept far apart from each other and
+# from any seed arithmetic the channel model does)
+_TIER_STREAM = 7001
+_BATTERY_STREAM = 7002
+
+#: unlimited battery sentinel — inf survives any finite drain, so the
+#: alive mask (charge > 0) stays all-true and battery-disabled runs are
+#: bit-identical to runs without the battery plumbing.
+UNLIMITED_J = float("inf")
+
+# representative mobile-SoC operating points (Yang et al. Sec. VI use
+# kappa = 1e-28, f in [0.1, 2] GHz, C in [1e4, 1e6] cycles/sample)
+DEFAULT_FREQ_HZ = 1.0e9
+DEFAULT_KAPPA = 1.0e-28
+DEFAULT_CYCLES = 1.0e5
+
+#: (name, f Hz, kappa, cycles/sample) — low/mid/high CPU tiers. Energy
+#: scales with kappa f^2 => a 16x comp-energy spread across tiers.
+DEFAULT_TIERS: Tuple[Tuple[str, float, float, float], ...] = (
+    ("low", 0.5e9, DEFAULT_KAPPA, DEFAULT_CYCLES),
+    ("mid", 1.0e9, DEFAULT_KAPPA, DEFAULT_CYCLES),
+    ("high", 2.0e9, DEFAULT_KAPPA, DEFAULT_CYCLES),
+)
+
+
+class DeviceProfile(NamedTuple):
+    """Per-client device parameters, array-of-structs ([N] f32 each)."""
+    freq: Array      # CPU frequency f_i (cycles/s)
+    kappa: Array     # effective switched capacitance kappa_i
+    cycles: Array    # CPU cycles per training sample C_i
+    battery: Array   # battery capacity (J); inf = unlimited
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.freq.shape[0])
+
+
+def comp_time(profile: DeviceProfile, n_samples) -> Array:
+    """[N] seconds: T_cmp = C * n_samples / f."""
+    return profile.cycles * n_samples / profile.freq
+
+
+def comp_energy(profile: DeviceProfile, n_samples) -> Array:
+    """[N] Joules: E_cmp = kappa * C * n_samples * f^2 (per round)."""
+    return profile.kappa * profile.cycles * n_samples * profile.freq ** 2
+
+
+def uniform_profile(n: int, *, freq_hz: float = DEFAULT_FREQ_HZ,
+                    kappa: float = DEFAULT_KAPPA,
+                    cycles: float = DEFAULT_CYCLES,
+                    battery_j: float = UNLIMITED_J) -> DeviceProfile:
+    """Homogeneous fleet: every device at the same operating point."""
+    full = lambda v: jnp.full((n,), v, jnp.float32)
+    return DeviceProfile(freq=full(freq_hz), kappa=full(kappa),
+                         cycles=full(cycles), battery=full(battery_j))
+
+
+def tiered_profile(n: int, *, seed: int = 0,
+                   tiers: Sequence[Tuple[str, float, float, float]] = DEFAULT_TIERS,
+                   battery_j: float = UNLIMITED_J) -> DeviceProfile:
+    """Heterogeneous fleet: each client drawn uniformly into a CPU tier.
+
+    The tier assignment is a pure function of ``seed`` via a private rng
+    stream — building a tiered profile next to a ``WirelessNetwork`` with
+    the same seed does not perturb the network's draws."""
+    rng = np.random.default_rng(seed + _TIER_STREAM)
+    idx = rng.integers(0, len(tiers), n)
+    pick = lambda col: jnp.asarray([tiers[i][col] for i in idx], jnp.float32)
+    return DeviceProfile(freq=pick(1), kappa=pick(2), cycles=pick(3),
+                         battery=jnp.full((n,), battery_j, jnp.float32))
+
+
+def with_batteries(profile: DeviceProfile, capacity_j, *,
+                   seed: int = 0) -> DeviceProfile:
+    """Finite batteries: scalar capacity, an [N] array/list (per-client
+    capacities), or a (lo, hi) *tuple* drawn uniformly per client (own
+    rng stream, pure in seed). Only tuples are ranges — pass per-client
+    capacities as a list/array to avoid the ambiguity at N = 2."""
+    if isinstance(capacity_j, tuple) and len(capacity_j) == 2:
+        lo, hi = capacity_j
+        if not lo <= hi:
+            raise ValueError(f"battery range lo <= hi required, got "
+                             f"({lo}, {hi})")
+        rng = np.random.default_rng(seed + _BATTERY_STREAM)
+        cap = rng.uniform(lo, hi, profile.n_clients)
+    else:
+        cap = np.broadcast_to(np.asarray(capacity_j, np.float32),
+                              (profile.n_clients,))
+    return profile._replace(battery=jnp.asarray(cap, jnp.float32))
+
+
+def make_profile(kind: Optional[str], n: int, *, seed: int = 0,
+                 battery_j: float = UNLIMITED_J) -> Optional[DeviceProfile]:
+    """String-keyed constructor (``WirelessNetwork(device_profile="tiered")``
+    convenience): "uniform" | "tiered" | None."""
+    if kind is None or kind == "none":
+        return None
+    if kind == "uniform":
+        return uniform_profile(n, battery_j=battery_j)
+    if kind == "tiered":
+        return tiered_profile(n, seed=seed, battery_j=battery_j)
+    raise ValueError(f"unknown device profile kind {kind!r}; "
+                     "expected 'uniform', 'tiered', or None")
+
+
+def alive_mask(battery: Array) -> Array:
+    """[N] bool: clients with charge left. inf (unlimited) is always
+    alive; a client whose charge reaches <= 0 is depleted and must not be
+    selected (the engine masks it like a ghost client)."""
+    return battery > 0.0

@@ -6,6 +6,15 @@ Lagrangian relaxation:
   min  sum_i x_i (E_i(gamma_i, B_i) - eta s_i(gamma_i))
   s.t. sum_i x_i B_i <= B_tot,  gamma in [gamma_min, 1],  q_i >= pi_min
 
+E_i is the *total* per-round energy E_cmm(gamma_i, B_i) + E_cmp,i: the
+heterogeneous-device computation term (``repro.core.energy``) rides as
+the [N] ``ControllerState.e_cmp`` (zeros reproduce the legacy
+communication-only objective bit-for-bit). E_cmp is independent of
+(gamma, B), so it shifts the selection threshold and the duals but
+leaves the bandwidth best-response untouched. Battery-depleted clients
+arrive as ``alive=False`` lanes and are hard-masked out of selection
+(their fairness duals are waived — see ``solve_round``).
+
 * dualize bandwidth (lambda) and fairness (mu_i); the partial Lagrangian
   separates per device (Sec. V-A);
 * affine in x => threshold rule
@@ -55,7 +64,7 @@ class RoundDecision(NamedTuple):
     x: Array          # [N] bool — selected
     gamma: Array      # [N] — sparsity ratio (valid where selected)
     bandwidth: Array  # [N] Hz — allocated bandwidth (0 where unselected)
-    energy: Array     # [N] J — communication energy (0 where unselected)
+    energy: Array     # [N] J — total (comm + comp) energy (0 where unselected)
     lam: Array        # scalar dual (normalized-bandwidth price)
     mu: Array         # [N] fairness duals
     n_inner: Array    # inner dual-ascent iterations actually run
@@ -97,6 +106,8 @@ class ControllerState(NamedTuple):
     mu: Array
     q: Array             # EMA participation metric
     params: FEParams     # traced config (constant within a run)
+    e_cmp: Array         # [N] per-round computation energy (J); zeros =
+                         # the legacy communication-only objective
 
 
 def make_params(cfg, *, b_tot: float, s_bits: float, i_bits: float,
@@ -125,7 +136,7 @@ def static_of(cfg) -> FEStatic:
 
 def init_state(cfg, n_clients: int, *, b_tot: float = None,
                s_bits: float = None, i_bits: float = None,
-               n0: float = None) -> ControllerState:
+               n0: float = None, e_cmp=None) -> ControllerState:
     """Fresh duals + participation EMA, with the traced config embedded.
 
     Channel scalars default to NaN sentinels for legacy callers that
@@ -133,8 +144,16 @@ def init_state(cfg, n_clients: int, *, b_tot: float = None,
     ``state.params``); callers composing ``solve_round`` without explicit
     scalars — the controller API path — must supply them here. The NaN
     poisons every decision output if the two styles are mis-mixed, so
-    the mistake cannot pass silently as plausible zeros."""
+    the mistake cannot pass silently as plausible zeros.
+
+    ``e_cmp`` is the [N] per-round computation energy from the device
+    profile (``repro.core.energy.comp_energy``); omitted => zeros, the
+    communication-only objective (bit-identical to the legacy solver)."""
     nan = float("nan")
+    e_cmp = (jnp.zeros((n_clients,), jnp.float32) if e_cmp is None
+             else jnp.asarray(e_cmp, jnp.float32))
+    if e_cmp.shape != (n_clients,):
+        raise ValueError(f"e_cmp must be [{n_clients}], got {e_cmp.shape}")
     return ControllerState(
         lam=jnp.zeros((), jnp.float32),
         mu=jnp.zeros((n_clients,), jnp.float32),
@@ -142,12 +161,13 @@ def init_state(cfg, n_clients: int, *, b_tot: float = None,
         params=make_params(cfg, b_tot=nan if b_tot is None else b_tot,
                            s_bits=nan if s_bits is None else s_bits,
                            i_bits=nan if i_bits is None else i_bits,
-                           n0=nan if n0 is None else n0))
+                           n0=nan if n0 is None else n0),
+        e_cmp=e_cmp)
 
 
 def solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
                 *, fe_cfg, s_bits: float = None, i_bits: float = None,
-                b_tot: float = None, n0: float = None
+                b_tot: float = None, n0: float = None, alive: Array = None
                 ) -> tuple[RoundDecision, ControllerState]:
     """One round of Algorithm 1. All client quantities are [N] arrays.
 
@@ -160,6 +180,14 @@ def solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
     * state-carried — omit them; the solver reads ``state.params`` (the
       controller-API path, which is what lets seed x config sweeps vmap
       over stacked states).
+
+    The objective is the *total* energy E_cmm(gamma, B) + E_cmp: the
+    per-client computation term rides in ``state.e_cmp`` (zeros for the
+    legacy communication-only model) and, being gamma/B-independent,
+    shifts only the selection threshold, never the bandwidth
+    best-response. ``alive`` ([N] bool, default all-true) hard-masks
+    battery-depleted clients out of selection; their fairness-dual
+    drivers are waived (a dead client cannot satisfy pi_min).
     """
     given = (s_bits, i_bits, b_tot, n0)
     if any(v is not None for v in given):
@@ -168,14 +196,19 @@ def solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
                             "or none (to use state.params)")
         state = state._replace(params=make_params(
             fe_cfg, b_tot=b_tot, s_bits=s_bits, i_bits=i_bits, n0=n0))
-    return _solve_round(u_norms, h, P, state, static_of(fe_cfg))
+    if alive is None:
+        alive = jnp.ones(u_norms.shape, bool)
+    return _solve_round(u_norms, h, P, alive, state, static_of(fe_cfg))
 
 
 @functools.partial(jax.jit, static_argnames=("static",))
-def _solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
-                 static: FEStatic) -> tuple[RoundDecision, ControllerState]:
+def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
+                 state: ControllerState, static: FEStatic
+                 ) -> tuple[RoundDecision, ControllerState]:
     N = u_norms.shape[0]
     p = state.params
+    e_cmp = state.e_cmp
+    alive_f = alive.astype(jnp.float32)
     grid = jnp.asarray(static.gamma_grid, jnp.float32)       # [G]
     G = grid.shape[0]
     rho, eta = p.rho, p.eta
@@ -192,15 +225,18 @@ def _solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
     score = contribution_score(u_norms[:, None], gam)        # [N,G]
 
     def best_response_gss(lam):
-        """Reference oracle: blind GSS on the unimodal phi (Sec. V-C)."""
+        """Reference oracle: blind GSS on the unimodal phi (Sec. V-C).
+        E_cmp is constant in b, so it never moves the bandwidth argmin —
+        it is added after the search, to the energy and the objective."""
         def phi_b(b_frac):
             return energy_of(b_frac) + lam * b_frac          # score term const wrt b
         b_star, phi_star = golden_section_minimize(
             phi_b, jnp.full((N, G), b_lo), 1.0, iters=static.gss_iters)
-        phi_full = phi_star - eta * score                    # [N,G]
+        phi_full = phi_star + e_cmp[:, None] - eta * score   # [N,G]
         g_idx = jnp.argmin(phi_full, axis=1)                 # [N]
         take = lambda t: jnp.take_along_axis(t, g_idx[:, None], 1)[:, 0]
-        return take(gam), take(b_star), take(energy_of(b_star)), take(phi_full)
+        return (take(gam), take(b_star), take(energy_of(b_star)) + e_cmp,
+                take(phi_full))
 
     # lam-independent stationarity constant, hoisted out of the dual loop
     # (a loop-invariant while_loop operand; the Pallas kernel recomputes
@@ -215,21 +251,24 @@ def _solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
         kw = {} if static.use_pallas else {"base": nt_base}
         return fn(P, h, u_norms, lam, gamma_grid=static.gamma_grid,
                   eta=eta, b_tot=p.b_tot, s_bits=p.s_bits, i_bits=p.i_bits,
-                  n0=p.n0, b_lo=b_lo, newton_iters=static.newton_iters, **kw)
+                  n0=p.n0, b_lo=b_lo, newton_iters=static.newton_iters,
+                  e_cmp=e_cmp, **kw)
 
     best_response = (best_response_gss if static.solver == "gss"
                      else best_response_newton)
 
     def dual_step(lam, mu):
         gamma_i, b_i, e_i, _ = best_response(lam)
-        x = e_i + lam * b_i < eta * contribution_score(u_norms, gamma_i) \
-            + mu * (1.0 - rho)
+        x = (e_i + lam * b_i < eta * contribution_score(u_norms, gamma_i)
+             + mu * (1.0 - rho)) & alive
         xf = x.astype(jnp.float32)
         # Algorithm 1 line 11: bandwidth dual (normalized budget = 1)
         new_lam = jnp.maximum(lam + p.alpha_lambda * (jnp.sum(xf * b_i) - 1.0),
                               0.0)
-        # Algorithm 1 line 9: fairness dual
-        new_mu = jnp.maximum(mu + p.alpha_mu *
+        # Algorithm 1 line 9: fairness dual — waived (alive_f mask) for
+        # depleted clients, whose pi_min violation is unfixable and would
+        # otherwise grow mu forever and defeat the residual early exit
+        new_mu = jnp.maximum(mu + p.alpha_mu * alive_f *
                              (p.pi_min - rho * state.q - (1.0 - rho) * xf),
                              0.0)
         return new_lam, new_mu
@@ -263,7 +302,7 @@ def _solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
     gamma_i, b_i, e_i, _ = best_response(lam)
     benefit = eta * contribution_score(u_norms, gamma_i) + mu * (1.0 - rho) \
         - e_i - lam * b_i
-    x = benefit > 0
+    x = (benefit > 0) & alive
 
     # ---- repair: greedy keep until the bandwidth budget fits.  Clients
     # whose participation EMA would violate q >= pi_min if dropped are kept
@@ -287,4 +326,5 @@ def _solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
     dec = RoundDecision(x=x, gamma=jnp.where(x, gamma_i, 0.0),
                         bandwidth=bandwidth, energy=energy, lam=lam, mu=mu,
                         n_inner=n_inner, bw_used=jnp.sum(bandwidth))
-    return dec, ControllerState(lam=lam, mu=mu, q=q_new, params=p)
+    return dec, ControllerState(lam=lam, mu=mu, q=q_new, params=p,
+                                e_cmp=e_cmp)

@@ -116,3 +116,20 @@ def payload_bits(n_params: int, gamma: float, *, value_bits: int = 32,
     s_bits = value_bits * n_params
     i_bits = float(n_params) if bitmap_index else 0.0
     return gamma * s_bits + i_bits
+
+
+def effective_gamma(gamma, block: int = DEFAULT_BLOCK):
+    """The keep fraction the block scheme actually realizes:
+    ``clip(ceil(gamma*block), 1, block) / block`` — the same k rule as
+    ``block_topk``/``batch_block_topk``, jnp-traceable.
+
+    The energy model charges ``gamma*S + I`` with the *controller's*
+    gamma (``repro.core.channel.payload_bits``); the transmitted payload
+    is ``effective_gamma(gamma)*S + I``. The two agree exactly whenever
+    ``gamma*block`` is integral (e.g. gamma in {0.25, 0.5, 0.75, 1.0} at
+    the default 4096 block); otherwise the ceil rounds the realized
+    payload up to at most ``S/block`` bits above the charge (~0.01% of S
+    at the default block — e.g. grid gamma 0.1 keeps 410/4096), plus the
+    k >= 1 floor at vanishing gamma. Audit helper: use it to bound the
+    charge error."""
+    return jnp.clip(jnp.ceil(jnp.asarray(gamma) * block), 1, block) / block

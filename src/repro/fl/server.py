@@ -62,6 +62,7 @@ import numpy as np
 from repro.core.channel import WirelessNetwork, round_gains
 from repro.core.controllers import (Controller, ControllerContext,
                                     RoundObservation, make_controller)
+from repro.core.energy import UNLIMITED_J, alive_mask, comp_energy
 from repro.data.pipeline import (client_sample_keys, sample_client_batches,
                                  sample_round_batches, stack_client_datasets)
 from repro.fl import compression
@@ -84,10 +85,12 @@ class RoundLog:
     selected: np.ndarray
     gamma: np.ndarray
     bandwidth: np.ndarray
-    energy: np.ndarray          # J per client
+    energy: np.ndarray          # J per client — total (comm + comp)
     accuracy: float             # NaN on rounds skipped by eval_every
     loss: float
     n_selected: int
+    battery: Optional[np.ndarray] = None  # J per client after the round
+    #                                       (inf = unlimited)
 
     @property
     def total_energy(self) -> float:
@@ -118,11 +121,23 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
     are identical), and the decision's x/gamma are sliced back to the
     local chunk for the shard-local sparsify + weighted partial
     aggregation; one ``psum`` pair yields the global model delta.
+
+    ``battery`` (an optional trailing [n_real] operand, replicated like
+    the other observables) threads per-client battery charge through the
+    round: depleted clients (charge <= 0) enter the observation as
+    ``alive=False``, and — mirroring the ghost-client path — the engine
+    hard-masks them out of the decision regardless of what the
+    controller returned, so no controller can spend a dead client's
+    energy. Selected clients are then debited their round energy
+    (comm + comp; inf capacity never depletes). When ``battery`` is
+    passed the core returns a 4-tuple ``(params, dec, state, battery)``;
+    without it, the legacy 3-tuple.
     """
     sharded = shard_axis is not None
     n_pad = int(weights.shape[0])
 
-    def core(params, updates, u_norms, h, P, r, key, ctrl_state):
+    def core(params, updates, u_norms, h, P, r, key, ctrl_state,
+             battery=None):
         if sharded:
             n_local = u_norms.shape[0]
             i0 = jax.lax.axis_index(shard_axis) * n_local
@@ -130,8 +145,23 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                                            tiled=True)[:n_real]
         else:
             obs_norms = u_norms
-        obs = RoundObservation(u_norms=obs_norms, h=h, P=P, round=r, key=key)
+        alive = alive_mask(battery) if battery is not None else None
+        obs = RoundObservation(u_norms=obs_norms, h=h, P=P, round=r, key=key,
+                               alive=alive)
         dec, new_state = controller.decide(obs, ctrl_state)
+        if battery is not None:
+            # hard mask, whatever the controller decided: a depleted
+            # client transmits nothing and is charged nothing
+            x = dec.x & alive
+            mf = x.astype(jnp.float32)
+            dec = dec._replace(x=x, gamma=dec.gamma * mf,
+                               bandwidth=dec.bandwidth * mf,
+                               energy=dec.energy * mf,
+                               bw_used=jnp.sum(dec.bandwidth * mf))
+            # debit the round's spend; the depleting transmission is
+            # allowed to finish (brownout), charge floors at 0 so the
+            # carried state stays in [0, capacity] (inf stays inf)
+            battery = jnp.maximum(battery - dec.energy, 0.0)
 
         xf = dec.x.astype(jnp.float32)
         # unselected rows carry zero aggregation weight, so their sparsity
@@ -163,6 +193,8 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
         delta_tree = unflatten_update(agg, spec)
         new_params = jax.tree_util.tree_map(
             lambda p, d: p + d.astype(p.dtype), params, delta_tree)
+        if battery is not None:
+            return new_params, dec, new_state, battery
         return new_params, dec, new_state
 
     return core
@@ -188,15 +220,20 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                      n_real: Optional[int] = None):
     """Builds the fused multi-round scan program.
 
-    Returns ``scan_fn(params, ctrl_state, data, keys, start_round,
-    last_round, eval_every, n_rounds)`` executing ``n_rounds`` (static)
-    FL rounds as one ``lax.scan``: traced fading + batch sampling +
-    client vmap step + decide/sparsify/aggregate/apply + strided eval.
-    ``keys`` is ``dict(fade=..., sample=..., ctrl=...)`` PRNG keys;
-    ``eval_every`` is a traced int (accuracy is NaN on skipped rounds;
-    the ``last_round`` index is always evaluated). Outputs are stacked
-    per-round logs. Wrap in ``jax.jit(..., static_argnames="n_rounds",
-    donate_argnums=(0, 1))`` — or ``vmap`` over ``keys`` for sweeps.
+    Returns ``scan_fn(params, ctrl_state, battery, data, keys,
+    start_round, last_round, eval_every, n_rounds)`` executing
+    ``n_rounds`` (static) FL rounds as one ``lax.scan``: traced fading +
+    batch sampling + client vmap step + decide/sparsify/aggregate/apply
+    + battery debit + strided eval. ``battery`` is the [n_real]
+    per-client charge (J) carried across rounds — pass
+    ``jnp.full(n, inf)`` for the unlimited (legacy) physics, which is
+    bit-identical to the battery-free engine. ``keys`` is
+    ``dict(fade=..., sample=..., ctrl=...)`` PRNG keys; ``eval_every``
+    is a traced int (accuracy is NaN on skipped rounds; the
+    ``last_round`` index is always evaluated). Outputs are stacked
+    per-round logs (including the per-round ``battery`` trace). Wrap in
+    ``jax.jit(..., static_argnames="n_rounds", donate_argnums=(0, 1,
+    2))`` — or ``vmap`` over ``keys`` for sweeps.
 
     With ``mesh`` (a 1-D mesh carrying ``mesh_axis``), the whole scan is
     wrapped in ``shard_map``: ``data`` comes in sharded on its client
@@ -225,8 +262,8 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
     n_pad_keys = int(weights.shape[0])
     n_real_keys = n_real if n_real is not None else n_pad_keys
 
-    def scan_body(params, ctrl_state, data, keys, start_round, last_round,
-                  eval_every, n_rounds: int):
+    def scan_body(params, ctrl_state, battery, data, keys, start_round,
+                  last_round, eval_every, n_rounds: int):
         n_local = data.lengths.shape[0]             # per-shard when sharded
         if sharded:
             i0 = jax.lax.axis_index(mesh_axis) * n_local
@@ -234,7 +271,7 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
             i0 = jnp.int32(0)
 
         def step(carry, r):
-            p, state = carry
+            p, state, batt = carry
             h = round_gains(keys["fade"], pathloss, r, rayleigh)
             # every shard derives the full (tiny) per-client key set —
             # real clients keep the unpadded split stream — and slices
@@ -246,7 +283,8 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                                             local_steps, batch)
             updates, u_norms, losses = client_step(p, batches)
             ckey = jax.random.fold_in(keys["ctrl"], r)
-            p, dec, state = core(p, updates, u_norms, h, P, r, ckey, state)
+            p, dec, state, batt = core(p, updates, u_norms, h, P, r, ckey,
+                                       state, batt)
             if sharded:
                 losses = jax.lax.all_gather(losses, mesh_axis,
                                             tiled=True)[:n_real]
@@ -256,13 +294,13 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                                lambda q: jnp.float32(jnp.nan), p)
             out = dict(x=dec.x, gamma=dec.gamma, bandwidth=dec.bandwidth,
                        energy=dec.energy, accuracy=acc,
-                       loss=jnp.mean(losses))
-            return (p, state), out
+                       loss=jnp.mean(losses), battery=batt)
+            return (p, state, batt), out
 
         rs = start_round + jnp.arange(n_rounds, dtype=jnp.int32)
-        (params, ctrl_state), outs = jax.lax.scan(step, (params, ctrl_state),
-                                                  rs, unroll=unroll)
-        return params, ctrl_state, outs
+        (params, ctrl_state, battery), outs = jax.lax.scan(
+            step, (params, ctrl_state, battery), rs, unroll=unroll)
+        return params, ctrl_state, battery, outs
 
     if not sharded:
         return scan_body
@@ -270,23 +308,23 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as PS
 
-    def scan_fn(params, ctrl_state, data, keys, start_round, last_round,
-                eval_every, n_rounds: int):
+    def scan_fn(params, ctrl_state, battery, data, keys, start_round,
+                last_round, eval_every, n_rounds: int):
         body = functools.partial(scan_body, n_rounds=n_rounds)
         # only `data` is split (leading client axis); everything else —
-        # params, controller state, keys, round bounds, stacked logs — is
-        # replicated. check_rep=False: the outputs *are* replicated (built
-        # from psum/all-gather results) but the static replication checker
-        # cannot see that through the scan carry.
+        # params, controller state, battery, keys, round bounds, stacked
+        # logs — is replicated. check_rep=False: the outputs *are*
+        # replicated (built from psum/all-gather results) but the static
+        # replication checker cannot see that through the scan carry.
         sharded_fn = shard_map(
             body, mesh=mesh,
             in_specs=(replicated_specs(params), replicated_specs(ctrl_state),
-                      PS(mesh_axis), PS(), PS(), PS(), PS()),
+                      PS(), PS(mesh_axis), PS(), PS(), PS(), PS()),
             out_specs=(replicated_specs(params), replicated_specs(ctrl_state),
-                       PS()),
+                       PS(), PS()),
             check_rep=False)
-        return sharded_fn(params, ctrl_state, data, keys, start_round,
-                          last_round, eval_every)
+        return sharded_fn(params, ctrl_state, battery, data, keys,
+                          start_round, last_round, eval_every)
 
     return scan_fn
 
@@ -312,6 +350,15 @@ class FederatedTrainer:
     delta), the ``[N]`` observables stay replicated, and the client count
     is ghost-padded to mesh divisibility. Trajectories are bit-compatible
     with ``mesh=None`` (same masks; params/energy to last-ulp tolerance).
+
+    ``device_profile``: a ``repro.core.energy.DeviceProfile`` (or a kind
+    string like "tiered") attaches heterogeneous computation energy —
+    priced into every controller's decisions and charged per round — and
+    optional finite batteries, whose charge threads through the scan
+    carry: depleted clients are masked unselectable like ghost clients.
+    ``repro.scenarios`` presets compose profiles with partition/channel
+    knobs. Without a profile the legacy communication-only physics is
+    reproduced bit-for-bit.
     """
 
     def __init__(self, *, model_loss, model_params, client_datasets,
@@ -321,7 +368,8 @@ class FederatedTrainer:
                  fixed_k: Optional[int] = None,
                  eco_gamma: float = 0.1, eco_bandwidth: Optional[float] = None,
                  use_pallas_compression: bool = False, seed: int = 0,
-                 mesh=None, mesh_axis: str = CLIENTS_AXIS):
+                 mesh=None, mesh_axis: str = CLIENTS_AXIS,
+                 device_profile=None):
         if strategy is not None:
             controller = strategy
         self.loss_fn = model_loss
@@ -331,18 +379,28 @@ class FederatedTrainer:
         self.eval_fn = eval_fn
         self.fl_cfg, self.fe_cfg, self.ch_cfg = fl_cfg, fe_cfg, ch_cfg
         self.n_clients = len(client_datasets)
-        self.network = WirelessNetwork(ch_cfg, seed=seed)
+        self.network = WirelessNetwork(ch_cfg, seed=seed,
+                                       device_profile=device_profile)
+        self.device_profile = self.network.device_profile
         self.spec = tree_spec(model_params)
         self.n_params = int(sum(np.prod(s) for s in self.spec.shapes))
         self.s_bits = 32.0 * self.n_params
         self.i_bits = float(self.n_params)            # 1-bit/coeff kept-mask
         self.use_pallas = use_pallas_compression
 
+        # per-round computation energy from the device profile (a round
+        # is local_steps minibatches of local_batch samples); None keeps
+        # the legacy communication-only objective
+        e_cmp = None
+        if self.device_profile is not None:
+            samples = fl_cfg.local_steps * fl_cfg.local_batch
+            e_cmp = tuple(np.asarray(
+                comp_energy(self.device_profile, samples), np.float64))
         ctx = ControllerContext(
             n_clients=self.n_clients, b_tot=ch_cfg.bandwidth_total,
             s_bits=self.s_bits, i_bits=self.i_bits, n0=ch_cfg.noise_density,
             fe_cfg=fe_cfg, fixed_k=fixed_k, eco_gamma=eco_gamma,
-            eco_bandwidth=eco_bandwidth)
+            eco_bandwidth=eco_bandwidth, e_cmp=e_cmp)
         self.controller = make_controller(controller, ctx)
         self.controller_name = (controller if isinstance(controller, str)
                                 else getattr(controller, "name",
@@ -377,12 +435,27 @@ class FederatedTrainer:
         # ghost clients have length 0 => exactly zero aggregation weight
         weights = np.asarray(self._data.lengths, np.float64)
         self.weights = weights / weights.sum()
+        # battery charge carried across rounds; inf (unlimited) when the
+        # profile has no finite capacities — bit-identical physics to a
+        # battery-free run
+        if self.device_profile is not None:
+            self._battery0 = jnp.asarray(self.device_profile.battery,
+                                         jnp.float32)
+        else:
+            self._battery0 = jnp.full((self.n_clients,), UNLIMITED_J,
+                                      jnp.float32)
+        self._battery = jnp.array(self._battery0)
         self.history: list[RoundLog] = []
 
     # back-compat alias (the old attribute name) --------------------------
     @property
     def strategy(self) -> str:
         return self.controller_name
+
+    @property
+    def battery(self) -> np.ndarray:
+        """[N] current per-client battery charge (J; inf = unlimited)."""
+        return np.asarray(self._battery)
 
     # ------------------------------------------------------------------
     @functools.cached_property
@@ -412,7 +485,7 @@ class FederatedTrainer:
                 mesh=self.mesh, mesh_axis=self.mesh_axis,
                 n_real=self.n_clients)
             self._scan_engine = jax.jit(scan_fn, static_argnames="n_rounds",
-                                        donate_argnums=(0, 1))
+                                        donate_argnums=(0, 1, 2))
             self._scan_fn_raw = scan_fn
         return self._scan_engine
 
@@ -424,11 +497,13 @@ class FederatedTrainer:
             scan_fn = self._scan_fn_raw
 
             @functools.partial(jax.jit, static_argnames="n_rounds")
-            def sweep(params, state, data, keys, eval_every, n_rounds: int):
+            def sweep(params, state, battery, data, keys, eval_every,
+                      n_rounds: int):
                 def one(ks):
-                    _, _, outs = scan_fn(params, state, data, ks,
-                                         jnp.int32(0), jnp.int32(n_rounds - 1),
-                                         eval_every, n_rounds)
+                    _, _, _, outs = scan_fn(params, state, battery, data, ks,
+                                            jnp.int32(0),
+                                            jnp.int32(n_rounds - 1),
+                                            eval_every, n_rounds)
                     return outs
                 return jax.vmap(one)(keys)
 
@@ -445,13 +520,14 @@ class FederatedTrainer:
             scan_fn = self._scan_fn_raw
 
             @functools.partial(jax.jit, static_argnames="n_rounds")
-            def sweep(params, states, data, keys, eval_every, n_rounds: int):
+            def sweep(params, states, battery, data, keys, eval_every,
+                      n_rounds: int):
                 def per_cfg(st):
                     def one(ks):
-                        _, _, outs = scan_fn(params, st, data, ks,
-                                             jnp.int32(0),
-                                             jnp.int32(n_rounds - 1),
-                                             eval_every, n_rounds)
+                        _, _, _, outs = scan_fn(params, st, battery, data, ks,
+                                                jnp.int32(0),
+                                                jnp.int32(n_rounds - 1),
+                                                eval_every, n_rounds)
                         return outs
                     return jax.vmap(one)(keys)
                 return jax.vmap(per_cfg)(states)
@@ -537,9 +613,9 @@ class FederatedTrainer:
         """
         self._maybe_calibrate(r)
         engine = self._get_scan_engine()
-        self.params, self.ctrl_state, outs = engine(
-            self.params, self.ctrl_state, self._data, self._keys(),
-            jnp.int32(r), jnp.int32(r), jnp.int32(1), n_rounds=1)
+        self.params, self.ctrl_state, self._battery, outs = engine(
+            self.params, self.ctrl_state, self._battery, self._data,
+            self._keys(), jnp.int32(r), jnp.int32(r), jnp.int32(1), n_rounds=1)
         self._append_chunk_logs(r, outs)
         return self.history[-1]
 
@@ -569,7 +645,8 @@ class FederatedTrainer:
                 round=start + i, selected=x, gamma=host["gamma"][i],
                 bandwidth=host["bandwidth"][i], energy=host["energy"][i],
                 accuracy=float(host["accuracy"][i]),
-                loss=float(host["loss"][i]), n_selected=int(x.sum())))
+                loss=float(host["loss"][i]), n_selected=int(x.sum()),
+                battery=host["battery"][i] if "battery" in host else None))
 
     def run_scanned(self, rounds: Optional[int] = None, *,
                     chunk: Optional[int] = None, eval_every: int = 1,
@@ -598,8 +675,8 @@ class FederatedTrainer:
         keys = self._keys()
         for s in range(0, rounds, chunk):
             n = min(chunk, rounds - s)
-            self.params, self.ctrl_state, outs = engine(
-                self.params, self.ctrl_state, self._data, keys,
+            self.params, self.ctrl_state, self._battery, outs = engine(
+                self.params, self.ctrl_state, self._battery, self._data, keys,
                 jnp.int32(s), jnp.int32(rounds - 1), jnp.int32(eval_every),
                 n_rounds=n)
             self._append_chunk_logs(s, outs)
@@ -670,15 +747,16 @@ class FederatedTrainer:
                 keys = self._seed_keys(b)
                 p = jax.tree_util.tree_map(jnp.array, self.params)
                 st = jax.tree_util.tree_map(jnp.array, self.ctrl_state)
-                _, _, outs = engine(p, st, self._data, keys, jnp.int32(0),
-                                    jnp.int32(rounds - 1),
-                                    jnp.int32(eval_every), n_rounds=rounds)
+                bt = jnp.array(self._battery0)
+                _, _, _, outs = engine(p, st, bt, self._data, keys,
+                                       jnp.int32(0), jnp.int32(rounds - 1),
+                                       jnp.int32(eval_every), n_rounds=rounds)
                 lanes.append({k: np.asarray(v) for k, v in outs.items()})
             return {k: np.stack([ln[k] for ln in lanes]) for k in lanes[0]}
         keys = self._stacked_seed_keys(bases)
         outs = self._get_sweep_engine()(
-            self.params, self.ctrl_state, self._data, keys,
-            jnp.int32(eval_every), n_rounds=rounds)
+            self.params, self.ctrl_state, jnp.array(self._battery0),
+            self._data, keys, jnp.int32(eval_every), n_rounds=rounds)
         return {k: np.asarray(v) for k, v in outs.items()}
 
     def _run_config_sweep(self, bases, rounds: int, eval_every: int,
@@ -699,9 +777,11 @@ class FederatedTrainer:
                     keys = self._seed_keys(b)
                     p = jax.tree_util.tree_map(jnp.array, self.params)
                     st = jax.tree_util.tree_map(jnp.array, st_c)
-                    _, _, outs = engine(p, st, self._data, keys, jnp.int32(0),
-                                        jnp.int32(rounds - 1),
-                                        jnp.int32(eval_every), n_rounds=rounds)
+                    bt = jnp.array(self._battery0)
+                    _, _, _, outs = engine(p, st, bt, self._data, keys,
+                                           jnp.int32(0), jnp.int32(rounds - 1),
+                                           jnp.int32(eval_every),
+                                           n_rounds=rounds)
                     per_seed.append({k: np.asarray(v) for k, v in outs.items()})
                 lanes.append({k: np.stack([s[k] for s in per_seed])
                               for k in per_seed[0]})
@@ -710,8 +790,8 @@ class FederatedTrainer:
             return res
         keys = self._stacked_seed_keys(bases)
         outs = self._get_config_sweep_engine()(
-            self.params, states, self._data, keys, jnp.int32(eval_every),
-            n_rounds=rounds)
+            self.params, states, jnp.array(self._battery0), self._data, keys,
+            jnp.int32(eval_every), n_rounds=rounds)
         res = {k: np.asarray(v) for k, v in outs.items()}
         res["configs"] = echo
         return res

@@ -33,14 +33,17 @@ from .ref import _channel, ln_k_gamma_free, newton_snr
 N_SCALARS = 7
 (S_LAM, S_ETA, S_BTOT, S_SBITS, S_IBITS, S_N0, S_BLO) = range(N_SCALARS)
 
-def _best_response_block(P, h, u, sc, *, gamma_grid, newton_iters):
+def _best_response_block(P, h, u, ec, sc, *, gamma_grid, newton_iters):
     """Shared kernel body math on loaded [1, BLK] values. ``sc`` indexes
-    the scalar vector. Returns (gamma*, b*, e*, phi*).
+    the scalar vector; ``ec`` is the per-client computation energy block
+    (zeros for the communication-only objective). Returns
+    (gamma*, b*, e*, phi*).
 
-    The energy at the clipped best-response IS ``channel.comm_energy``,
-    called per (static) gamma level on the block values — elementwise
-    jnp lowers inside the kernel body, so the channel model stays the
-    single source of truth for floors and guards."""
+    The energy at the clipped best-response IS ``channel.comm_energy``
+    plus the additive E_cmp term (``repro.core.energy``), called per
+    (static) gamma level on the block values — elementwise jnp lowers
+    inside the kernel body, so the channel model stays the single source
+    of truth for floors and guards."""
     lam, eta = sc[S_LAM], sc[S_ETA]
     b_tot, s_bits, i_bits = sc[S_BTOT], sc[S_SBITS], sc[S_IBITS]
     n0, b_lo = sc[S_N0], sc[S_BLO]
@@ -56,7 +59,7 @@ def _best_response_block(P, h, u, sc, *, gamma_grid, newton_iters):
         ln_k = ln_lam + base - jnp.log(D)
         t = newton_snr(ln_k, newton_iters)
         b = jnp.clip(c / (t * b_tot), b_lo, 1.0)
-        e = chan.comm_energy(g, b * b_tot, P, h, s_bits, i_bits, n0)
+        e = chan.comm_energy(g, b * b_tot, P, h, s_bits, i_bits, n0) + ec
         phi = e + lam * b - eta * u * g
         if best is None:
             best = (jnp.full_like(phi, g), b, e, phi)
@@ -68,14 +71,15 @@ def _best_response_block(P, h, u, sc, *, gamma_grid, newton_iters):
     return best
 
 
-def _dual_solve_kernel(sc_ref, p_ref, h_ref, u_ref,
+def _dual_solve_kernel(sc_ref, p_ref, h_ref, u_ref, ec_ref,
                        gam_ref, b_ref, e_ref, phi_ref, *,
                        gamma_grid, newton_iters):
     P = p_ref[...].astype(jnp.float32)
     h = h_ref[...].astype(jnp.float32)
     u = u_ref[...].astype(jnp.float32)
+    ec = ec_ref[...].astype(jnp.float32)
     gam, b, e, phi = _best_response_block(
-        P, h, u, sc_ref, gamma_grid=gamma_grid, newton_iters=newton_iters)
+        P, h, u, ec, sc_ref, gamma_grid=gamma_grid, newton_iters=newton_iters)
     gam_ref[...] = gam
     b_ref[...] = b
     e_ref[...] = e
@@ -85,11 +89,13 @@ def _dual_solve_kernel(sc_ref, p_ref, h_ref, u_ref,
 @functools.partial(jax.jit, static_argnames=("gamma_grid", "newton_iters",
                                              "block", "interpret"))
 def dual_solve_pallas(P: jnp.ndarray, h: jnp.ndarray, u_norms: jnp.ndarray,
-                      scalars: jnp.ndarray, *, gamma_grid: tuple,
-                      newton_iters: int = 3, block: int = 128,
-                      interpret: bool = True):
-    """P/h/u_norms: [n] with n % block == 0; scalars: [N_SCALARS] f32
-    (see the S_* layout). Returns (gamma*, b*, e*, phi*), each [n]."""
+                      e_cmp: jnp.ndarray, scalars: jnp.ndarray, *,
+                      gamma_grid: tuple, newton_iters: int = 3,
+                      block: int = 128, interpret: bool = True):
+    """P/h/u_norms/e_cmp: [n] with n % block == 0; scalars: [N_SCALARS]
+    f32 (see the S_* layout). ``e_cmp`` is the per-client computation
+    energy (zeros => communication-only). Returns (gamma*, b*, e*,
+    phi*), each [n]."""
     n = P.shape[0]
     assert n % block == 0 and scalars.shape == (N_SCALARS,), \
         (P.shape, scalars.shape)
@@ -99,7 +105,7 @@ def dual_solve_pallas(P: jnp.ndarray, h: jnp.ndarray, u_norms: jnp.ndarray,
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nb,),
-        in_specs=[blk, blk, blk],
+        in_specs=[blk, blk, blk, blk],
         out_specs=[blk, blk, blk, blk],
     )
     out = pl.pallas_call(
@@ -108,5 +114,6 @@ def dual_solve_pallas(P: jnp.ndarray, h: jnp.ndarray, u_norms: jnp.ndarray,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.float32)] * 4,
         interpret=interpret,
-    )(scalars.astype(jnp.float32), rows(P), rows(h), rows(u_norms))
+    )(scalars.astype(jnp.float32), rows(P), rows(h), rows(u_norms),
+      rows(e_cmp))
     return tuple(o.reshape(-1) for o in out)

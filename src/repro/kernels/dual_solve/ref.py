@@ -126,7 +126,8 @@ def bandwidth_best_response(lam: Array, P: Array, h: Array, gamma: Array, *,
 def dual_solve_ref(P: Array, h: Array, u_norms: Array, lam: Array, *,
                    gamma_grid, eta: Array, b_tot: Array, s_bits: Array,
                    i_bits: Array, n0: Array, b_lo: Array,
-                   newton_iters: int = 3, base: Array = None):
+                   newton_iters: int = 3, base: Array = None,
+                   e_cmp: Array = None):
     """Per-client best response over the gamma grid — the jnp oracle for
     the Pallas kernel (and the solver's default jnp fast path).
 
@@ -140,6 +141,10 @@ def dual_solve_ref(P: Array, h: Array, u_norms: Array, lam: Array, *,
     ``gamma_grid`` is a static tuple; scalars are traced. ``base``
     optionally supplies the precomputed [N, G] ``ln_k_base`` so the
     dual-ascent loop does not recompute its three logs per iteration.
+    ``e_cmp`` ([N], optional) is the per-client computation energy — a
+    (gamma, b)-independent additive term: E = E_cmm + E_cmp enters the
+    objective and the returned energies, but never the bandwidth
+    stationarity (``repro.core.energy``).
     """
     grid = jnp.asarray(gamma_grid, jnp.float32)                  # [G]
     Pg, hg, ug = P[:, None], h[:, None], u_norms[:, None]        # [N,1]
@@ -150,6 +155,8 @@ def dual_solve_ref(P: Array, h: Array, u_norms: Array, lam: Array, *,
                                 base=base)                       # [N,G]
     e = _channel().comm_energy(gam, b * b_tot, Pg, hg,
                                s_bits, i_bits, n0)               # [N,G]
+    if e_cmp is not None:
+        e = e + e_cmp[:, None]                                   # total energy
     phi = e + lam * b - eta * ug * gam                           # [N,G]
     g_idx = jnp.argmin(phi, axis=1)                              # [N]
     take = lambda t: jnp.take_along_axis(t, g_idx[:, None], 1)[:, 0]

@@ -6,3 +6,17 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Hypothesis profiles: CI runs derandomized (the pinned-seed profile —
+# reproducible across runs, no flaky shrink timeouts); local runs keep
+# random exploration but print the @reproduce_failure blob so a failing
+# draw can be replayed. Per-test @settings(...) override only the fields
+# they name; everything else inherits the loaded profile.
+try:
+    from hypothesis import settings
+
+    settings.register_profile("ci", derandomize=True, deadline=None)
+    settings.register_profile("dev", print_blob=True, deadline=None)
+    settings.load_profile("ci" if os.environ.get("CI") else "dev")
+except ImportError:          # hypothesis is a dev extra, not a hard dep
+    pass

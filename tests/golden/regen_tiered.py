@@ -1,0 +1,38 @@
+"""Regenerate tests/golden/tiered_fairenergy_12round.json.
+
+Run ONLY for an intended physics change (the fixture exists so solver
+refactors can't silently shift the tiered-devices energy model):
+
+    PYTHONPATH=src:tests python tests/golden/regen_tiered.py
+"""
+import json
+import os
+
+import numpy as np
+
+from test_scan_engine import N_CLIENTS, ROUNDS, make_trainer
+
+from repro.scenarios import get_scenario
+
+
+def main():
+    prof = get_scenario("tiered-devices").device_profile(N_CLIENTS, seed=0)
+    tr = make_trainer("fairenergy", device_profile=prof)
+    tr.run_scanned(ROUNDS, verbose=False)
+    out = {
+        "rounds": ROUNDS,
+        "scenario": "tiered-devices",
+        "selected": [[int(b) for b in lg.selected] for lg in tr.history],
+        "total_energy": [float(lg.total_energy) for lg in tr.history],
+        "accuracy": [float(lg.accuracy) for lg in tr.history],
+    }
+    path = os.path.join(os.path.dirname(__file__),
+                        "tiered_fairenergy_12round.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote", path)
+    print("selected/round:", [sum(s) for s in out["selected"]])
+
+
+if __name__ == "__main__":
+    main()
