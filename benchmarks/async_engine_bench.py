@@ -1,0 +1,235 @@
+"""Macrobenchmark: wall-clock-per-accuracy of the async round subsystem.
+
+The synchronous engine closes every round on its slowest selected client,
+so one straggler defines round latency. The async subsystem
+(``repro.core.rounds``) closes rounds at a deadline instead — dropping
+(or staleness-buffering) the stragglers — trading per-round model
+progress for much shorter simulated rounds. This bench scores that trade
+on its natural axis: **simulated wall-clock seconds to reach the
+synchronous arm's final accuracy**, on a tiered-device fleet (4x
+comp-time spread) with heterogeneous channels.
+
+Arms (identical model / data / controller = fairenergy):
+
+* ``sync`` — no deadline, ``track_time=True``: every selected client
+  waits out the round; the wall-clock baseline;
+* ``deadline`` — quantile-resolved round deadline, late clients dropped
+  and charged partial energy;
+* ``deadline_staleness`` — same deadline, but late updates keep
+  transmitting in the background and fold into later rounds with the
+  FedAsync-style ``w(tau) = 1/(1+tau)^a`` discount.
+
+The async arms run more rounds than sync (rounds are cheaper in
+simulated time); each arm reports the simulated wall-clock at which it
+first reaches the per-seed target accuracy. A separate **overhead** pair
+on a homogeneous (uniform) fleet times the host wall-clock of the fused
+scan with the async machinery on vs the pre-change legacy program — the
+per-round engine overhead budget is <= 10%.
+
+Writes ``BENCH_async_engine.json`` at the repo root.
+
+  PYTHONPATH=src python -m benchmarks.async_engine_bench [--fast] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ChannelConfig, FairEnergyConfig, FLConfig
+from repro.core.energy import make_profile
+from repro.core.rounds import AsyncConfig
+from repro.fl import FederatedTrainer
+
+D_IN, D_HIDDEN, N_CLASSES = 64, 128, 10
+SHARD = 160
+
+REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+
+def _loss_fn(p, batch):
+    hid = jnp.tanh(batch["x"] @ p["w1"])
+    ll = jax.nn.log_softmax(hid @ p["w2"])
+    return -jnp.mean(jnp.take_along_axis(ll, batch["y"][:, None], 1)), {}
+
+
+def make_trainer(n_clients: int, seed: int, profile=None, async_cfg=None,
+                 local_steps=2, batch=32):
+    rng = np.random.default_rng(7)        # fixed model/data across seeds
+    params = {"w1": jnp.asarray(rng.normal(size=(D_IN, D_HIDDEN))
+                                .astype(np.float32) * 0.05),
+              "w2": jnp.asarray(rng.normal(size=(D_HIDDEN, N_CLASSES))
+                                .astype(np.float32) * 0.05)}
+    # Labels from a fixed random linear teacher so accuracy genuinely
+    # climbs — a target-accuracy bench on unlearnable labels would just
+    # time noise around chance level.
+    teacher = rng.normal(size=(D_IN, N_CLASSES)).astype(np.float32)
+
+    def draw(n):
+        x = rng.normal(size=(n, D_IN)).astype(np.float32)
+        logits = x @ teacher + 0.5 * rng.normal(size=(n, N_CLASSES))
+        return x, logits.argmax(-1)
+
+    datasets = []
+    for _ in range(n_clients):
+        x, y = draw(SHARD)
+        datasets.append({"x": x, "y": y})
+    tx, ty = draw(512)
+    tx, ty = jnp.asarray(tx), jnp.asarray(ty)
+
+    def eval_fn(p):
+        lg = jnp.tanh(tx @ p["w1"]) @ p["w2"]
+        return jnp.mean((jnp.argmax(lg, -1) == ty).astype(jnp.float32))
+
+    return FederatedTrainer(
+        model_loss=_loss_fn, model_params=params, client_datasets=datasets,
+        eval_fn=eval_fn,
+        fl_cfg=FLConfig(local_steps=local_steps, local_batch=batch, lr=0.05),
+        fe_cfg=FairEnergyConfig(), ch_cfg=ChannelConfig(n_clients=n_clients),
+        controller="fairenergy", seed=seed, device_profile=profile,
+        async_cfg=async_cfg)
+
+
+ARMS = {
+    "sync": lambda q: AsyncConfig(track_time=True),
+    "deadline": lambda q: AsyncConfig(deadline_q=q),
+    "deadline_staleness": lambda q: AsyncConfig(deadline_q=q,
+                                                staleness=True),
+}
+
+
+def run_accuracy_arms(n_clients, rounds_sync, rounds_async, seeds,
+                      deadline_q, verbose=False):
+    """Per-seed target = the sync arm's final accuracy; every arm reports
+    the simulated wall-clock at which it first reached it."""
+    out = {name: {"final_acc": [], "sim_time": [], "t_to_target": [],
+                  "rounds": rounds_sync if name == "sync" else rounds_async,
+                  "late_frac": [], "stale_folds": []} for name in ARMS}
+    targets = []
+    for seed in seeds:
+        profile = make_profile("tiered", n_clients, seed=seed)
+        target = None
+        for name, mk in ARMS.items():
+            rounds = rounds_sync if name == "sync" else rounds_async
+            tr = make_trainer(n_clients, seed, profile=profile,
+                              async_cfg=mk(deadline_q))
+            tr.run_scanned(rounds, verbose=False)
+            accs = np.array([lg.accuracy for lg in tr.history])
+            if name == "sync":
+                target = float(accs[-1])
+                targets.append(target)
+            a = out[name]
+            a["final_acc"].append(float(accs.max()))
+            a["sim_time"].append(tr.simulated_time())
+            a["t_to_target"].append(tr.wallclock_to_accuracy(target))
+            sel = sum(lg.n_selected for lg in tr.history)
+            a["late_frac"].append(
+                sum(lg.n_late for lg in tr.history) / max(sel, 1))
+            a["stale_folds"].append(sum(lg.n_stale for lg in tr.history))
+            if verbose:
+                print(f"  seed {seed} {name:18s} acc {accs.max():.3f} "
+                      f"target {target:.3f} "
+                      f"t_to_target {a['t_to_target'][-1]}")
+    return out, targets
+
+
+def run_overhead_pair(n_clients, rounds, reps=3):
+    """Host wall-clock of the fused scan: async machinery (track_time,
+    infinite deadline — the same physics) vs the legacy program, on the
+    homogeneous uniform fleet. Interleaved best-of-reps timing."""
+    profile = make_profile("uniform", n_clients)
+    tr_legacy = make_trainer(n_clients, 0, profile=profile)
+    tr_async = make_trainer(n_clients, 0, profile=profile,
+                            async_cfg=AsyncConfig(track_time=True))
+    for tr in (tr_legacy, tr_async):      # compile + calibrate
+        tr.run_scanned(rounds, verbose=False)
+    best = {"legacy": float("inf"), "async": float("inf")}
+    for _ in range(reps):
+        for name, tr in (("legacy", tr_legacy), ("async", tr_async)):
+            t0 = time.perf_counter()
+            tr.run_scanned(rounds, verbose=False)
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return {
+        "rounds": rounds,
+        "legacy_rounds_per_sec": round(rounds / best["legacy"], 2),
+        "async_rounds_per_sec": round(rounds / best["async"], 2),
+        "overhead_pct": round(100.0 * (best["async"] / best["legacy"] - 1.0),
+                              2),
+    }
+
+
+def _mean(vals):
+    vals = [v for v in vals if v is not None]
+    return round(float(np.mean(vals)), 6) if vals else None
+
+
+def bench(n_clients=50, rounds_sync=30, rounds_async=60, seeds=(0, 1, 2),
+          deadline_q=0.6, overhead_rounds=30, verbose=True):
+    arms, targets = run_accuracy_arms(n_clients, rounds_sync, rounds_async,
+                                      seeds, deadline_q, verbose=verbose)
+    res = {
+        "workload": "softmax tiered-fleet / fairenergy",
+        "n_clients": n_clients, "seeds": list(seeds),
+        "deadline_q": deadline_q,
+        "rounds_sync": rounds_sync, "rounds_async": rounds_async,
+        "target_acc_per_seed": [round(t, 4) for t in targets],
+        "arms": {},
+    }
+    for name, a in arms.items():
+        reached = [t for t in a["t_to_target"] if t is not None]
+        res["arms"][name] = {
+            "rounds": a["rounds"],
+            "best_acc_mean": _mean(a["final_acc"]),
+            "best_acc_std": round(float(np.std(a["final_acc"])), 6),
+            "simulated_time_s_mean": _mean(a["sim_time"]),
+            "wallclock_to_target_s": [None if t is None else round(t, 4)
+                                      for t in a["t_to_target"]],
+            "wallclock_to_target_s_mean": _mean(a["t_to_target"]),
+            "n_seeds_reached_target": len(reached),
+            "late_fraction_mean": _mean(a["late_frac"]),
+            "stale_folds_mean": _mean(a["stale_folds"]),
+        }
+    sync_t = res["arms"]["sync"]["wallclock_to_target_s_mean"]
+    for name in ("deadline", "deadline_staleness"):
+        t = res["arms"][name]["wallclock_to_target_s_mean"]
+        res["arms"][name]["speedup_vs_sync"] = (
+            round(sync_t / t, 2) if t and sync_t else None)
+    res["overhead_uniform"] = run_overhead_pair(n_clients, overhead_rounds)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: tiny fleet / 1 seed, result not "
+                         "meaningful")
+    ap.add_argument("--clients", type=int, default=50)
+    ap.add_argument("--rounds", type=int, default=30,
+                    help="sync-arm rounds (async arms run 2x)")
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--deadline-q", type=float, default=0.6)
+    ap.add_argument("--out", default=os.path.join(REPO_ROOT,
+                                                  "BENCH_async_engine.json"))
+    a = ap.parse_args()
+    if a.fast:
+        res = bench(n_clients=8, rounds_sync=4, rounds_async=8, seeds=(0,),
+                    overhead_rounds=4, verbose=False)
+    else:
+        res = bench(n_clients=a.clients, rounds_sync=a.rounds,
+                    rounds_async=2 * a.rounds,
+                    seeds=tuple(range(a.seeds)), deadline_q=a.deadline_q)
+    print(json.dumps(res, indent=1))
+    if not a.fast:
+        with open(a.out, "w") as f:
+            json.dump(res, f, indent=1)
+            f.write("\n")
+        print(f"wrote {a.out}")
+
+
+if __name__ == "__main__":
+    main()

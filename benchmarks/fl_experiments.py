@@ -29,15 +29,24 @@ DATA_KW = dict(confusion=0.55, label_noise=0.05, noise=0.9)
 
 
 def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
-          lr=0.05, local_steps=2, mesh=None, scenario=None):
+          lr=0.05, local_steps=2, mesh=None, scenario=None,
+          deadline=None, staleness_a=None):
     cfg = CNN_FULL
     scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
     beta = scn.beta(0.3) if scn else 0.3
     ch_cfg = ChannelConfig(n_clients=n_clients)
     profile = None
+    async_cfg = None
     if scn:
         ch_cfg = scn.apply_channel(ch_cfg)
         profile = scn.device_profile(n_clients, seed=seed)
+        async_cfg = scn.async_config(deadline_s=deadline,
+                                     staleness_a=staleness_a)
+    elif deadline is not None:
+        from repro.core.rounds import AsyncConfig
+        async_cfg = AsyncConfig(deadline_s=deadline,
+                                staleness_a=staleness_a
+                                if staleness_a is not None else 0.5)
     imgs, labels = make_fmnist_like(n_train, seed=seed, **DATA_KW)
     ti, tl = make_fmnist_like(n_test, seed=seed + 999,
                               **dict(DATA_KW, label_noise=0.0))
@@ -61,7 +70,7 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
                                 fl_cfg=fl_cfg, fe_cfg=FairEnergyConfig(),
                                 ch_cfg=ch_cfg, controller=controller,
                                 seed=seed, mesh=mesh, device_profile=profile,
-                                **kw)
+                                async_cfg=async_cfg, **kw)
     return make, fl_cfg
 
 
@@ -120,6 +129,12 @@ def run_all(n_clients=20, rounds=60, target=0.80, seed=0, verbose=True,
             "mean_selected": float(np.mean([lg.n_selected for lg in tr.history])),
             "mean_gamma": tr.mean_gamma_selected(),
         }
+        if tr.history and tr.history[0].t_round is not None:
+            results["strategies"][name].update(
+                simulated_time_s=tr.simulated_time(),
+                wallclock_to_target_s=tr.wallclock_to_accuracy(target),
+                n_late=int(sum(lg.n_late for lg in tr.history)),
+                n_stale=int(sum(lg.n_stale for lg in tr.history)))
 
     if sweep_seeds:
         sweep = {"seeds": [int(s) for s in sweep_seeds], "strategies": {}}
@@ -253,7 +268,17 @@ if __name__ == "__main__":
     ap.add_argument("--scenario", default=None,
                     choices=available_scenarios(),
                     help="named scenario preset (repro.scenarios): device "
-                         "fleet + batteries + data skew + channel knobs")
+                         "fleet + batteries + data skew + channel + async-"
+                         "round knobs")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="round deadline T_round in seconds "
+                         "(repro.core.rounds): selected clients past it are "
+                         "dropped from the aggregate; overrides the "
+                         "scenario's preset deadline")
+    ap.add_argument("--staleness-a", type=float, default=None,
+                    help="staleness decay exponent a in w(tau)=(1+tau)^-a "
+                         "(only takes effect when the scenario buffers late "
+                         "updates, e.g. --scenario straggler)")
     ap.add_argument("--shard-clients", action="store_true",
                     help="run the fused engine sharded over a `clients` "
                          "mesh spanning all visible devices (force multiple "
@@ -281,6 +306,7 @@ if __name__ == "__main__":
         print(f"config sweep: {len(lanes)} lanes over {keys}")
     kw = dict(out=a.out, extra_baselines=a.extra_baselines,
               eval_every=a.eval_every, mesh=mesh, scenario=a.scenario,
+              deadline=a.deadline, staleness_a=a.staleness_a,
               sweep_seeds=list(range(a.seeds)) if a.seeds else None,
               config_sweep=config_sweep)
     if a.paper:

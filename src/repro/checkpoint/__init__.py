@@ -1,4 +1,6 @@
 """npz-based pytree checkpointing (no orbax offline)."""
-from .ckpt import save_checkpoint, restore_checkpoint, latest_checkpoint
+from .ckpt import (save_checkpoint, restore_checkpoint, latest_checkpoint,
+                   load_metadata)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_checkpoint"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_checkpoint",
+           "load_metadata"]

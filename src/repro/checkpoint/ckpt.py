@@ -40,6 +40,14 @@ def restore_checkpoint(path: str, like_tree):
     return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
 
 
+def load_metadata(path: str) -> dict:
+    """The ``metadata`` dict a checkpoint was saved with ({} if none)."""
+    with np.load(path, allow_pickle=False) as data:
+        if "__meta__" not in data.files:
+            return {}
+        return json.loads(str(data["__meta__"]))
+
+
 def latest_checkpoint(directory: str) -> str | None:
     if not os.path.isdir(directory):
         return None

@@ -69,7 +69,15 @@ def payload_bits(gamma: Array, s_bits: float, i_bits: float) -> Array:
 
 def comm_time(gamma: Array, B: Array, P: Array, h: Array, s_bits: float,
               i_bits: float, n0: float = THERMAL_N0) -> Array:
-    return payload_bits(gamma, s_bits, i_bits) / jnp.maximum(shannon_rate(B, P, h, n0), RATE_EPS)
+    """Seconds to push the payload. ``inf`` below the bandwidth floor:
+    ``shannon_rate`` clamps B to 1 Hz, so a near-zero allocation used to
+    report the finite-but-absurd 1 Hz transmission time — long enough to
+    be meaningless, short enough to slip past sanity checks. A sub-floor
+    allocation cannot transmit; deadline logic drops such clients
+    (``repro.core.rounds``)."""
+    t = payload_bits(gamma, s_bits, i_bits) / \
+        jnp.maximum(shannon_rate(B, P, h, n0), RATE_EPS)
+    return jnp.where(jnp.asarray(B) >= RATE_B_FLOOR_HZ, t, jnp.inf)
 
 
 def comm_energy(gamma: Array, B: Array, P: Array, h: Array, s_bits: float,

@@ -44,9 +44,14 @@ class RoundObservation(NamedTuple):
     P: Array          # [N] — transmit powers P_i
     round: Array      # scalar int32 — round index r
     key: Array        # PRNG key for this round (stochastic controllers)
-    alive: Any = None  # [N] bool — battery not depleted (None = all alive).
-    #                    Controllers SHOULD avoid selecting dead clients;
-    #                    the round engine hard-masks them regardless.
+    alive: Any = None  # [N] bool — battery not depleted AND deadline-
+    #                    feasible (None = all alive). Controllers SHOULD
+    #                    avoid selecting dead clients; the round engine
+    #                    hard-masks them regardless.
+    t_round: Any = None  # [N] f32 — best-case round time (comp + minimum-
+    #                      payload comm at full bandwidth), seconds; only
+    #                      set by the async engine (repro.core.rounds).
+    #                      None = untimed (legacy) rounds.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -177,9 +182,12 @@ def masked_decision(x: Array, gamma: Array, bandwidth: Array,
     """Assemble a ``RoundDecision`` from raw (x, gamma, B) arrays: charges
     E_i = P_i (gamma_i S + I)/R_i(B_i) + E_cmp,i on selected clients
     (the computation term is zero without a device profile), zeroes
-    gamma/B/E elsewhere."""
+    gamma/B/E elsewhere. Unselected rows are priced at B_tot before the
+    mask: ``comm_energy`` is ``inf`` below the 1 Hz bandwidth floor, and
+    ``inf * 0`` would poison the masked energies with NaN."""
     xf = x.astype(jnp.float32)
-    energy = xf * (comm_energy(jnp.asarray(gamma), jnp.asarray(bandwidth),
+    b_safe = jnp.where(x, jnp.asarray(bandwidth), ctx.b_tot)
+    energy = xf * (comm_energy(jnp.asarray(gamma), b_safe,
                                obs.P, obs.h, ctx.s_bits, ctx.i_bits, ctx.n0)
                    + ctx.e_cmp_array())
     return RoundDecision(x=x, gamma=jnp.asarray(gamma) * xf,

@@ -1,0 +1,44 @@
+"""Asynchronous round subsystem: deadlines, staleness, harvesting.
+
+The bulk-synchronous engine (``repro.fl.server``) closes a round only
+when every selected client has returned — one straggler defines round
+latency, and a depleted client vanishes forever. This package makes
+*time* a first-class simulated quantity (Arouj et al., arXiv:2208.04505;
+BEFL, arXiv:2412.03950):
+
+* **Round deadlines** (``timing``): a configurable per-round deadline
+  ``T_round``. Selected clients whose ``comp_time + comm_time`` exceeds
+  it are dropped from the round's aggregate and charged only the energy
+  spent up to the deadline — computation first, then prorated
+  communication (``partial_round_energy``). The engine reports the
+  simulated wall-clock of each round, ``max(selected comp+comm)`` capped
+  at the deadline, so benchmarks can score *wall-clock-per-accuracy*.
+
+* **Staleness-weighted buffered aggregation** (``staleness``): with
+  ``staleness=True`` a late update is not discarded — it keeps
+  transmitting in the background, is buffered in the scan carry
+  (``AsyncState``: a ``[N, D]`` stale-update buffer with per-client age
+  and remaining transmission time, shard-local under the clients mesh),
+  and folds into the first round that closes after its transmission
+  completes, discounted by the FedAsync-style polynomial decay
+  ``w(tau) = 1 / (1 + tau)^a`` (``staleness_weight``).
+
+* **Energy harvesting** (``harvest``): batteries recharge between rounds
+  via a (seed, round)-pure exponential draw whose mean scales with the
+  device tier, so depleted clients can *return* instead of dropping out
+  permanently.
+
+Controllers see time through ``RoundObservation.t_round`` (each client's
+best-case round time); the engine prices deadline-infeasible clients out
+via the same hard ``alive`` mask used for depleted batteries — the
+FairEnergy bandwidth best-response is untouched. ``AsyncConfig`` gathers
+the knobs; with the default config (``enabled == False``) the engine
+builds the *exact* legacy program, so synchronous trajectories are
+reproduced bit-for-bit (pinned by ``tests/test_async_rounds.py``).
+"""
+from .config import AsyncConfig, resolve_deadline  # noqa: F401
+from .harvest import apply_harvest, harvest_draw, harvest_rates  # noqa: F401
+from .staleness import (AsyncState, init_async_state,  # noqa: F401
+                        staleness_weight)
+from .timing import (best_case_round_time, partial_round_energy,  # noqa: F401
+                     round_wall_clock)

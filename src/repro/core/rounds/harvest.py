@@ -1,0 +1,48 @@
+"""Energy harvesting: (seed, round)-pure battery recharge between rounds.
+
+Each round, client i harvests ``rate_i * Exp(1)`` Joules — an
+exponential draw (solar/RF-style bursty arrivals) whose per-client mean
+``rate_i`` scales with the device tier: faster CPUs ship with bigger
+panels/coils, so ``harvest_rates`` apportions the configured fleet-mean
+``harvest_j`` proportionally to CPU frequency. The draw folds the round
+index into a dedicated PRNG stream (``repro.fl.server`` derives it from
+the per-seed base key), so resuming or re-running a round harvests the
+identical energy — same purity contract as fading and batch sampling.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+def harvest_rates(profile, n: int, mean_j: float) -> Array:
+    """[n] f32 per-client mean harvest (J/round), fleet mean ``mean_j``.
+
+    With a ``DeviceProfile`` the means are proportional to CPU frequency
+    (tier-scaled harvesting); without one the fleet is homogeneous.
+    Deterministic — no rng stream."""
+    if profile is None:
+        return jnp.full((n,), mean_j, jnp.float32)
+    freq = np.asarray(profile.freq, np.float64)
+    return jnp.asarray(mean_j * freq / freq.mean(), jnp.float32)
+
+
+def harvest_draw(key: Array, round_idx, rates: Array) -> Array:
+    """[n] J harvested after round ``round_idx`` — pure in (key, round):
+    ``fold_in`` then an exponential draw scaled by the per-client mean."""
+    rkey = jax.random.fold_in(key, round_idx)
+    return rates * jax.random.exponential(rkey, rates.shape, jnp.float32)
+
+
+def apply_harvest(battery: Array, cap: Array, key: Array, round_idx,
+                  rates: Optional[Array]) -> Array:
+    """Recharge ``battery`` by the round's draw, clipped at capacity
+    ``cap`` (inf-capacity clients stay inf). ``rates=None`` is a no-op."""
+    if rates is None:
+        return battery
+    return jnp.minimum(battery + harvest_draw(key, round_idx, rates), cap)

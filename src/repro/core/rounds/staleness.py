@@ -1,0 +1,54 @@
+"""Staleness-weighted buffered aggregation (FedAsync-style).
+
+A client that misses the round deadline keeps transmitting in the
+background. Its sparsified update sits in ``AsyncState`` — a per-client
+one-slot buffer carried through the ``lax.scan`` — until the simulated
+wall-clock has advanced past its remaining transmission time, then folds
+into that round's weighted aggregate with the polynomial staleness
+discount ``w(tau) = 1 / (1 + tau)^a`` (Xie et al., FedAsync,
+arXiv:1903.03934). One slot per client: a newer late update from the
+same client overwrites the older one (the stale gradient it replaces is
+even staler).
+
+Under the clients mesh the buffer rows are shard-local — exactly like
+the ``[N, D]`` update/sparsify buffers — so no gather ever materializes
+the full stale matrix.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+#: age value marking an empty buffer slot
+EMPTY_AGE = jnp.int32(-1)
+
+
+class AsyncState(NamedTuple):
+    """Scan-carried stale-update buffer ([n] = padded client count).
+
+    buf:   [n, D] sparsified late updates (zeros where empty)
+    age:   [n] int32 rounds since the update was computed; -1 = empty
+    t_rem: [n] f32 remaining background-transmission seconds
+    """
+    buf: Array
+    age: Array
+    t_rem: Array
+
+
+def init_async_state(n: int, d: int) -> AsyncState:
+    """Empty buffer for ``n`` (padded) clients and flat dimension ``d``."""
+    return AsyncState(buf=jnp.zeros((n, d), jnp.float32),
+                      age=jnp.full((n,), EMPTY_AGE, jnp.int32),
+                      t_rem=jnp.zeros((n,), jnp.float32))
+
+
+def staleness_weight(age: Array, a: float) -> Array:
+    """w(tau) = 1/(1+tau)^a in (0, 1]: 1 at tau=0, monotonically decaying
+    with age; a=0 disables the discount. ``age`` is clipped at 0 so the
+    -1 empty-slot sentinel cannot inflate the weight (empty slots are
+    masked out of the fold anyway)."""
+    tau = jnp.maximum(age, 0).astype(jnp.float32)
+    return (1.0 + tau) ** jnp.float32(-a)

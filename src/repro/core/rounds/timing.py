@@ -1,0 +1,50 @@
+"""Round timing: feasibility, partial energy, and simulated wall-clock.
+
+All functions are jnp and broadcast over clients; ``comm_time`` comes
+from ``repro.core.channel`` and returns ``inf`` below the 1 Hz bandwidth
+floor, so a zero-bandwidth client is deadline-infeasible by construction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..channel import comm_time
+
+Array = jnp.ndarray
+
+
+def best_case_round_time(t_cmp: Array, P: Array, h: Array, *, b_tot: float,
+                         gamma_floor: float, s_bits: float, i_bits: float,
+                         n0: float) -> Array:
+    """[N] s: each client's *best-case* round time — computation plus the
+    minimum-payload (gamma = gamma_floor) transmission at the full
+    bandwidth budget. A client whose best case already exceeds the
+    deadline cannot make the round under ANY allocation, so the engine
+    feeds ``t <= deadline`` into the observation's hard ``alive`` mask
+    and controllers never spend budget on it."""
+    return t_cmp + comm_time(jnp.float32(gamma_floor), jnp.float32(b_tot),
+                             P, h, s_bits, i_bits, n0)
+
+
+def partial_round_energy(t_cmp: Array, t_comm: Array, e_cmp: Array,
+                         P: Array, deadline: float) -> Array:
+    """[N] J spent by round close at ``deadline``: computation first
+    (prorated if the deadline lands mid-compute), then transmission at
+    power P for whatever remains of the window. Equals the full round
+    energy ``e_cmp + P * t_comm`` once ``deadline >= t_cmp + t_comm``;
+    instantaneous computation (t_cmp = 0) counts as completed."""
+    cmp_frac = jnp.where(t_cmp > 0.0,
+                         jnp.clip(deadline / jnp.maximum(t_cmp, 1e-30),
+                                  0.0, 1.0), 1.0)
+    t_tx = jnp.clip(deadline - t_cmp, 0.0, t_comm)
+    # inf * 0 guard: an infinite t_comm (sub-floor bandwidth) clips to
+    # the finite window, so the product below is always well-defined
+    return e_cmp * cmp_frac + P * t_tx
+
+
+def round_wall_clock(x: Array, t_total: Array, deadline: float) -> Array:
+    """Scalar s: the simulated duration of a round — the slowest selected
+    client's comp+comm, capped at the deadline (the server closes the
+    round there regardless). 0.0 when nobody is selected."""
+    slowest = jnp.max(jnp.where(x, t_total, 0.0))
+    return jnp.minimum(slowest, deadline).astype(jnp.float32)

@@ -59,17 +59,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.channel import WirelessNetwork, round_gains
+from repro.checkpoint import ckpt as _ckpt
+from repro.core.channel import WirelessNetwork, comm_time, round_gains
 from repro.core.controllers import (Controller, ControllerContext,
                                     RoundObservation, make_controller)
-from repro.core.energy import UNLIMITED_J, alive_mask, comp_energy
+from repro.core.energy import (UNLIMITED_J, alive_mask, comp_energy,
+                               comp_time)
+from repro.core.rounds import (AsyncConfig, AsyncState, apply_harvest,
+                               best_case_round_time, harvest_rates,
+                               init_async_state, partial_round_energy,
+                               resolve_deadline, round_wall_clock,
+                               staleness_weight)
 from repro.data.pipeline import (client_sample_keys, sample_client_batches,
                                  sample_round_batches, stack_client_datasets)
 from repro.fl import compression
 from repro.fl.client import make_batched_client_step
 from repro.fl.updates import tree_spec, unflatten_update
-from repro.sharding.fl import (CLIENTS_AXIS, clients_axis_size,
-                               replicated_specs, shard_client_data)
+from repro.sharding.fl import (CLIENTS_AXIS, async_state_specs,
+                               clients_axis_size, replicated_specs,
+                               shard_client_data)
 
 
 # PRNG stream tags (folded into the per-seed base key): far above any
@@ -77,6 +85,7 @@ from repro.sharding.fl import (CLIENTS_AXIS, clients_axis_size,
 # never collide with another stream's base key
 _CTRL_STREAM = 1 << 20
 _SAMPLE_STREAM = 2 << 20
+_HARVEST_STREAM = 3 << 20
 
 
 @dataclasses.dataclass
@@ -91,10 +100,39 @@ class RoundLog:
     n_selected: int
     battery: Optional[np.ndarray] = None  # J per client after the round
     #                                       (inf = unlimited)
+    # --- async-round fields (None on untimed / legacy runs) -------------
+    t_round: Optional[float] = None       # simulated wall-clock of this
+    #                                       round (s): slowest selected
+    #                                       comp+comm, capped at T_round
+    made: Optional[np.ndarray] = None     # [N] bool — selected AND inside
+    #                                       the deadline (aggregated)
+    n_late: Optional[int] = None          # selected clients past deadline
+    n_stale: Optional[int] = None         # buffered updates folded in
 
     @property
     def total_energy(self) -> float:
         return float(self.energy.sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class _AsyncRuntime:
+    """Engine-facing bundle of the resolved async-round quantities
+    (``repro.core.rounds.AsyncConfig`` plus the trainer's per-client
+    arrays): closed over by the round core, never traced as an operand.
+    ``deadline`` is the concrete T_round in seconds (``deadline_q``
+    already resolved); ``rates=None`` disables harvesting."""
+    deadline: float
+    staleness: bool
+    staleness_a: float
+    t_cmp: jnp.ndarray            # [n_real] s computation time
+    e_cmp: jnp.ndarray            # [n_real] J computation energy
+    cap: jnp.ndarray              # [n_real] J battery capacity (inf ok)
+    rates: Optional[jnp.ndarray]  # [n_real] J/round mean harvest, or None
+    b_tot: float
+    gamma_floor: float
+    s_bits: float
+    i_bits: float
+    n0: float
 
 
 def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
@@ -102,7 +140,8 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                      block: int = compression.DEFAULT_BLOCK,
                      skip_full_sparsify: bool = True,
                      shard_axis: Optional[str] = None,
-                     n_real: Optional[int] = None):
+                     n_real: Optional[int] = None,
+                     async_rt: Optional[_AsyncRuntime] = None):
     """Pure decide -> sparsify -> aggregate -> apply round body.
 
     Closes over the controller (its ``decide`` must be traceable), the
@@ -132,22 +171,57 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
     (comm + comp; inf capacity never depletes). When ``battery`` is
     passed the core returns a 4-tuple ``(params, dec, state, battery)``;
     without it, the legacy 3-tuple.
+
+    ``async_rt`` (an ``_AsyncRuntime``, requires ``battery``) activates
+    the time-aware round model (``repro.core.rounds``): deadline-
+    infeasible clients join the hard ``alive`` mask, selected clients
+    whose realized comp+comm exceeds the deadline are dropped from the
+    aggregate (charged partial energy — or full, with staleness, since
+    their transmission completes in the background and lands in the
+    ``astate`` stale buffer), batteries recharge via the harvesting
+    draw, and the core returns ``(params, dec, state, battery, astate,
+    extras)`` with ``extras = dict(t_wall, made, n_late, n_stale)``.
+    When ``async_rt is None`` the emitted program is *identical* to the
+    legacy one — the backward-compat contract the goldens pin.
     """
     sharded = shard_axis is not None
     n_pad = int(weights.shape[0])
 
+    def _local(vec, fill, i0, n_local):
+        """Pad an [n_real] vector with ghost rows and slice this shard's
+        chunk (identity layout when unsharded: n_pad == n_real, i0 = 0)."""
+        return jax.lax.dynamic_slice_in_dim(
+            jnp.pad(vec, (0, n_pad - n_real), constant_values=fill),
+            i0, n_local)
+
     def core(params, updates, u_norms, h, P, r, key, ctrl_state,
-             battery=None):
+             battery=None, astate=None, hkey=None):
+        if async_rt is not None and battery is None:
+            raise ValueError("the async round model needs the battery "
+                             "carry (pass battery=jnp.full(n, inf) for "
+                             "unlimited capacities)")
         if sharded:
             n_local = u_norms.shape[0]
             i0 = jax.lax.axis_index(shard_axis) * n_local
             obs_norms = jax.lax.all_gather(u_norms, shard_axis,
                                            tiled=True)[:n_real]
         else:
+            n_local = u_norms.shape[0]
+            i0 = jnp.int32(0)
             obs_norms = u_norms
         alive = alive_mask(battery) if battery is not None else None
+        t_obs = None
+        if async_rt is not None:
+            # best-case round time: a client that cannot make the deadline
+            # under ANY allocation is priced out through the same hard
+            # mask as a depleted battery — controllers stay unchanged
+            t_obs = best_case_round_time(
+                async_rt.t_cmp, P, h, b_tot=async_rt.b_tot,
+                gamma_floor=async_rt.gamma_floor, s_bits=async_rt.s_bits,
+                i_bits=async_rt.i_bits, n0=async_rt.n0)
+            alive = alive & (t_obs <= async_rt.deadline)
         obs = RoundObservation(u_norms=obs_norms, h=h, P=P, round=r, key=key,
-                               alive=alive)
+                               alive=alive, t_round=t_obs)
         dec, new_state = controller.decide(obs, ctrl_state)
         if battery is not None:
             # hard mask, whatever the controller decided: a depleted
@@ -158,24 +232,55 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                                bandwidth=dec.bandwidth * mf,
                                energy=dec.energy * mf,
                                bw_used=jnp.sum(dec.bandwidth * mf))
-            # debit the round's spend; the depleting transmission is
-            # allowed to finish (brownout), charge floors at 0 so the
-            # carried state stays in [0, capacity] (inf stays inf)
-            battery = jnp.maximum(battery - dec.energy, 0.0)
+            if async_rt is None:
+                # debit the round's spend; the depleting transmission is
+                # allowed to finish (brownout), charge floors at 0 so the
+                # carried state stays in [0, capacity] (inf stays inf)
+                battery = jnp.maximum(battery - dec.energy, 0.0)
 
-        xf = dec.x.astype(jnp.float32)
+        made = late = extras = None
+        if async_rt is not None:
+            # realized per-client round time under the controller's actual
+            # allocation (comm_time is inf on unselected B=0 rows — only
+            # ever read through the selection mask)
+            t_comm = comm_time(dec.gamma, dec.bandwidth, P, h,
+                               async_rt.s_bits, async_rt.i_bits, async_rt.n0)
+            t_total = async_rt.t_cmp + t_comm
+            made = dec.x & (t_total <= async_rt.deadline)
+            late = dec.x & ~made
+            if not async_rt.staleness:
+                # a dropped update is abandoned at the deadline: charge
+                # computation first, then the prorated transmission (the
+                # minimum() keeps partial <= full under fp rounding)
+                e_part = partial_round_energy(async_rt.t_cmp, t_comm,
+                                              async_rt.e_cmp, P,
+                                              async_rt.deadline)
+                dec = dec._replace(energy=jnp.where(
+                    made, dec.energy,
+                    jnp.where(late, jnp.minimum(e_part, dec.energy), 0.0)))
+            # with staleness the transmission completes in the background,
+            # so late clients pay their full round energy
+            battery = jnp.maximum(battery - dec.energy, 0.0)
+            battery = apply_harvest(battery, async_rt.cap, hkey, r,
+                                    async_rt.rates)
+            t_wall = round_wall_clock(dec.x, t_total, async_rt.deadline)
+            extras = dict(t_wall=t_wall, made=made,
+                          n_late=jnp.sum(late.astype(jnp.int32)),
+                          n_stale=jnp.int32(0))
+
+        # only clients inside the deadline enter this round's aggregate
+        xf = (made if made is not None else dec.x).astype(jnp.float32)
         # unselected rows carry zero aggregation weight, so their sparsity
         # level is irrelevant — treat them as gamma=1 so full-precision
-        # rounds (every *selected* gamma == 1) skip the sparsify pass
+        # rounds (every *selected* gamma == 1) skip the sparsify pass;
+        # late rows keep their gamma: the buffered update must be the
+        # sparsified payload the client actually transmits
         gamma = jnp.where(dec.x, jnp.clip(dec.gamma, 1e-6, 1.0), 1.0)
         if sharded:
             # ghost rows: never selected (x=0), gamma=1 keeps the skip-full
             # fast path available; then take this shard's local chunk
-            xf = jax.lax.dynamic_slice_in_dim(
-                jnp.pad(xf, (0, n_pad - n_real)), i0, n_local)
-            gamma = jax.lax.dynamic_slice_in_dim(
-                jnp.pad(gamma, (0, n_pad - n_real), constant_values=1.0),
-                i0, n_local)
+            xf = _local(xf, 0.0, i0, n_local)
+            gamma = _local(gamma, 1.0, i0, n_local)
             w_data = jax.lax.dynamic_slice_in_dim(weights, i0, n_local)
         else:
             w_data = weights
@@ -185,6 +290,35 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
         w = xf * w_data                                         # [N | n_local]
         wsum = jnp.sum(w)
         partial = w @ sparse                                    # [D]
+        if async_rt is not None and async_rt.staleness:
+            # ---- staleness-weighted buffered aggregation (shard-local):
+            # age the pending slots by this round's wall-clock, fold the
+            # ones whose background transmission has completed into the
+            # aggregate with the w(tau) discount, then buffer this
+            # round's late updates (one slot per client — a newer late
+            # update replaces an older, staler one)
+            buf, age, t_rem = astate
+            pending = age >= 0
+            age = jnp.where(pending, age + 1, age)
+            t_rem = jnp.where(pending, t_rem - extras["t_wall"], t_rem)
+            ready = pending & (t_rem <= 0.0)
+            w_stale = (w_data * staleness_weight(age, async_rt.staleness_a)
+                       * ready.astype(jnp.float32))
+            wsum = wsum + jnp.sum(w_stale)
+            partial = partial + w_stale @ buf
+            late_l = _local(late.astype(jnp.float32), 0.0, i0, n_local) > 0.0 \
+                if sharded else late
+            t_new = jnp.clip(t_total - async_rt.deadline, 0.0, None)
+            t_new_l = _local(t_new, 0.0, i0, n_local) if sharded else t_new
+            buf = jnp.where(late_l[:, None], sparse, buf)
+            age = jnp.where(late_l, 0, jnp.where(ready, -1, age))
+            t_rem = jnp.where(late_l, t_new_l,
+                              jnp.where(ready, 0.0, t_rem))
+            astate = AsyncState(buf=buf, age=age, t_rem=t_rem)
+            n_stale = jnp.sum(ready.astype(jnp.int32))
+            if sharded:
+                n_stale = jax.lax.psum(n_stale, shard_axis)
+            extras["n_stale"] = n_stale
         if sharded:
             wsum = jax.lax.psum(wsum, shard_axis)
             partial = jax.lax.psum(partial, shard_axis)
@@ -193,6 +327,8 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
         delta_tree = unflatten_update(agg, spec)
         new_params = jax.tree_util.tree_map(
             lambda p, d: p + d.astype(p.dtype), params, delta_tree)
+        if async_rt is not None:
+            return new_params, dec, new_state, battery, astate, extras
         if battery is not None:
             return new_params, dec, new_state, battery
         return new_params, dec, new_state
@@ -217,23 +353,29 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                      local_steps: int, batch: int, use_pallas: bool = False,
                      block: int = compression.DEFAULT_BLOCK, unroll: int = 1,
                      mesh=None, mesh_axis: str = CLIENTS_AXIS,
-                     n_real: Optional[int] = None):
+                     n_real: Optional[int] = None,
+                     async_rt: Optional[_AsyncRuntime] = None):
     """Builds the fused multi-round scan program.
 
-    Returns ``scan_fn(params, ctrl_state, battery, data, keys,
+    Returns ``scan_fn(params, ctrl_state, battery, astate, data, keys,
     start_round, last_round, eval_every, n_rounds)`` executing
     ``n_rounds`` (static) FL rounds as one ``lax.scan``: traced fading +
     batch sampling + client vmap step + decide/sparsify/aggregate/apply
     + battery debit + strided eval. ``battery`` is the [n_real]
     per-client charge (J) carried across rounds — pass
     ``jnp.full(n, inf)`` for the unlimited (legacy) physics, which is
-    bit-identical to the battery-free engine. ``keys`` is
-    ``dict(fade=..., sample=..., ctrl=...)`` PRNG keys; ``eval_every``
-    is a traced int (accuracy is NaN on skipped rounds; the
-    ``last_round`` index is always evaluated). Outputs are stacked
-    per-round logs (including the per-round ``battery`` trace). Wrap in
-    ``jax.jit(..., static_argnames="n_rounds", donate_argnums=(0, 1,
-    2))`` — or ``vmap`` over ``keys`` for sweeps.
+    bit-identical to the battery-free engine. ``astate`` is the async
+    carry: ``()`` unless staleness buffering is on (then a
+    ``repro.core.rounds.AsyncState`` — shard-local under a mesh); an
+    empty ``()`` contributes no leaves, so the compiled program is the
+    legacy one. ``keys`` is ``dict(fade=..., sample=..., ctrl=...,
+    harvest=...)`` PRNG keys; ``eval_every`` is a traced int (accuracy
+    is NaN on skipped rounds; the ``last_round`` index is always
+    evaluated). Outputs are stacked per-round logs (including the
+    per-round ``battery`` trace, plus ``t_round``/``made``/``n_late``/
+    ``n_stale`` when ``async_rt`` is set). Wrap in ``jax.jit(...,
+    static_argnames="n_rounds", donate_argnums=(0, 1, 2, 3))`` — or
+    ``vmap`` over ``keys`` for sweeps.
 
     With ``mesh`` (a 1-D mesh carrying ``mesh_axis``), the whole scan is
     wrapped in ``shard_map``: ``data`` comes in sharded on its client
@@ -257,13 +399,14 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                 f"with pad_to_multiple={n_dev}")
     core = _make_round_core(controller=controller, spec=spec, weights=weights,
                             server_lr=server_lr, use_pallas=use_pallas,
-                            block=block, shard_axis=axis, n_real=n_real)
+                            block=block, shard_axis=axis, n_real=n_real,
+                            async_rt=async_rt)
 
     n_pad_keys = int(weights.shape[0])
     n_real_keys = n_real if n_real is not None else n_pad_keys
 
-    def scan_body(params, ctrl_state, battery, data, keys, start_round,
-                  last_round, eval_every, n_rounds: int):
+    def scan_body(params, ctrl_state, battery, astate, data, keys,
+                  start_round, last_round, eval_every, n_rounds: int):
         n_local = data.lengths.shape[0]             # per-shard when sharded
         if sharded:
             i0 = jax.lax.axis_index(mesh_axis) * n_local
@@ -271,7 +414,7 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
             i0 = jnp.int32(0)
 
         def step(carry, r):
-            p, state, batt = carry
+            p, state, batt, ast = carry
             h = round_gains(keys["fade"], pathloss, r, rayleigh)
             # every shard derives the full (tiny) per-client key set —
             # real clients keep the unpadded split stream — and slices
@@ -283,8 +426,13 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                                             local_steps, batch)
             updates, u_norms, losses = client_step(p, batches)
             ckey = jax.random.fold_in(keys["ctrl"], r)
-            p, dec, state, batt = core(p, updates, u_norms, h, P, r, ckey,
-                                       state, batt)
+            if async_rt is not None:
+                p, dec, state, batt, ast, extras = core(
+                    p, updates, u_norms, h, P, r, ckey, state, batt, ast,
+                    keys["harvest"])
+            else:
+                p, dec, state, batt = core(p, updates, u_norms, h, P, r,
+                                           ckey, state, batt)
             if sharded:
                 losses = jax.lax.all_gather(losses, mesh_axis,
                                             tiled=True)[:n_real]
@@ -295,12 +443,16 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
             out = dict(x=dec.x, gamma=dec.gamma, bandwidth=dec.bandwidth,
                        energy=dec.energy, accuracy=acc,
                        loss=jnp.mean(losses), battery=batt)
-            return (p, state, batt), out
+            if async_rt is not None:
+                out.update(t_round=extras["t_wall"], made=extras["made"],
+                           n_late=extras["n_late"],
+                           n_stale=extras["n_stale"])
+            return (p, state, batt, ast), out
 
         rs = start_round + jnp.arange(n_rounds, dtype=jnp.int32)
-        (params, ctrl_state, battery), outs = jax.lax.scan(
-            step, (params, ctrl_state, battery), rs, unroll=unroll)
-        return params, ctrl_state, battery, outs
+        (params, ctrl_state, battery, astate), outs = jax.lax.scan(
+            step, (params, ctrl_state, battery, astate), rs, unroll=unroll)
+        return params, ctrl_state, battery, astate, outs
 
     if not sharded:
         return scan_body
@@ -308,22 +460,24 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as PS
 
-    def scan_fn(params, ctrl_state, battery, data, keys, start_round,
+    def scan_fn(params, ctrl_state, battery, astate, data, keys, start_round,
                 last_round, eval_every, n_rounds: int):
         body = functools.partial(scan_body, n_rounds=n_rounds)
-        # only `data` is split (leading client axis); everything else —
-        # params, controller state, battery, keys, round bounds, stacked
-        # logs — is replicated. check_rep=False: the outputs *are*
-        # replicated (built from psum/all-gather results) but the static
-        # replication checker cannot see that through the scan carry.
+        # only `data` and the stale-update buffer are split (leading
+        # client axis); everything else — params, controller state,
+        # battery, keys, round bounds, stacked logs — is replicated.
+        # check_rep=False: the outputs *are* replicated (built from
+        # psum/all-gather results) but the static replication checker
+        # cannot see that through the scan carry.
+        ast_specs = async_state_specs(astate, mesh_axis)
         sharded_fn = shard_map(
             body, mesh=mesh,
             in_specs=(replicated_specs(params), replicated_specs(ctrl_state),
-                      PS(), PS(mesh_axis), PS(), PS(), PS(), PS()),
+                      PS(), ast_specs, PS(mesh_axis), PS(), PS(), PS(), PS()),
             out_specs=(replicated_specs(params), replicated_specs(ctrl_state),
-                       PS(), PS()),
+                       PS(), ast_specs, PS()),
             check_rep=False)
-        return sharded_fn(params, ctrl_state, battery, data, keys,
+        return sharded_fn(params, ctrl_state, battery, astate, data, keys,
                           start_round, last_round, eval_every)
 
     return scan_fn
@@ -359,6 +513,14 @@ class FederatedTrainer:
     ``repro.scenarios`` presets compose profiles with partition/channel
     knobs. Without a profile the legacy communication-only physics is
     reproduced bit-for-bit.
+
+    ``async_cfg``: a ``repro.core.rounds.AsyncConfig`` switches the
+    engine to time-aware rounds — deadline drops with partial energy,
+    optional staleness-weighted buffering of late updates (the stale
+    buffer rides in the scan carry, shard-local under a mesh), optional
+    battery harvesting, and per-round simulated wall-clock in the logs
+    (``RoundLog.t_round``). A disabled config (the default) compiles the
+    exact legacy program, so synchronous goldens hold bit-for-bit.
     """
 
     def __init__(self, *, model_loss, model_params, client_datasets,
@@ -369,7 +531,8 @@ class FederatedTrainer:
                  eco_gamma: float = 0.1, eco_bandwidth: Optional[float] = None,
                  use_pallas_compression: bool = False, seed: int = 0,
                  mesh=None, mesh_axis: str = CLIENTS_AXIS,
-                 device_profile=None):
+                 device_profile=None,
+                 async_cfg: Optional[AsyncConfig] = None):
         if strategy is not None:
             controller = strategy
         self.loss_fn = model_loss
@@ -415,6 +578,7 @@ class FederatedTrainer:
         base = jax.random.PRNGKey(seed)
         self.key = jax.random.fold_in(base, _CTRL_STREAM)       # controller
         self.sample_key = jax.random.fold_in(base, _SAMPLE_STREAM)
+        self.harvest_key = jax.random.fold_in(base, _HARVEST_STREAM)
         self._client_step_raw = make_batched_client_step(model_loss, fl_cfg.lr,
                                                          jit=False)
         self._client_step = jax.jit(self._client_step_raw)
@@ -445,7 +609,61 @@ class FederatedTrainer:
             self._battery0 = jnp.full((self.n_clients,), UNLIMITED_J,
                                       jnp.float32)
         self._battery = jnp.array(self._battery0)
+
+        # ---- async round model (repro.core.rounds) ---------------------
+        # a disabled config resolves to async_rt=None, and every engine
+        # below then builds the exact legacy program (the async carry is
+        # the leafless (), the harvest key is dead code)
+        self.async_cfg = async_cfg
+        self._async_rt = self._resolve_async_runtime(async_cfg, e_cmp, ctx)
+        self.deadline_s = (self._async_rt.deadline
+                           if self._async_rt is not None else float("inf"))
+        if self._async_rt is not None and self._async_rt.staleness:
+            self._astate0 = init_async_state(self.n_padded, self.n_params)
+        else:
+            self._astate0 = ()
+        self._astate = jax.tree_util.tree_map(jnp.array, self._astate0)
+        self._calibrated = False
         self.history: list[RoundLog] = []
+
+    def _resolve_async_runtime(self, cfg: Optional[AsyncConfig], e_cmp,
+                               ctx: ControllerContext):
+        """Materialize the engine-facing ``_AsyncRuntime`` (None when the
+        config is absent/disabled): per-client comp time/energy and
+        battery caps from the device profile, harvesting rates, and the
+        concrete deadline (``deadline_q`` resolved against deterministic
+        round-time estimates — pure in the trainer's geometry)."""
+        if cfg is None or not cfg.enabled:
+            return None
+        n = self.n_clients
+        if self.device_profile is not None:
+            t_cmp = jnp.asarray(
+                comp_time(self.device_profile,
+                          self.fl_cfg.local_steps * self.fl_cfg.local_batch),
+                jnp.float32)
+            cap = jnp.asarray(self.device_profile.battery, jnp.float32)
+        else:
+            t_cmp = jnp.zeros((n,), jnp.float32)
+            cap = jnp.full((n,), UNLIMITED_J, jnp.float32)
+        e_arr = (jnp.asarray(e_cmp, jnp.float32) if e_cmp is not None
+                 else jnp.zeros((n,), jnp.float32))
+        deadline = cfg.deadline_s
+        if cfg.deadline_q is not None:
+            deadline = resolve_deadline(
+                cfg.deadline_q, t_cmp=np.asarray(t_cmp),
+                P=self.network.power, h=self.network.pathloss,
+                b_tot=self.ch_cfg.bandwidth_total, s_bits=self.s_bits,
+                i_bits=self.i_bits, n0=self.ch_cfg.noise_density, k=ctx.k)
+        rates = None
+        if cfg.harvest_j is not None:
+            rates = harvest_rates(self.device_profile, n, cfg.harvest_j)
+        gamma_floor = getattr(self.fe_cfg, "gamma_min", 0.1) or 0.1
+        return _AsyncRuntime(
+            deadline=float(deadline), staleness=cfg.staleness,
+            staleness_a=float(cfg.staleness_a), t_cmp=t_cmp, e_cmp=e_arr,
+            cap=cap, rates=rates, b_tot=float(self.ch_cfg.bandwidth_total),
+            gamma_floor=float(gamma_floor), s_bits=self.s_bits,
+            i_bits=self.i_bits, n0=float(self.ch_cfg.noise_density))
 
     # back-compat alias (the old attribute name) --------------------------
     @property
@@ -483,9 +701,9 @@ class FederatedTrainer:
                 local_steps=self.fl_cfg.local_steps,
                 batch=self.fl_cfg.local_batch,
                 mesh=self.mesh, mesh_axis=self.mesh_axis,
-                n_real=self.n_clients)
+                n_real=self.n_clients, async_rt=self._async_rt)
             self._scan_engine = jax.jit(scan_fn, static_argnames="n_rounds",
-                                        donate_argnums=(0, 1, 2))
+                                        donate_argnums=(0, 1, 2, 3))
             self._scan_fn_raw = scan_fn
         return self._scan_engine
 
@@ -497,13 +715,13 @@ class FederatedTrainer:
             scan_fn = self._scan_fn_raw
 
             @functools.partial(jax.jit, static_argnames="n_rounds")
-            def sweep(params, state, battery, data, keys, eval_every,
+            def sweep(params, state, battery, astate, data, keys, eval_every,
                       n_rounds: int):
                 def one(ks):
-                    _, _, _, outs = scan_fn(params, state, battery, data, ks,
-                                            jnp.int32(0),
-                                            jnp.int32(n_rounds - 1),
-                                            eval_every, n_rounds)
+                    _, _, _, _, outs = scan_fn(params, state, battery, astate,
+                                               data, ks, jnp.int32(0),
+                                               jnp.int32(n_rounds - 1),
+                                               eval_every, n_rounds)
                     return outs
                 return jax.vmap(one)(keys)
 
@@ -520,14 +738,15 @@ class FederatedTrainer:
             scan_fn = self._scan_fn_raw
 
             @functools.partial(jax.jit, static_argnames="n_rounds")
-            def sweep(params, states, battery, data, keys, eval_every,
+            def sweep(params, states, battery, astate, data, keys, eval_every,
                       n_rounds: int):
                 def per_cfg(st):
                     def one(ks):
-                        _, _, _, outs = scan_fn(params, st, battery, data, ks,
-                                                jnp.int32(0),
-                                                jnp.int32(n_rounds - 1),
-                                                eval_every, n_rounds)
+                        _, _, _, _, outs = scan_fn(params, st, battery,
+                                                   astate, data, ks,
+                                                   jnp.int32(0),
+                                                   jnp.int32(n_rounds - 1),
+                                                   eval_every, n_rounds)
                         return outs
                     return jax.vmap(one)(keys)
                 return jax.vmap(per_cfg)(states)
@@ -590,6 +809,11 @@ class FederatedTrainer:
         rebuilt after calibration — and because the float config rides in
         the controller *state* (``FEParams``), the state is re-inited so
         the calibrated eta reaches the solver."""
+        if self._calibrated:
+            # one-shot: calibration already ran (or a checkpoint restore
+            # brought back a state whose FEParams carry the calibrated
+            # eta — re-initing would wipe the restored duals/EMA)
+            return
         if not getattr(self.controller, "needs_calibration", False):
             return
         _, u_norms, _ = self._client_step(self.params, self._round_batches(r))
@@ -598,6 +822,7 @@ class FederatedTrainer:
         self.controller.calibrate(np.asarray(u_norms)[:self.n_clients],
                                   np.asarray(h), self.network.power)
         self.ctrl_state = self.controller.init(self.n_clients)
+        self._calibrated = True
         self._invalidate_engines()
 
     # ------------------------------------------------------------------
@@ -613,9 +838,11 @@ class FederatedTrainer:
         """
         self._maybe_calibrate(r)
         engine = self._get_scan_engine()
-        self.params, self.ctrl_state, self._battery, outs = engine(
-            self.params, self.ctrl_state, self._battery, self._data,
-            self._keys(), jnp.int32(r), jnp.int32(r), jnp.int32(1), n_rounds=1)
+        (self.params, self.ctrl_state, self._battery, self._astate,
+         outs) = engine(
+            self.params, self.ctrl_state, self._battery, self._astate,
+            self._data, self._keys(), jnp.int32(r), jnp.int32(r),
+            jnp.int32(1), n_rounds=1)
         self._append_chunk_logs(r, outs)
         return self.history[-1]
 
@@ -633,12 +860,13 @@ class FederatedTrainer:
     # ------------------------------------------------------- fused engine ----
     def _keys(self):
         return {"fade": self.network.fade_key, "sample": self.sample_key,
-                "ctrl": self.key}
+                "ctrl": self.key, "harvest": self.harvest_key}
 
     def _append_chunk_logs(self, start: int, outs) -> None:
         """Materialize one chunk of stacked scan outputs (single host
         sync) into per-round ``RoundLog``s."""
         host = {k: np.asarray(v) for k, v in outs.items()}
+        timed = "t_round" in host
         for i in range(host["x"].shape[0]):
             x = host["x"][i]
             self.history.append(RoundLog(
@@ -646,11 +874,16 @@ class FederatedTrainer:
                 bandwidth=host["bandwidth"][i], energy=host["energy"][i],
                 accuracy=float(host["accuracy"][i]),
                 loss=float(host["loss"][i]), n_selected=int(x.sum()),
-                battery=host["battery"][i] if "battery" in host else None))
+                battery=host["battery"][i] if "battery" in host else None,
+                t_round=float(host["t_round"][i]) if timed else None,
+                made=host["made"][i] if timed else None,
+                n_late=int(host["n_late"][i]) if timed else None,
+                n_stale=int(host["n_stale"][i]) if timed else None))
 
     def run_scanned(self, rounds: Optional[int] = None, *,
                     chunk: Optional[int] = None, eval_every: int = 1,
-                    verbose: bool = True):
+                    verbose: bool = True, start_round: int = 0,
+                    ckpt_dir: Optional[str] = None, ckpt_every: int = 1):
         """Run ``rounds`` FL rounds through the fused ``lax.scan`` engine.
 
         ``chunk`` bounds the rounds per compiled program (default: all
@@ -663,6 +896,14 @@ class FederatedTrainer:
         randomness is pure in (seed, round), a second call replays the
         identical batches and channel draws. Use fresh trainers (or
         ``run_sweep`` seeds) for independent repetitions.
+
+        ``start_round`` resumes mid-trajectory — the carry must already
+        hold the state of that round (i.e. after ``restore_checkpoint``);
+        randomness being pure in (seed, round), the remaining rounds
+        replay bit-for-bit. With ``ckpt_dir``, the full scan carry
+        (params, controller state, batteries, async buffer) is saved via
+        ``repro.checkpoint`` every ``ckpt_every`` chunks and after the
+        final round.
         """
         rounds = rounds or self.fl_cfg.rounds
         chunk = min(chunk or rounds, rounds)
@@ -670,22 +911,65 @@ class FederatedTrainer:
             raise ValueError(f"eval_every must be >= 1, got {eval_every} "
                              "(it strides the in-scan eval; use a large "
                              "value to evaluate only the final round)")
-        self._maybe_calibrate(0)
+        if not 0 <= start_round < rounds:
+            raise ValueError(f"start_round {start_round} outside "
+                             f"[0, {rounds})")
+        if ckpt_every < 1:
+            raise ValueError(f"ckpt_every must be >= 1, got {ckpt_every}")
+        self._maybe_calibrate(start_round)
         engine = self._get_scan_engine()
         keys = self._keys()
-        for s in range(0, rounds, chunk):
+        for ci, s in enumerate(range(start_round, rounds, chunk)):
             n = min(chunk, rounds - s)
-            self.params, self.ctrl_state, self._battery, outs = engine(
-                self.params, self.ctrl_state, self._battery, self._data, keys,
-                jnp.int32(s), jnp.int32(rounds - 1), jnp.int32(eval_every),
-                n_rounds=n)
+            (self.params, self.ctrl_state, self._battery, self._astate,
+             outs) = engine(
+                self.params, self.ctrl_state, self._battery, self._astate,
+                self._data, keys, jnp.int32(s), jnp.int32(rounds - 1),
+                jnp.int32(eval_every), n_rounds=n)
             self._append_chunk_logs(s, outs)
+            if ckpt_dir is not None and ((ci + 1) % ckpt_every == 0
+                                         or s + n >= rounds):
+                self.save_checkpoint(ckpt_dir, s + n)
             if verbose:
                 lg = self.history[-1]
                 print(f"[{self.controller_name}] rounds {s:4d}..{s + n - 1:4d} "
                       f"acc={lg.accuracy:.4f} sel={lg.n_selected:2d} "
                       f"E={lg.total_energy*1e3:.3f} mJ")
         return self.history
+
+    # ------------------------------------------------------- checkpointing ----
+    def _carry_tree(self) -> dict:
+        """The full scan carry as one pytree (what a checkpoint holds):
+        params, controller state (duals / fairness EMA / FEParams),
+        batteries, and the async stale buffer."""
+        return {"params": self.params, "ctrl_state": self.ctrl_state,
+                "battery": self._battery, "astate": self._astate}
+
+    def save_checkpoint(self, directory: str, next_round: int) -> str:
+        """Persist the carry after round ``next_round - 1``; resuming at
+        ``start_round=next_round`` continues the trajectory bit-for-bit
+        (pinned by ``tests/test_async_rounds.py``)."""
+        return _ckpt.save_checkpoint(
+            directory, next_round, self._carry_tree(),
+            metadata={"next_round": int(next_round), "seed": int(self.seed),
+                      "controller": self.controller_name,
+                      "n_history": len(self.history)})
+
+    def restore_checkpoint(self, path: str) -> int:
+        """Load a checkpoint into the live carry and return the round to
+        resume from (``run_scanned(start_round=...)``). The restored
+        controller state already carries any calibrated ``FEParams``, so
+        calibration is marked done — re-initing would wipe the restored
+        duals/EMA."""
+        tree = _ckpt.restore_checkpoint(path, self._carry_tree())
+        meta = _ckpt.load_metadata(path)
+        (self.params, self.ctrl_state, self._battery, self._astate) = (
+            jax.tree_util.tree_map(jnp.asarray, tree["params"]),
+            jax.tree_util.tree_map(jnp.asarray, tree["ctrl_state"]),
+            jnp.asarray(tree["battery"]),
+            jax.tree_util.tree_map(jnp.asarray, tree["astate"]))
+        self._calibrated = True
+        return int(meta["next_round"])
 
     @staticmethod
     def _seed_keys(base):
@@ -694,7 +978,8 @@ class FederatedTrainer:
         stream-tag note in __init__)."""
         return {"fade": base,
                 "ctrl": jax.random.fold_in(base, _CTRL_STREAM),
-                "sample": jax.random.fold_in(base, _SAMPLE_STREAM)}
+                "sample": jax.random.fold_in(base, _SAMPLE_STREAM),
+                "harvest": jax.random.fold_in(base, _HARVEST_STREAM)}
 
     @classmethod
     def _stacked_seed_keys(cls, bases):
@@ -748,14 +1033,17 @@ class FederatedTrainer:
                 p = jax.tree_util.tree_map(jnp.array, self.params)
                 st = jax.tree_util.tree_map(jnp.array, self.ctrl_state)
                 bt = jnp.array(self._battery0)
-                _, _, _, outs = engine(p, st, bt, self._data, keys,
-                                       jnp.int32(0), jnp.int32(rounds - 1),
-                                       jnp.int32(eval_every), n_rounds=rounds)
+                ast = jax.tree_util.tree_map(jnp.array, self._astate0)
+                _, _, _, _, outs = engine(p, st, bt, ast, self._data, keys,
+                                          jnp.int32(0), jnp.int32(rounds - 1),
+                                          jnp.int32(eval_every),
+                                          n_rounds=rounds)
                 lanes.append({k: np.asarray(v) for k, v in outs.items()})
             return {k: np.stack([ln[k] for ln in lanes]) for k in lanes[0]}
         keys = self._stacked_seed_keys(bases)
         outs = self._get_sweep_engine()(
             self.params, self.ctrl_state, jnp.array(self._battery0),
+            jax.tree_util.tree_map(jnp.array, self._astate0),
             self._data, keys, jnp.int32(eval_every), n_rounds=rounds)
         return {k: np.asarray(v) for k, v in outs.items()}
 
@@ -778,10 +1066,12 @@ class FederatedTrainer:
                     p = jax.tree_util.tree_map(jnp.array, self.params)
                     st = jax.tree_util.tree_map(jnp.array, st_c)
                     bt = jnp.array(self._battery0)
-                    _, _, _, outs = engine(p, st, bt, self._data, keys,
-                                           jnp.int32(0), jnp.int32(rounds - 1),
-                                           jnp.int32(eval_every),
-                                           n_rounds=rounds)
+                    ast = jax.tree_util.tree_map(jnp.array, self._astate0)
+                    _, _, _, _, outs = engine(p, st, bt, ast, self._data,
+                                              keys, jnp.int32(0),
+                                              jnp.int32(rounds - 1),
+                                              jnp.int32(eval_every),
+                                              n_rounds=rounds)
                     per_seed.append({k: np.asarray(v) for k, v in outs.items()})
                 lanes.append({k: np.stack([s[k] for s in per_seed])
                               for k in per_seed[0]})
@@ -790,8 +1080,9 @@ class FederatedTrainer:
             return res
         keys = self._stacked_seed_keys(bases)
         outs = self._get_config_sweep_engine()(
-            self.params, states, jnp.array(self._battery0), self._data, keys,
-            jnp.int32(eval_every), n_rounds=rounds)
+            self.params, states, jnp.array(self._battery0),
+            jax.tree_util.tree_map(jnp.array, self._astate0),
+            self._data, keys, jnp.int32(eval_every), n_rounds=rounds)
         res = {k: np.asarray(v) for k, v in outs.items()}
         res["configs"] = echo
         return res
@@ -811,6 +1102,24 @@ class FederatedTrainer:
         for lg in self.history:
             cum += lg.total_energy
             if lg.accuracy >= target:
+                return cum
+        return None
+
+    def simulated_time(self) -> float:
+        """Cumulative simulated wall-clock (s) across the logged rounds
+        (``RoundLog.t_round``); untimed rounds count zero."""
+        return float(sum(lg.t_round or 0.0 for lg in self.history))
+
+    def wallclock_to_accuracy(self, target: float) -> float | None:
+        """Simulated seconds until accuracy first reaches ``target`` —
+        the headline metric of the async-round benchmarks. None if the
+        target is never reached (or the run is untimed)."""
+        cum = 0.0
+        timed = False
+        for lg in self.history:
+            cum += lg.t_round or 0.0
+            timed = timed or lg.t_round is not None
+            if timed and lg.accuracy >= target:
                 return cum
         return None
 

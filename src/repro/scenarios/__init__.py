@@ -11,6 +11,10 @@ partition concentration, and fading — into a preset addressable by name
 ``battery-constrained``  tiered fleet + finite batteries (clients deplete and
                        drop out mid-training)
 ``deep-noniid``        homogeneous fleet + Dirichlet beta = 0.05 label skew
+``straggler``          tiered fleet + median round deadline + staleness-
+                       weighted buffering of late updates
+``harvesting``         tiered fleet + finite batteries + per-round energy
+                       harvesting (depleted clients recharge and return)
 =====================  =======================================================
 
 Everything a scenario draws (tier assignment, battery capacity) is a pure
@@ -40,6 +44,12 @@ class Scenario:
     battery_j: Optional[Tuple[float, float]] = None  # per-client U[lo, hi] J
     dirichlet_beta: Optional[float] = None   # None = caller's default
     rayleigh: Optional[bool] = None          # None = caller's default
+    # --- async-round knobs (repro.core.rounds) --------------------------
+    deadline_s: Optional[float] = None       # fixed round deadline (s)
+    deadline_q: Optional[float] = None       # or: quantile-resolved deadline
+    staleness: bool = False                  # buffer late updates
+    staleness_a: float = 0.5                 # w(tau) = (1 + tau)^-a
+    harvest_j: Optional[float] = None        # mean per-round recharge (J)
 
     def device_profile(self, n: int, seed: int = 0) -> Optional[DeviceProfile]:
         """Build the [n]-client fleet, pure in ``seed``."""
@@ -66,6 +76,23 @@ class Scenario:
 
     def beta(self, default: float) -> float:
         return self.dirichlet_beta if self.dirichlet_beta is not None else default
+
+    def async_config(self, *, deadline_s: Optional[float] = None,
+                     staleness_a: Optional[float] = None):
+        """The scenario's ``repro.core.rounds.AsyncConfig`` (None when no
+        async knob is set — the trainer then compiles the exact legacy
+        synchronous program). Explicit CLI overrides win over the preset:
+        ``deadline_s`` replaces both preset deadline knobs."""
+        from repro.core.rounds import AsyncConfig
+        d_s, d_q = self.deadline_s, self.deadline_q
+        if deadline_s is not None:
+            d_s, d_q = deadline_s, None
+        a = staleness_a if staleness_a is not None else self.staleness_a
+        cfg = AsyncConfig(
+            deadline_s=d_s if d_s is not None else float("inf"),
+            deadline_q=d_q, staleness=self.staleness, staleness_a=a,
+            harvest_j=self.harvest_j)
+        return cfg if cfg.enabled else None
 
 
 _REGISTRY: dict[str, Scenario] = {}
@@ -118,3 +145,17 @@ register_scenario(Scenario(
     description="homogeneous fleet, Dirichlet beta=0.05 label skew "
                 "(near single-label client shards)",
     profile="uniform", dirichlet_beta=0.05))
+
+register_scenario(Scenario(
+    name="straggler",
+    description="tiered fleet under a median-round-time deadline: slow "
+                "clients miss rounds; their late updates fold in later "
+                "with the w(tau) = (1+tau)^-0.5 staleness discount",
+    profile="tiered", deadline_q=0.5, staleness=True, staleness_a=0.5))
+
+register_scenario(Scenario(
+    name="harvesting",
+    description="tiered fleet, finite U[20, 80] mJ batteries, ~2 mJ/round "
+                "mean energy harvesting — depleted clients recharge and "
+                "re-enter selection",
+    profile="tiered", battery_j=(0.02, 0.08), harvest_j=2e-3))

@@ -73,6 +73,19 @@ def replicated_specs(tree) -> object:
     return jax.tree_util.tree_map(lambda _: P(), tree)
 
 
+def async_state_specs(astate, axis: str = CLIENTS_AXIS):
+    """Spec pytree for the async-round scan carry
+    (``repro.core.rounds.AsyncState``): the ``[N, D]`` stale-update
+    buffer and its ``[N]`` age / remaining-time vectors all live
+    shard-local on the client axis — like the update/sparsify buffers,
+    the full stale matrix never materializes on one device. Accepts the
+    empty carry ``()`` (staleness off) and returns ``()``."""
+    if astate == ():
+        return ()
+    return type(astate)(*(client_stack_spec(leaf.ndim, axis)
+                          for leaf in astate))
+
+
 def shard_client_data(data, mesh: Mesh, axis: str = CLIENTS_AXIS):
     """device_put the client stacks onto the mesh (client axis split
     across devices). The client count must already be mesh-divisible —

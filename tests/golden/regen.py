@@ -1,0 +1,104 @@
+"""Regenerate ALL pinned golden trajectories in tests/golden/.
+
+Run ONLY for an intended physics change (the fixtures exist so engine
+and solver refactors can't silently shift trajectories):
+
+    PYTHONPATH=src:tests python tests/golden/regen.py [name ...]
+
+With no arguments every golden is rewritten; pass names (e.g.
+``straggler``) to regenerate a subset. Goldens:
+
+* ``fairenergy_main_12round.json`` — THE backward-compat pin: the
+  comm-only (no profile, no async) 12-round fairenergy trajectory,
+  exact masks / per-client energies / accuracy.
+* ``tiered_fairenergy_12round.json`` — tiered-devices scenario physics.
+* ``straggler_fairenergy_12round.json`` — async-round physics: the
+  straggler scenario (median deadline + staleness buffering), with
+  made-masks, stale counts, and per-round simulated wall-clock.
+"""
+import json
+import os
+import sys
+
+import numpy as np
+
+from test_scan_engine import N_CLIENTS, ROUNDS, make_trainer
+
+from repro.scenarios import get_scenario
+
+GOLDEN_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def _write(name, out):
+    path = os.path.join(GOLDEN_DIR, name)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote", path)
+
+
+def regen_main():
+    tr = make_trainer("fairenergy")
+    tr.run_scanned(ROUNDS, verbose=False)
+    _write("fairenergy_main_12round.json", {
+        "rounds": ROUNDS,
+        "selected": [[int(b) for b in lg.selected] for lg in tr.history],
+        "gamma": [np.asarray(lg.gamma, np.float64).tolist()
+                  for lg in tr.history],
+        "energy": [np.asarray(lg.energy, np.float64).tolist()
+                   for lg in tr.history],
+        "total_energy": [float(lg.total_energy) for lg in tr.history],
+        "accuracy": [float(lg.accuracy) for lg in tr.history],
+    })
+
+
+def regen_tiered():
+    prof = get_scenario("tiered-devices").device_profile(N_CLIENTS, seed=0)
+    tr = make_trainer("fairenergy", device_profile=prof)
+    tr.run_scanned(ROUNDS, verbose=False)
+    _write("tiered_fairenergy_12round.json", {
+        "rounds": ROUNDS,
+        "scenario": "tiered-devices",
+        "selected": [[int(b) for b in lg.selected] for lg in tr.history],
+        "total_energy": [float(lg.total_energy) for lg in tr.history],
+        "accuracy": [float(lg.accuracy) for lg in tr.history],
+    })
+    print("selected/round:", [int(lg.n_selected) for lg in tr.history])
+
+
+def regen_straggler():
+    scn = get_scenario("straggler")
+    tr = make_trainer("fairenergy",
+                      device_profile=scn.device_profile(N_CLIENTS, seed=0),
+                      async_cfg=scn.async_config())
+    tr.run_scanned(ROUNDS, verbose=False)
+    _write("straggler_fairenergy_12round.json", {
+        "rounds": ROUNDS,
+        "scenario": "straggler",
+        "deadline_s": float(tr.deadline_s),
+        "selected": [[int(b) for b in lg.selected] for lg in tr.history],
+        "made": [[int(b) for b in lg.made] for lg in tr.history],
+        "n_late": [int(lg.n_late) for lg in tr.history],
+        "n_stale": [int(lg.n_stale) for lg in tr.history],
+        "t_round": [float(lg.t_round) for lg in tr.history],
+        "total_energy": [float(lg.total_energy) for lg in tr.history],
+        "accuracy": [float(lg.accuracy) for lg in tr.history],
+    })
+    print("late/round:", [int(lg.n_late) for lg in tr.history])
+    print("stale/round:", [int(lg.n_stale) for lg in tr.history])
+
+
+GOLDENS = {"main": regen_main, "tiered": regen_tiered,
+           "straggler": regen_straggler}
+
+
+def main(names=None):
+    names = names or sorted(GOLDENS)
+    for name in names:
+        if name not in GOLDENS:
+            raise SystemExit(f"unknown golden {name!r}; "
+                             f"available: {sorted(GOLDENS)}")
+        GOLDENS[name]()
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or None)

@@ -1,0 +1,493 @@
+"""Asynchronous round subsystem (repro.core.rounds + the fused engine).
+
+Three layers of coverage:
+
+* **unit** — the timing / staleness / harvesting primitives: partial
+  energy between 0 and the full round energy, ``w(tau)`` lawful,
+  harvesting pure in (seed, round) and capped at capacity,
+  ``comm_time`` infinite below the bandwidth floor (regression for the
+  old finite-but-absurd 1 Hz-clamped values);
+* **backward compat** — a *disabled* ``AsyncConfig`` must reproduce the
+  pinned synchronous golden bit-for-bit (single-device and under a
+  clients mesh), and ``track_time=True`` must change only the logs,
+  never the physics;
+* **engine** — deadlines drop stragglers (with partial energy charged),
+  staleness buffers and later folds late updates, harvesting recharges
+  depleted clients back into selection, checkpoint/restore continues
+  the trajectory bit-for-bit, and the straggler scenario trajectory is
+  pinned against tests/golden/straggler_fairenergy_12round.json
+  (regenerate with tests/golden/regen.py ONLY for an intended physics
+  change).
+"""
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_checkpoint
+from repro.configs import ChannelConfig
+from repro.core.channel import (RATE_B_FLOOR_HZ, comm_time, round_gains)
+from repro.core.energy import comp_time, uniform_profile, with_batteries
+from repro.core.rounds import (AsyncConfig, apply_harvest, harvest_draw,
+                               harvest_rates, partial_round_energy,
+                               resolve_deadline, round_wall_clock,
+                               staleness_weight)
+from repro.scenarios import get_scenario
+
+from test_scan_engine import N_CLIENTS, ROUNDS, make_trainer, _flat
+
+N0 = ChannelConfig().noise_density
+S_BITS, I_BITS = 6.4e7, 2e6
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+# ------------------------------------------------------------------ unit ----
+def test_comm_time_inf_below_rate_floor():
+    """Regression: sub-floor bandwidth used to report the finite 1 Hz
+    transmission time — absurd but finite, so it slipped past sanity
+    checks. It must be inf (cannot transmit; deadline logic drops it)."""
+    B = jnp.asarray([0.0, 1e-6, 0.5, 0.999, RATE_B_FLOOR_HZ, 2.0, 1e6])
+    t = np.asarray(comm_time(0.5, B, 2e-4, 1e-9, S_BITS, I_BITS, N0))
+    assert np.isinf(t[:4]).all()
+    assert np.isfinite(t[4:]).all()
+    assert (np.diff(t[4:]) < 0).all()    # more bandwidth, faster
+
+
+def test_partial_energy_between_zero_and_full():
+    rng = np.random.default_rng(0)
+    n = 64
+    t_cmp = jnp.asarray(rng.uniform(0.0, 0.02, n), jnp.float32)
+    t_comm = jnp.asarray(rng.uniform(0.0, 0.05, n), jnp.float32)
+    e_cmp = jnp.asarray(rng.uniform(0.0, 5e-3, n), jnp.float32)
+    P = jnp.asarray(rng.uniform(1e-4, 3e-4, n), jnp.float32)
+    full = np.asarray(e_cmp + P * t_comm)
+    prev = np.zeros(n)
+    for q in (0.0, 0.01, 0.03, 0.08, 1.0):
+        e = np.asarray(partial_round_energy(t_cmp, t_comm, e_cmp, P, q))
+        assert (e >= -1e-12).all()
+        assert (e <= full + 1e-7).all()              # partial <= full
+        assert (e >= prev - 1e-7).all()              # monotone in deadline
+        prev = e
+    # a deadline past everyone's t_total charges exactly the full energy
+    e = np.asarray(partial_round_energy(t_cmp, t_comm, e_cmp, P, 10.0))
+    np.testing.assert_allclose(e, full, rtol=1e-6)
+    # deadline mid-compute: only the prorated computation is charged
+    e0 = np.asarray(partial_round_energy(
+        jnp.float32(0.01), jnp.float32(0.05), jnp.float32(4e-3),
+        jnp.float32(2e-4), 0.005))
+    np.testing.assert_allclose(e0, 2e-3, rtol=1e-6)
+
+
+def test_staleness_weight_lawful():
+    ages = jnp.arange(0, 50, dtype=jnp.int32)
+    for a in (0.0, 0.5, 1.0, 2.0):
+        w = np.asarray(staleness_weight(ages, a))
+        assert ((w > 0.0) & (w <= 1.0)).all()
+        assert w[0] == 1.0
+        if a > 0:
+            assert (np.diff(w) < 0).all()            # strictly decaying
+        else:
+            assert (w == 1.0).all()                  # a=0 disables
+    # the -1 empty-slot sentinel cannot inflate the weight past 1
+    assert float(staleness_weight(jnp.int32(-1), 0.5)) == 1.0
+
+
+def test_round_wall_clock():
+    x = jnp.asarray([True, True, False])
+    t = jnp.asarray([0.2, 0.5, 9.0])
+    assert float(round_wall_clock(x, t, np.inf)) == pytest.approx(0.5)
+    assert float(round_wall_clock(x, t, 0.3)) == pytest.approx(0.3)
+    none = jnp.zeros((3,), bool)
+    assert float(round_wall_clock(none, t, np.inf)) == 0.0
+
+
+def test_harvest_pure_and_capped():
+    prof = uniform_profile(6)
+    rates = harvest_rates(prof, 6, 2e-3)
+    np.testing.assert_allclose(np.asarray(rates), 2e-3, rtol=1e-6)
+    key = jax.random.PRNGKey(3)
+    d1 = np.asarray(harvest_draw(key, 4, rates))
+    d2 = np.asarray(harvest_draw(key, 4, rates))
+    np.testing.assert_array_equal(d1, d2)            # pure in (key, round)
+    d3 = np.asarray(harvest_draw(key, 5, rates))
+    assert not np.array_equal(d1, d3)
+    assert (d1 >= 0).all()
+    battery = jnp.asarray([0.0, 1e-5, 0.5], jnp.float32)
+    cap = jnp.asarray([1e-4, 1e-4, np.inf], jnp.float32)
+    out = np.asarray(apply_harvest(battery, cap, key, 0, rates[:3]))
+    assert (out >= np.asarray(battery)).all()
+    assert (out <= np.asarray(cap)).all()
+    # rates=None is the no-op used by deadline-only configs
+    same = apply_harvest(battery, cap, key, 0, None)
+    np.testing.assert_array_equal(np.asarray(same), np.asarray(battery))
+
+
+def test_harvest_rates_scale_with_tier():
+    from repro.core.energy import make_profile
+    prof = make_profile("tiered", 30, seed=0)
+    rates = np.asarray(harvest_rates(prof, 30, 2e-3))
+    assert rates.mean() == pytest.approx(2e-3, rel=1e-5)
+    freq = np.asarray(prof.freq)
+    assert rates[np.argmax(freq)] > rates[np.argmin(freq)]
+
+
+def test_resolve_deadline_quantile():
+    rng = np.random.default_rng(1)
+    n = 40
+    kw = dict(t_cmp=rng.uniform(0.0, 0.02, n),
+              P=rng.uniform(1e-4, 3e-4, n),
+              h=1e-3 * rng.uniform(50, 500, n) ** -3.0,
+              b_tot=10e6, s_bits=S_BITS, i_bits=I_BITS, n0=N0, k=8)
+    d25 = resolve_deadline(0.25, **kw)
+    d50 = resolve_deadline(0.5, **kw)
+    d100 = resolve_deadline(1.0, **kw)
+    assert 0.0 < d25 <= d50 <= d100 < np.inf
+    assert resolve_deadline(0.5, **kw) == d50       # deterministic
+
+
+def test_async_config_validation_and_enabled():
+    assert not AsyncConfig().enabled                 # the legacy contract
+    assert AsyncConfig(deadline_s=0.5).enabled
+    assert AsyncConfig(deadline_q=0.5).enabled
+    assert AsyncConfig(staleness=True).enabled
+    assert AsyncConfig(harvest_j=1e-3).enabled
+    assert AsyncConfig(track_time=True).enabled
+    with pytest.raises(ValueError, match="deadline_q"):
+        AsyncConfig(deadline_q=1.5)
+    with pytest.raises(ValueError, match="staleness_a"):
+        AsyncConfig(staleness_a=-1.0)
+    with pytest.raises(ValueError, match="harvest_j"):
+        AsyncConfig(harvest_j=-1e-3)
+
+
+def test_scenario_async_presets():
+    scn = get_scenario("straggler")
+    cfg = scn.async_config()
+    assert cfg is not None and cfg.staleness and cfg.deadline_q == 0.5
+    # CLI override wins over the preset deadline
+    over = scn.async_config(deadline_s=0.25)
+    assert over.deadline_s == 0.25 and over.deadline_q is None
+    harv = get_scenario("harvesting").async_config()
+    assert harv is not None and harv.harvest_j == pytest.approx(2e-3)
+    # presets without async knobs stay fully synchronous
+    assert get_scenario("uniform").async_config() is None
+
+
+# ------------------------------------------------- backward-compat pins ----
+def _assert_matches_main_golden(tr):
+    g = json.load(open(os.path.join(GOLDEN_DIR,
+                                    "fairenergy_main_12round.json")))
+    assert len(tr.history) == g["rounds"] == ROUNDS
+    for r, lg in enumerate(tr.history):
+        np.testing.assert_array_equal(lg.selected.astype(int),
+                                      g["selected"][r], err_msg=f"round {r}")
+        np.testing.assert_allclose(np.asarray(lg.energy, np.float64),
+                                   g["energy"][r], rtol=1e-7, atol=0,
+                                   err_msg=f"round {r}")
+        np.testing.assert_allclose(lg.accuracy, g["accuracy"][r], rtol=1e-7,
+                                   err_msg=f"round {r}")
+
+
+def test_disabled_config_matches_golden_bitwise():
+    """THE async backward-compat pin: a disabled AsyncConfig compiles the
+    exact legacy program — the pinned main trajectory holds bit-for-bit
+    (exact masks, exact energies)."""
+    tr = make_trainer("fairenergy", async_cfg=AsyncConfig())
+    assert tr._async_rt is None and tr._astate == ()
+    tr.run_scanned(ROUNDS, verbose=False)
+    g = json.load(open(os.path.join(GOLDEN_DIR,
+                                    "fairenergy_main_12round.json")))
+    for r, lg in enumerate(tr.history):
+        np.testing.assert_array_equal(lg.selected.astype(int),
+                                      g["selected"][r], err_msg=f"round {r}")
+        np.testing.assert_array_equal(np.asarray(lg.energy, np.float64),
+                                      g["energy"][r], err_msg=f"round {r}")
+        assert lg.accuracy == g["accuracy"][r], f"round {r}"
+        assert lg.t_round is None                    # untimed logs
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs multiple devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_disabled_config_matches_golden_sharded():
+    """Same pin under the clients mesh: masks exact, energies/accuracy to
+    last-ulp tolerance (the sharded program compiles separately)."""
+    from repro.sharding import make_clients_mesh
+    tr = make_trainer("fairenergy", async_cfg=AsyncConfig(),
+                      mesh=make_clients_mesh())
+    tr.run_scanned(ROUNDS, verbose=False)
+    _assert_matches_main_golden(tr)
+
+
+def test_track_time_only_changes_logs_not_physics():
+    """track_time=True routes through the async engine but with an
+    infinite deadline / no staleness / no harvesting: the trajectory must
+    match the legacy run exactly, with the wall-clock logs added."""
+    a = make_trainer("fairenergy")
+    a.run_scanned(ROUNDS, verbose=False)
+    b = make_trainer("fairenergy", async_cfg=AsyncConfig(track_time=True))
+    assert b._async_rt is not None
+    b.run_scanned(ROUNDS, verbose=False)
+    for la, lb in zip(a.history, b.history):
+        np.testing.assert_array_equal(la.selected, lb.selected,
+                                      err_msg=f"round {la.round}")
+        np.testing.assert_array_equal(la.energy, lb.energy)
+        np.testing.assert_array_equal(la.gamma, lb.gamma)
+        assert la.accuracy == lb.accuracy
+        assert lb.t_round is not None and lb.t_round > 0.0
+        assert lb.n_late == 0 and lb.n_stale == 0
+        np.testing.assert_array_equal(lb.made, lb.selected)
+    np.testing.assert_array_equal(_flat(a.params), _flat(b.params))
+    assert b.simulated_time() > 0.0
+
+
+# --------------------------------------------------------- engine: time ----
+def _realized_times(tr, lg):
+    """Recompute each client's realized (t_cmp, t_comm) for a logged
+    round (fading is pure in (seed, round), so the host can replay it)."""
+    h = np.asarray(round_gains(tr.network.fade_key,
+                               jnp.asarray(tr.network.pathloss, jnp.float32),
+                               lg.round, tr.ch_cfg.rayleigh))
+    t_comm = np.asarray(comm_time(
+        jnp.asarray(lg.gamma, jnp.float32),
+        jnp.asarray(lg.bandwidth, jnp.float32),
+        jnp.asarray(tr.network.power, jnp.float32), jnp.asarray(h),
+        tr.s_bits, tr.i_bits, tr.ch_cfg.noise_density), np.float64)
+    t_cmp = np.asarray(comp_time(
+        tr.device_profile,
+        tr.fl_cfg.local_steps * tr.fl_cfg.local_batch), np.float64) \
+        if tr.device_profile is not None else np.zeros(tr.n_clients)
+    return t_cmp, t_comm
+
+
+def test_deadline_drops_stragglers_and_charges_partial_energy():
+    tr = make_trainer("fairenergy", device_profile="tiered",
+                      async_cfg=AsyncConfig(deadline_q=0.5))
+    tr.run_scanned(ROUNDS, verbose=False)
+    D = tr.deadline_s
+    assert 0.0 < D < np.inf
+    assert sum(lg.n_late for lg in tr.history) > 0   # stragglers exist
+    e_cmp = np.asarray(tr._async_rt.e_cmp, np.float64)
+    P = np.asarray(tr.network.power, np.float64)
+    saw_partial = False
+    for lg in tr.history:
+        made = lg.made.astype(bool)
+        sel = lg.selected.astype(bool)
+        late = sel & ~made
+        assert lg.n_late == late.sum()
+        assert (made <= sel).all()                   # made is a subset
+        assert lg.t_round <= D * (1 + 1e-6)
+        t_cmp, t_comm = _realized_times(tr, lg)
+        t_total = t_cmp + t_comm
+        # clients inside the deadline really did finish in time; the
+        # dropped ones really couldn't
+        assert (t_total[made] <= D * (1 + 1e-5)).all()
+        assert (t_total[late] > D * (1 - 1e-5)).all()
+        # a late client pays at most its full round energy, and strictly
+        # less when the deadline truncates a nonzero chunk of its comm
+        if late.any():
+            full = e_cmp[late] + P[late] * t_comm[late]
+            assert (lg.energy[late] <= full * (1 + 1e-5)).all()
+            saw_partial = saw_partial or (lg.energy[late]
+                                          < full * (1 - 1e-3)).any()
+    assert saw_partial
+
+
+def test_staleness_buffers_and_folds_late_updates():
+    base = AsyncConfig(deadline_q=0.5)
+    off = make_trainer("fairenergy", device_profile="tiered", async_cfg=base)
+    off.run_scanned(ROUNDS, verbose=False)
+    on = make_trainer("fairenergy", device_profile="tiered",
+                      async_cfg=AsyncConfig(deadline_q=0.5, staleness=True))
+    on.run_scanned(ROUNDS, verbose=False)
+    stale = [lg.n_stale for lg in on.history]
+    assert sum(stale) > 0                            # buffered folds happen
+    assert all(lg.n_stale == 0 for lg in off.history)
+    # the fold must actually change the model: trajectories diverge after
+    # the first stale fold (identical before any fold can land)
+    first = next(i for i, s in enumerate(stale) if s > 0)
+    assert not np.array_equal(_flat(off.params), _flat(on.params))
+    accs_off = [lg.accuracy for lg in off.history]
+    accs_on = [lg.accuracy for lg in on.history]
+    assert accs_off[first:] != accs_on[first:]
+    # staleness-on charges late clients their FULL energy (background
+    # transmission completes), so per-round spend is >= the drop policy
+    # on the rounds where the trajectories still coincide
+    lg_on, lg_off = on.history[0], off.history[0]
+    np.testing.assert_array_equal(lg_on.selected, lg_off.selected)
+    assert lg_on.total_energy >= lg_off.total_energy - 1e-12
+
+
+def test_harvesting_recharges_depleted_clients_back_into_selection():
+    # batteries worth ~1.5 rounds of spend (fixture round energy ~3.2e-4 J)
+    # and a ~2e-4 J/round mean harvest: clients must deplete AND return
+    prof = with_batteries(uniform_profile(N_CLIENTS), (4e-4, 6e-4), seed=0)
+    tr = make_trainer("fairenergy", device_profile=prof,
+                      async_cfg=AsyncConfig(harvest_j=2e-4, track_time=True))
+    tr.run_scanned(ROUNDS, verbose=False)
+    cap = np.asarray(prof.battery)
+    batt = np.stack([lg.battery for lg in tr.history])   # [R, N] post-harvest
+    assert (batt >= 0.0).all()
+    assert (batt <= cap[None, :] + 1e-9).all()
+    sel = np.stack([lg.selected for lg in tr.history]).astype(bool)
+    # the harvest draw is pure in (key, round), so the host can replay it
+    # and recover the PRE-harvest charge: a brownout round has pre = 0,
+    # i.e. the logged battery is at most that round's draw
+    rates = harvest_rates(prof, N_CLIENTS, 2e-4)
+    draws = np.stack([np.asarray(harvest_draw(tr.harvest_key, r, rates))
+                      for r in range(ROUNDS)])
+    depleted = batt <= draws + 1e-9
+    assert depleted.any(), "no client ever ran its battery dry"
+    # ...and a depleted client is selected again in a LATER round
+    returned = any(
+        sel[np.nonzero(depleted[:, i])[0][0] + 1:, i].any()
+        for i in range(N_CLIENTS) if depleted[:, i].any())
+    assert returned, "no depleted client ever re-entered selection"
+    # the same fleet WITHOUT harvesting only ever drains: batteries are
+    # monotone non-increasing and the fleet starves out of selection
+    tr0 = make_trainer("fairenergy", device_profile=prof,
+                       async_cfg=AsyncConfig(track_time=True))
+    tr0.run_scanned(ROUNDS, verbose=False)
+    batt0 = np.stack([lg.battery for lg in tr0.history])
+    assert (np.diff(batt0, axis=0) <= 1e-12).all()
+    assert (sum(lg.n_selected for lg in tr0.history[-4:])
+            < sum(lg.n_selected for lg in tr.history[-4:]))
+
+
+def test_straggler_scenario_matches_golden_trajectory():
+    """Physics pin for the async subsystem: fairenergy under the
+    straggler scenario (median deadline + staleness), 12 rounds on the
+    test fixture — masks exact, energy/accuracy/wall-clock to fp32
+    tolerance. Regenerate with tests/golden/regen.py ONLY for an
+    intended physics change."""
+    g = json.load(open(os.path.join(GOLDEN_DIR,
+                                    "straggler_fairenergy_12round.json")))
+    scn = get_scenario("straggler")
+    tr = make_trainer("fairenergy",
+                      device_profile=scn.device_profile(N_CLIENTS, seed=0),
+                      async_cfg=scn.async_config())
+    tr.run_scanned(ROUNDS, verbose=False)
+    for r, lg in enumerate(tr.history):
+        np.testing.assert_array_equal(lg.selected.astype(int),
+                                      g["selected"][r], err_msg=f"round {r}")
+        np.testing.assert_array_equal(lg.made.astype(int), g["made"][r],
+                                      err_msg=f"round {r}")
+        assert lg.n_stale == g["n_stale"][r], f"round {r}"
+        np.testing.assert_allclose(lg.total_energy, g["total_energy"][r],
+                                   rtol=1e-5, err_msg=f"round {r}")
+        np.testing.assert_allclose(lg.t_round, g["t_round"][r], rtol=1e-5,
+                                   err_msg=f"round {r}")
+        np.testing.assert_allclose(lg.accuracy, g["accuracy"][r], rtol=1e-5,
+                                   err_msg=f"round {r}")
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs multiple devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_sharded_async_engine_matches_single_device():
+    """The full async stack — deadline + staleness buffer (shard-local
+    [N, D] carry) + harvesting — under the clients mesh must reproduce
+    the single-device trajectory: same masks/late/stale counts, params
+    and energies to last-ulp tolerance."""
+    from repro.sharding import make_clients_mesh
+    cfg = AsyncConfig(deadline_q=0.5, staleness=True, harvest_j=2e-3)
+    a = make_trainer("fairenergy", device_profile="tiered", async_cfg=cfg)
+    a.run_scanned(ROUNDS, verbose=False)
+    b = make_trainer("fairenergy", device_profile="tiered", async_cfg=cfg,
+                     mesh=make_clients_mesh())
+    b.run_scanned(ROUNDS, verbose=False)
+    for la, lb in zip(a.history, b.history):
+        np.testing.assert_array_equal(la.selected, lb.selected,
+                                      err_msg=f"round {la.round}")
+        np.testing.assert_array_equal(la.made, lb.made)
+        assert la.n_late == lb.n_late and la.n_stale == lb.n_stale
+        np.testing.assert_allclose(la.energy, lb.energy, rtol=1e-6, atol=0)
+        np.testing.assert_allclose(la.t_round, lb.t_round, rtol=1e-6)
+        np.testing.assert_allclose(la.accuracy, lb.accuracy, rtol=1e-6)
+    np.testing.assert_allclose(_flat(a.params), _flat(b.params),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_async_run_sweep_carries_time_outputs():
+    cfg = AsyncConfig(deadline_q=0.5, staleness=True)
+    tr = make_trainer("fairenergy", device_profile="tiered", async_cfg=cfg)
+    outs = tr.run_sweep([0, 1], ROUNDS)
+    assert outs["t_round"].shape == (2, ROUNDS)
+    assert np.isfinite(outs["t_round"]).all()
+    assert (outs["t_round"] >= 0.0).all()
+    assert outs["made"].shape == (2, ROUNDS, N_CLIENTS)
+    assert outs["n_late"].sum() > 0                  # stragglers in lanes
+    # seed lanes draw independent randomness
+    assert not np.array_equal(outs["x"][0], outs["x"][1])
+
+
+# ------------------------------------------------------------ checkpoint ----
+def _run_with_ckpt(async_cfg, d):
+    tr = make_trainer("fairenergy", device_profile="tiered",
+                      async_cfg=async_cfg)
+    tr.run_scanned(ROUNDS, chunk=4, ckpt_dir=d, ckpt_every=1, verbose=False)
+    return tr
+
+
+@pytest.mark.parametrize("async_cfg", [
+    None,                                                     # legacy engine
+    AsyncConfig(deadline_q=0.5, staleness=True, harvest_j=2e-3),  # full stack
+], ids=["sync", "async"])
+def test_checkpoint_restore_continues_bitwise(async_cfg):
+    """A fresh trainer restored from the round-8 checkpoint must continue
+    the original trajectory bit-for-bit: same masks, same energies, same
+    wall-clock, and bitwise-identical final params — the scan carry
+    (params, duals, batteries, stale buffer) round-trips losslessly
+    through the npz checkpoint."""
+    with tempfile.TemporaryDirectory() as d:
+        a = _run_with_ckpt(async_cfg, d)
+        mid = os.path.join(d, "ckpt_00000008.npz")
+        assert os.path.exists(mid)
+        assert latest_checkpoint(d).endswith("ckpt_00000012.npz")
+        b = make_trainer("fairenergy", device_profile="tiered",
+                         async_cfg=async_cfg)
+        nxt = b.restore_checkpoint(mid)
+        assert nxt == 8
+        b.run_scanned(ROUNDS, chunk=4, start_round=nxt, verbose=False)
+        assert [lg.round for lg in b.history] == list(range(8, ROUNDS))
+        for la, lb in zip(a.history[8:], b.history):
+            np.testing.assert_array_equal(la.selected, lb.selected,
+                                          err_msg=f"round {la.round}")
+            np.testing.assert_array_equal(la.energy, lb.energy)
+            np.testing.assert_array_equal(la.gamma, lb.gamma)
+            assert la.accuracy == lb.accuracy
+            assert la.t_round == lb.t_round
+            assert la.n_stale == lb.n_stale
+        np.testing.assert_array_equal(_flat(a.params), _flat(b.params))
+
+
+def test_restored_run_continues_the_pinned_golden():
+    """The satellite acceptance pin: restore mid-run and finish — the
+    tail must equal the pinned main golden bit-for-bit."""
+    g = json.load(open(os.path.join(GOLDEN_DIR,
+                                    "fairenergy_main_12round.json")))
+    with tempfile.TemporaryDirectory() as d:
+        a = make_trainer("fairenergy")
+        a.run_scanned(ROUNDS, chunk=4, ckpt_dir=d, verbose=False)
+        b = make_trainer("fairenergy")
+        nxt = b.restore_checkpoint(os.path.join(d, "ckpt_00000004.npz"))
+        b.run_scanned(ROUNDS, chunk=4, start_round=nxt, verbose=False)
+    for lg in b.history:
+        r = lg.round
+        np.testing.assert_array_equal(lg.selected.astype(int),
+                                      g["selected"][r], err_msg=f"round {r}")
+        np.testing.assert_array_equal(np.asarray(lg.energy, np.float64),
+                                      g["energy"][r], err_msg=f"round {r}")
+        assert lg.accuracy == g["accuracy"][r], f"round {r}"
+
+
+def test_run_scanned_rejects_bad_resume_args():
+    tr = make_trainer("fairenergy")
+    with pytest.raises(ValueError, match="start_round"):
+        tr.run_scanned(ROUNDS, start_round=ROUNDS)
+    with pytest.raises(ValueError, match="ckpt_every"):
+        tr.run_scanned(ROUNDS, ckpt_every=0)

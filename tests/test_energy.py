@@ -241,7 +241,7 @@ def test_tiered_scenario_matches_golden_trajectory():
     """Physics pin for the new subsystem: fairenergy under the
     tiered-devices scenario, 12 rounds on the test fixture — masks exact,
     total energy / accuracy to fp32 tolerance. Regenerate the golden with
-    tests/golden/regen_tiered.py ONLY for an intended physics change."""
+    tests/golden/regen.py ONLY for an intended physics change."""
     from test_scan_engine import N_CLIENTS, make_trainer
 
     g = json.load(open(os.path.join(GOLDEN_DIR,

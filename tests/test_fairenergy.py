@@ -94,18 +94,20 @@ def test_energy_increasing_in_gamma():
 
 
 def test_energy_monotone_near_rate_floor():
-    """The 1 Hz clamp in shannon_rate: energy is non-increasing in B down
-    to the floor, and constant (clamped) below it — never the exploding
-    analytic B->0 values."""
+    """The 1 Hz floor in shannon_rate: energy is non-increasing in B down
+    to the floor, finite at and above it, and ``inf`` strictly below —
+    a sub-floor allocation cannot transmit, and the old finite-but-absurd
+    1 Hz-clamped energies slipped past sanity checks (the deadline logic
+    in repro.core.rounds relies on inf to drop such clients)."""
     from repro.core.channel import RATE_B_FLOOR_HZ
     assert RATE_B_FLOOR_HZ == 1.0
-    B = jnp.concatenate([jnp.linspace(1e-3, 1.0, 25),
-                         jnp.logspace(0.0, 3.0, 25)])
+    B = jnp.logspace(0.0, 3.0, 25)                 # floor and above
     e = np.asarray(comm_energy(0.5, B, 2e-4, 1e-9, 6.4e7, 2e6, N0))
     assert np.isfinite(e).all()
     assert (np.diff(e) <= 0).all()                 # monotone toward the floor
-    below = e[np.asarray(B) <= 1.0]
-    np.testing.assert_allclose(below, below[0], rtol=1e-6)  # flat under 1 Hz
+    below = np.asarray(comm_energy(
+        0.5, jnp.linspace(1e-3, 0.999, 25), 2e-4, 1e-9, 6.4e7, 2e6, N0))
+    assert np.isinf(below).all()                   # sub-floor: cannot transmit
 
 
 def test_context_rejects_sub_floor_gss_bracket():

@@ -14,7 +14,12 @@ state-threaded rounds:
 * the fairness EMA (and the duals, where carried) stay lawful:
   q in [0, 1], lam >= 0, mu >= 0;
 * no battery-depleted (alive=False) client is ever selected by the
-  FairEnergy solver.
+  FairEnergy solver;
+* the async-round physics (repro.core.rounds) stays lawful on every
+  controller's realized allocations: partial (deadline-truncated) energy
+  never exceeds the full round energy, staleness weights sit in (0, 1],
+  batteries never go negative through a debit + harvest cycle, and a
+  zero-deadline round aggregates nothing yet still advances state.
 
 With hypothesis installed (CI: the pinned-seed profile from conftest.py
 — derandomized in CI, reproduction blob printed locally) the draws are
@@ -137,6 +142,74 @@ def run_dead_client_invariants(n, seed, dead_frac):
         _check_state(state, "fairenergy+alive")
 
 
+def run_async_round_invariants(name, n, seed):
+    """Deadline/staleness/harvesting physics on the controller's OWN
+    realized allocations: for every decision the deadline-truncated
+    partial energy is bounded by the full round energy at any deadline,
+    staleness weights are lawful at any age, and a debit + harvest cycle
+    keeps every battery in [0, capacity]."""
+    from repro.core.channel import comm_time
+    from repro.core.rounds import (apply_harvest, harvest_rates,
+                                   partial_round_energy, staleness_weight)
+    rng = np.random.default_rng(seed + 57)
+    e_cmp = rng.uniform(1e-5, 5e-3, n)
+    t_cmp = jnp.asarray(rng.uniform(0.0, 0.02, n), jnp.float32)
+    cap = jnp.asarray(rng.uniform(1e-3, 1e-1, n), jnp.float32)
+    battery = jnp.array(cap)
+    rates = harvest_rates(None, n, 2e-4)
+    hkey = jax.random.PRNGKey(seed + 13)
+    ctrl = make_controller(name, _ctx(n, 10e6, tuple(e_cmp)))
+    state = ctrl.init(n)
+    for r in range(ROUNDS):
+        obs = _obs(n, seed, r)
+        dec, state = ctrl.decide(obs, state)
+        x = np.asarray(dec.x).astype(bool)
+        # realized comm time under the decision's allocation (unselected
+        # rows priced at B_tot: their inf comm_time is never charged)
+        b_safe = jnp.where(jnp.asarray(dec.x), dec.bandwidth, 10e6)
+        t_comm = comm_time(dec.gamma, b_safe, obs.P, obs.h,
+                           S_BITS, I_BITS, N0)
+        full = np.asarray(e_cmp + np.asarray(obs.P) * np.asarray(t_comm))
+        for deadline in (0.0, 1e-3, float(np.median(np.asarray(t_comm))),
+                         np.inf):
+            part = np.asarray(partial_round_energy(
+                t_cmp, t_comm, jnp.asarray(e_cmp, jnp.float32), obs.P,
+                deadline))
+            assert (part >= -1e-12).all(), (name, r, deadline)
+            assert (part <= full * (1 + 1e-5) + 1e-12).all(), \
+                (name, r, deadline)
+        w = np.asarray(staleness_weight(jnp.arange(-1, 30, dtype=jnp.int32),
+                                        0.5))
+        assert ((w > 0.0) & (w <= 1.0)).all(), name
+        # debit + harvest: charge never leaves [0, capacity]
+        battery = jnp.maximum(battery - jnp.asarray(dec.energy) *
+                              x.astype(np.float32), 0.0)
+        battery = apply_harvest(battery, cap, hkey, r, rates)
+        b = np.asarray(battery)
+        assert (b >= 0.0).all(), (name, r)
+        assert (b <= np.asarray(cap) + 1e-9).all(), (name, r)
+
+
+def run_zero_deadline_invariants(name):
+    """A zero deadline makes every client infeasible: nobody is selected,
+    nothing aggregates (params bitwise unchanged), no energy is charged —
+    yet the engine still advances (rounds log, wall-clock 0)."""
+    from test_scan_engine import make_trainer, _flat
+    from repro.core.rounds import AsyncConfig
+    kw = {"fixed_k": 3} if name in ("randomfull", "channelgreedy") else {}
+    tr = make_trainer(name, device_profile="tiered",
+                      async_cfg=AsyncConfig(deadline_s=0.0), **kw)
+    p0 = _flat(tr.params)
+    tr.run_scanned(2, verbose=False)
+    assert len(tr.history) == 2
+    for lg in tr.history:
+        assert lg.n_selected == 0, name
+        assert not lg.made.any(), name
+        assert (lg.energy == 0.0).all(), name
+        assert lg.t_round == 0.0, name
+    np.testing.assert_array_equal(p0, _flat(tr.params), err_msg=name)
+
+
 def run_huge_comp_invariants(seed):
     """With computation energy far above any achievable benefit nobody is
     worth selecting — and the empty decision is still lawful (no NaNs,
@@ -171,6 +244,12 @@ if _HYP:
     @settings(max_examples=10, deadline=None)
     def test_fairenergy_huge_comp_energy_stays_lawful(seed):
         run_huge_comp_invariants(seed)
+
+    @pytest.mark.parametrize("name", available_controllers())
+    @given(n=st.sampled_from(NS), seed=st.integers(0, 200))
+    @settings(max_examples=10, deadline=None)
+    def test_async_round_invariants(name, n, seed):
+        run_async_round_invariants(name, n, seed)
 else:
     # deterministic fallback grid (hypothesis-less environments)
     _DRAWS = [(n, seed, btot_exp, comp)
@@ -190,3 +269,15 @@ else:
     @pytest.mark.parametrize("seed", [0, 42, 99])
     def test_fairenergy_huge_comp_energy_stays_lawful(seed):
         run_huge_comp_invariants(seed)
+
+    @pytest.mark.parametrize("name", available_controllers())
+    @pytest.mark.parametrize("n,seed", [(5, 0), (8, 17), (13, 101)])
+    def test_async_round_invariants(name, n, seed):
+        run_async_round_invariants(name, n, seed)
+
+
+# the zero-deadline engine check runs the (small) trainer fixture, so it
+# stays a plain parametrized test in both environments
+@pytest.mark.parametrize("name", available_controllers())
+def test_zero_deadline_aggregates_nothing_but_advances(name):
+    run_zero_deadline_invariants(name)
