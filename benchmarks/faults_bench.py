@@ -1,0 +1,237 @@
+"""Macrobenchmark: graceful degradation of the FL loop under faults.
+
+Three accuracy arms on the same model / data / controller (fairenergy),
+on a tiered-device fleet with open-population churn:
+
+* ``fault_free`` — no injection, no defense: the reference trajectory;
+* ``undefended`` — 20% payload corruption (mixed NaN/Inf/outlier), 10%
+  mid-round crashes, channel-estimate error, churn — with the legacy
+  weighted-mean aggregator. The engine's finite-guard rejects rounds
+  whose aggregate is poisoned, so the model survives but forfeits the
+  progress of every rejected round;
+* ``defended`` — identical fault stream, but the defended aggregator
+  (finite screen + norm clipping + trimmed mean) scrubs poisoned rows
+  shard-locally, so rounds keep landing.
+
+The headline number is ``defended`` final accuracy as a fraction of
+``fault_free`` (budget: >= 0.9) vs the ``undefended`` degradation. A
+separate **overhead** pair times the fused scan with the fault subsystem
+*disabled* against the pre-change legacy program — a disabled
+``FaultConfig`` must compile the identical scan, so the budget is a
+tight <= 2%.
+
+Writes ``BENCH_faults.json`` at the repo root (in ``--fast`` mode too,
+tagged ``"fast": true`` — the CI smoke only checks it runs end to end).
+
+  PYTHONPATH=src python -m benchmarks.faults_bench [--fast] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ChannelConfig, FairEnergyConfig, FLConfig
+from repro.core.energy import make_profile
+from repro.core.faults import DefenseConfig, FaultConfig
+from repro.fl import FederatedTrainer
+
+D_IN, D_HIDDEN, N_CLASSES = 64, 128, 10
+SHARD = 160
+
+REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+
+def _loss_fn(p, batch):
+    hid = jnp.tanh(batch["x"] @ p["w1"])
+    ll = jax.nn.log_softmax(hid @ p["w2"])
+    return -jnp.mean(jnp.take_along_axis(ll, batch["y"][:, None], 1)), {}
+
+
+def make_trainer(n_clients: int, seed: int, profile=None, fault_cfg=None,
+                 defense=None, local_steps=2, batch=32):
+    rng = np.random.default_rng(7)        # fixed model/data across seeds
+    params = {"w1": jnp.asarray(rng.normal(size=(D_IN, D_HIDDEN))
+                                .astype(np.float32) * 0.05),
+              "w2": jnp.asarray(rng.normal(size=(D_HIDDEN, N_CLASSES))
+                                .astype(np.float32) * 0.05)}
+    # Labels from a fixed random linear teacher so accuracy genuinely
+    # climbs — degradation under faults is then a real accuracy gap, not
+    # noise around chance level.
+    teacher = rng.normal(size=(D_IN, N_CLASSES)).astype(np.float32)
+
+    def draw(n):
+        x = rng.normal(size=(n, D_IN)).astype(np.float32)
+        logits = x @ teacher + 0.5 * rng.normal(size=(n, N_CLASSES))
+        return x, logits.argmax(-1)
+
+    datasets = []
+    for _ in range(n_clients):
+        x, y = draw(SHARD)
+        datasets.append({"x": x, "y": y})
+    tx, ty = draw(512)
+    tx, ty = jnp.asarray(tx), jnp.asarray(ty)
+
+    def eval_fn(p):
+        lg = jnp.tanh(tx @ p["w1"]) @ p["w2"]
+        return jnp.mean((jnp.argmax(lg, -1) == ty).astype(jnp.float32))
+
+    return FederatedTrainer(
+        model_loss=_loss_fn, model_params=params, client_datasets=datasets,
+        eval_fn=eval_fn,
+        fl_cfg=FLConfig(local_steps=local_steps, local_batch=batch, lr=0.05),
+        fe_cfg=FairEnergyConfig(), ch_cfg=ChannelConfig(n_clients=n_clients),
+        controller="fairenergy", seed=seed, device_profile=profile,
+        fault_cfg=fault_cfg, defense=defense)
+
+
+FAULTS = FaultConfig(crash_rate=0.1, corrupt_rate=0.2, corrupt_mode="mixed",
+                     h_err_std=0.2, churn_dwell=4, churn_away=0.3)
+
+# The scaled-corruption mode ships finite sign-flipped outliers that
+# survive the finite screen and, even norm-clipped, inject anti-signal
+# at the max admissible norm — the coordinate-wise trimmed mean is the
+# layer that actually removes them, so the defended arm runs all three.
+DEFENSE = DefenseConfig(clip_mult=2.0, trim_frac=0.15)
+
+ARMS = {
+    "fault_free": (None, None),
+    "undefended": (FAULTS, None),
+    "defended": (FAULTS, DEFENSE),
+}
+
+
+def _arm_stats(tr):
+    accs = np.array([lg.accuracy for lg in tr.history])
+    params_finite = bool(all(bool(jnp.all(jnp.isfinite(x)))
+                             for x in jax.tree_util.tree_leaves(tr.params)))
+    s = {"final_acc": float(accs[-1]), "best_acc": float(accs.max()),
+         "rounds_run": len(tr.history), "params_finite": params_finite}
+    if tr.history[0].n_faulted is not None:
+        s["n_faulted"] = int(sum(lg.n_faulted for lg in tr.history))
+        s["n_rejected_rounds"] = int(sum(lg.n_rejected > 0
+                                         for lg in tr.history))
+        s["mean_clip_frac"] = round(float(np.mean(
+            [lg.clip_frac for lg in tr.history])), 6)
+        s["n_fallback_rounds"] = int(sum(bool(lg.fallback)
+                                         for lg in tr.history))
+    return s
+
+
+def run_accuracy_arms(n_clients, rounds, seeds, verbose=False):
+    out = {name: [] for name in ARMS}
+    for seed in seeds:
+        profile = make_profile("tiered", n_clients, seed=seed)
+        for name, (fcfg, dcfg) in ARMS.items():
+            tr = make_trainer(n_clients, seed, profile=profile,
+                              fault_cfg=fcfg, defense=dcfg)
+            tr.run_scanned(rounds, verbose=False)
+            s = _arm_stats(tr)
+            out[name].append(s)
+            if verbose:
+                print(f"  seed {seed} {name:11s} final {s['final_acc']:.3f} "
+                      f"best {s['best_acc']:.3f} "
+                      f"finite {s['params_finite']}")
+    return out
+
+
+def run_overhead_pair(n_clients, rounds, reps=3):
+    """Host wall-clock of the fused scan: fault subsystem constructed but
+    DISABLED (must compile the identical legacy program) vs the plain
+    legacy trainer. Interleaved best-of-reps timing; budget <= 2%."""
+    profile = make_profile("uniform", n_clients)
+    tr_legacy = make_trainer(n_clients, 0, profile=profile)
+    tr_faults = make_trainer(n_clients, 0, profile=profile,
+                             fault_cfg=FaultConfig())     # disabled
+    for tr in (tr_legacy, tr_faults):     # compile + warm up
+        tr.run_scanned(rounds, verbose=False)
+    best = {"legacy": float("inf"), "faults_disabled": float("inf")}
+    for _ in range(reps):
+        for name, tr in (("legacy", tr_legacy),
+                         ("faults_disabled", tr_faults)):
+            t0 = time.perf_counter()
+            tr.run_scanned(rounds, verbose=False)
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return {
+        "rounds": rounds,
+        "legacy_rounds_per_sec": round(rounds / best["legacy"], 2),
+        "faults_disabled_rounds_per_sec": round(
+            rounds / best["faults_disabled"], 2),
+        "overhead_pct": round(
+            100.0 * (best["faults_disabled"] / best["legacy"] - 1.0), 2),
+    }
+
+
+def _mean(vals):
+    vals = [v for v in vals if v is not None]
+    return round(float(np.mean(vals)), 6) if vals else None
+
+
+def bench(n_clients=50, rounds=30, seeds=(0, 1, 2), overhead_rounds=30,
+          fast=False, verbose=True):
+    arms = run_accuracy_arms(n_clients, rounds, seeds, verbose=verbose)
+    res = {
+        "workload": "softmax tiered-fleet / fairenergy",
+        "fast": fast,
+        "n_clients": n_clients, "rounds": rounds, "seeds": list(seeds),
+        "faults": {"crash_rate": FAULTS.crash_rate,
+                   "corrupt_rate": FAULTS.corrupt_rate,
+                   "corrupt_mode": FAULTS.corrupt_mode,
+                   "h_err_std": FAULTS.h_err_std,
+                   "churn_dwell": FAULTS.churn_dwell,
+                   "churn_away": FAULTS.churn_away},
+        "arms": {},
+    }
+    for name, stats in arms.items():
+        a = {"final_acc_mean": _mean([s["final_acc"] for s in stats]),
+             "best_acc_mean": _mean([s["best_acc"] for s in stats]),
+             "all_finite": all(s["params_finite"] for s in stats),
+             "per_seed": stats}
+        if "n_faulted" in stats[0]:
+            a["n_faulted_mean"] = _mean([s["n_faulted"] for s in stats])
+            a["n_rejected_rounds_mean"] = _mean(
+                [s["n_rejected_rounds"] for s in stats])
+            a["mean_clip_frac"] = _mean([s["mean_clip_frac"] for s in stats])
+            a["n_fallback_rounds_mean"] = _mean(
+                [s["n_fallback_rounds"] for s in stats])
+        res["arms"][name] = a
+    ref = res["arms"]["fault_free"]["final_acc_mean"]
+    for name in ("undefended", "defended"):
+        acc = res["arms"][name]["final_acc_mean"]
+        res["arms"][name]["acc_vs_fault_free"] = (
+            round(acc / ref, 4) if ref else None)
+    res["overhead_uniform"] = run_overhead_pair(n_clients, overhead_rounds)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: tiny fleet / 1 seed / few rounds, "
+                         "result not meaningful")
+    ap.add_argument("--clients", type=int, default=50)
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--out", default=os.path.join(REPO_ROOT,
+                                                  "BENCH_faults.json"))
+    a = ap.parse_args()
+    if a.fast:
+        res = bench(n_clients=8, rounds=6, seeds=(0,), overhead_rounds=4,
+                    fast=True, verbose=False)
+    else:
+        res = bench(n_clients=a.clients, rounds=a.rounds,
+                    seeds=tuple(range(a.seeds)))
+    print(json.dumps(res, indent=1))
+    with open(a.out, "w") as f:
+        json.dump(res, f, indent=1)
+        f.write("\n")
+    print(f"wrote {a.out}")
+
+
+if __name__ == "__main__":
+    main()

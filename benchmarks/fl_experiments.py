@@ -30,23 +30,38 @@ DATA_KW = dict(confusion=0.55, label_noise=0.05, noise=0.9)
 
 def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
           lr=0.05, local_steps=2, mesh=None, scenario=None,
-          deadline=None, staleness_a=None):
+          deadline=None, staleness_a=None, fault_rate=None, crash_rate=None,
+          churn=None, defense=None):
     cfg = CNN_FULL
     scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
     beta = scn.beta(0.3) if scn else 0.3
     ch_cfg = ChannelConfig(n_clients=n_clients)
     profile = None
     async_cfg = None
+    fault_cfg = None
+    defense_cfg = None
     if scn:
         ch_cfg = scn.apply_channel(ch_cfg)
         profile = scn.device_profile(n_clients, seed=seed)
         async_cfg = scn.async_config(deadline_s=deadline,
                                      staleness_a=staleness_a)
+        fault_cfg = scn.fault_config(crash_rate=crash_rate,
+                                     corrupt_rate=fault_rate)
+        defense_cfg = scn.defense_config(defended=defense)
     elif deadline is not None:
         from repro.core.rounds import AsyncConfig
         async_cfg = AsyncConfig(deadline_s=deadline,
                                 staleness_a=staleness_a
                                 if staleness_a is not None else 0.5)
+    if scn is None and (fault_rate or crash_rate or churn):
+        from repro.core.faults import FaultConfig
+        fault_cfg = FaultConfig(
+            crash_rate=crash_rate or 0.0, corrupt_rate=fault_rate or 0.0,
+            churn_dwell=4 if churn else 0, churn_away=churn or 0.3)
+        fault_cfg = fault_cfg if fault_cfg.enabled else None
+    if scn is None and defense:
+        from repro.core.faults import DefenseConfig
+        defense_cfg = DefenseConfig()
     imgs, labels = make_fmnist_like(n_train, seed=seed, **DATA_KW)
     ti, tl = make_fmnist_like(n_test, seed=seed + 999,
                               **dict(DATA_KW, label_noise=0.0))
@@ -70,7 +85,8 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
                                 fl_cfg=fl_cfg, fe_cfg=FairEnergyConfig(),
                                 ch_cfg=ch_cfg, controller=controller,
                                 seed=seed, mesh=mesh, device_profile=profile,
-                                async_cfg=async_cfg, **kw)
+                                async_cfg=async_cfg, fault_cfg=fault_cfg,
+                                defense=defense_cfg, **kw)
     return make, fl_cfg
 
 
@@ -135,6 +151,14 @@ def run_all(n_clients=20, rounds=60, target=0.80, seed=0, verbose=True,
                 wallclock_to_target_s=tr.wallclock_to_accuracy(target),
                 n_late=int(sum(lg.n_late for lg in tr.history)),
                 n_stale=int(sum(lg.n_stale for lg in tr.history)))
+        if tr.history and tr.history[0].n_faulted is not None:
+            results["strategies"][name].update(
+                n_faulted=int(sum(lg.n_faulted for lg in tr.history)),
+                n_rejected=int(sum(lg.n_rejected for lg in tr.history)),
+                mean_clip_frac=float(np.mean([lg.clip_frac
+                                              for lg in tr.history])),
+                n_fallback_rounds=int(sum(bool(lg.fallback)
+                                          for lg in tr.history)))
 
     if sweep_seeds:
         sweep = {"seeds": [int(s) for s in sweep_seeds], "strategies": {}}
@@ -218,6 +242,11 @@ def summarize(res):
         print(f"{name:14s}{acc:10.3f}{epr:12.3f}"
               f"{(f'{e2t:.3f}' if e2t else 'n/a'):>12s}"
               f"{p['min']:>8d}/{p['max']:<4d}{p['std']:6.2f}")
+        if "n_faulted" in s:
+            print(f"{'':14s}faults: {s['n_faulted']} injected, "
+                  f"{s['n_rejected']} rejected, clip "
+                  f"{s['mean_clip_frac']:.2f}, "
+                  f"{s['n_fallback_rounds']} solver-fallback rounds")
     fe = res["strategies"]["fairenergy"].get("energy_to_target_J")
     for base in ("scoremax", "ecorandom"):
         bt = res["strategies"].get(base, {}).get("energy_to_target_J")
@@ -279,6 +308,23 @@ if __name__ == "__main__":
                     help="staleness decay exponent a in w(tau)=(1+tau)^-a "
                          "(only takes effect when the scenario buffers late "
                          "updates, e.g. --scenario straggler)")
+    ap.add_argument("--fault-rate", type=float, default=None,
+                    help="payload corruption rate (repro.core.faults): "
+                         "fraction of delivered updates replaced with "
+                         "NaN/Inf/scaled garbage; overrides the scenario "
+                         "preset's corrupt_rate")
+    ap.add_argument("--crash-rate", type=float, default=None,
+                    help="mid-round crash rate: selected clients that pay "
+                         "partial energy but deliver no update; overrides "
+                         "the scenario preset's crash_rate")
+    ap.add_argument("--churn", type=float, default=None,
+                    help="open-population away probability on 4-round dwell "
+                         "epochs (scenario-less runs; use --scenario churn "
+                         "for the preset)")
+    ap.add_argument("--defense", action="store_true", default=None,
+                    help="robust aggregation (finite screen + norm clipping "
+                         "to a streaming quantile); overrides the scenario "
+                         "preset's defended flag")
     ap.add_argument("--shard-clients", action="store_true",
                     help="run the fused engine sharded over a `clients` "
                          "mesh spanning all visible devices (force multiple "
@@ -307,6 +353,8 @@ if __name__ == "__main__":
     kw = dict(out=a.out, extra_baselines=a.extra_baselines,
               eval_every=a.eval_every, mesh=mesh, scenario=a.scenario,
               deadline=a.deadline, staleness_a=a.staleness_a,
+              fault_rate=a.fault_rate, crash_rate=a.crash_rate,
+              churn=a.churn, defense=a.defense,
               sweep_seeds=list(range(a.seeds)) if a.seeds else None,
               config_sweep=config_sweep)
     if a.paper:

@@ -1,6 +1,6 @@
 """npz-based pytree checkpointing (no orbax offline)."""
-from .ckpt import (save_checkpoint, restore_checkpoint, latest_checkpoint,
-                   load_metadata)
+from .ckpt import (CheckpointError, save_checkpoint, restore_checkpoint,
+                   latest_checkpoint, load_metadata, verify_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_checkpoint",
-           "load_metadata"]
+__all__ = ["CheckpointError", "save_checkpoint", "restore_checkpoint",
+           "latest_checkpoint", "load_metadata", "verify_checkpoint"]

@@ -1,12 +1,34 @@
-"""Flatten a pytree to path-keyed numpy arrays in a single .npz file."""
+"""Flatten a pytree to path-keyed numpy arrays in a single .npz file.
+
+Integrity hardening (``repro.core.faults`` PR): every save records a
+per-array CRC-32 checksum, dtype, and shape in the ``__integrity__``
+entry. ``restore_checkpoint`` re-verifies each array against that record
+and raises a descriptive ``CheckpointError`` on any mismatch — a
+bit-flipped payload, a truncated/partial file (interrupted write), a
+missing leaf, or a dtype drift — instead of silently resuming a training
+trajectory from corrupt state. ``latest_checkpoint`` validates its
+candidates and skips (with a warning) any that fail, so an interrupted
+final save falls back to the previous good checkpoint. Checkpoints
+written before the integrity record load permissively (no checksums to
+check), keeping old files restorable.
+"""
 from __future__ import annotations
 
 import json
 import os
 import re
+import warnings
+import zipfile
+import zlib
 
 import jax
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint failed to load or verify: corrupt/truncated file,
+    checksum mismatch, missing array, or structure drift. The message
+    names the file and the first offending entry."""
 
 
 def _flatten_with_paths(tree):
@@ -18,38 +40,137 @@ def _flatten_with_paths(tree):
     return out
 
 
+def _integrity_record(arrays: dict) -> dict:
+    """{key: [crc32, dtype, shape]} over the saved payload bytes. CRC-32
+    (zlib) is fast and catches every single-bit flip; this is a
+    corruption tripwire, not a cryptographic seal."""
+    return {k: [zlib.crc32(np.ascontiguousarray(v).tobytes()),
+                str(v.dtype), list(v.shape)]
+            for k, v in arrays.items()}
+
+
 def save_checkpoint(directory: str, step: int, tree, metadata: dict | None = None) -> str:
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
     arrays = _flatten_with_paths(tree)
-    np.savez(path, __meta__=json.dumps(metadata or {}), **arrays)
+    np.savez(path, __meta__=json.dumps(metadata or {}),
+             __integrity__=json.dumps(_integrity_record(arrays)), **arrays)
     return path
 
 
+def _load_npz(path: str):
+    """Load every entry of the npz eagerly, converting the zip/parse
+    failure modes of a truncated or garbled file into CheckpointError."""
+    try:
+        with np.load(path, allow_pickle=False) as data:
+            return {k: data[k] for k in data.files}
+    except FileNotFoundError:
+        raise
+    except (zipfile.BadZipFile, OSError, EOFError, KeyError,
+            ValueError) as e:
+        # np.load raises zipfile.BadZipFile on a torn header or a member
+        # whose zip-level CRC fails; EOFError/ValueError/KeyError on
+        # truncated members
+        raise CheckpointError(
+            f"checkpoint {path!r} is unreadable (truncated or corrupt "
+            f"file): {type(e).__name__}: {e}") from e
+
+
+def _verify(path: str, entries: dict) -> None:
+    """Check every payload array against the ``__integrity__`` record.
+    Checkpoints predating the record pass (nothing to verify)."""
+    if "__integrity__" not in entries:
+        return
+    try:
+        record = json.loads(str(entries["__integrity__"]))
+    except (ValueError, TypeError) as e:
+        raise CheckpointError(
+            f"checkpoint {path!r}: integrity record is unparseable: {e}") from e
+    payload = {k: v for k, v in entries.items()
+               if k not in ("__meta__", "__integrity__")}
+    missing = sorted(set(record) - set(payload))
+    if missing:
+        raise CheckpointError(
+            f"checkpoint {path!r}: arrays {missing} are recorded in the "
+            f"integrity manifest but absent from the file (partial write?)")
+    extra = sorted(set(payload) - set(record))
+    if extra:
+        raise CheckpointError(
+            f"checkpoint {path!r}: arrays {extra} are present but not in "
+            f"the integrity manifest (mixed/garbled file?)")
+    for key, (crc, dtype, shape) in record.items():
+        arr = payload[key]
+        if str(arr.dtype) != dtype or list(arr.shape) != list(shape):
+            raise CheckpointError(
+                f"checkpoint {path!r}: array {key!r} has dtype/shape "
+                f"{arr.dtype}/{list(arr.shape)}, recorded "
+                f"{dtype}/{shape}")
+        if zlib.crc32(np.ascontiguousarray(arr).tobytes()) != crc:
+            raise CheckpointError(
+                f"checkpoint {path!r}: array {key!r} fails its CRC-32 "
+                f"check — the file is corrupt (bit flip or partial "
+                f"write); restore from an earlier checkpoint")
+
+
+def verify_checkpoint(path: str) -> bool:
+    """True iff ``path`` loads cleanly and passes its integrity record
+    (vacuously true for pre-record checkpoints)."""
+    try:
+        _verify(path, _load_npz(path))
+        return True
+    except CheckpointError:
+        return False
+
+
 def restore_checkpoint(path: str, like_tree):
-    """Restore into the structure of ``like_tree`` (paths must match)."""
-    with np.load(path, allow_pickle=False) as data:
-        arrays = {k: data[k] for k in data.files if k != "__meta__"}
+    """Restore into the structure of ``like_tree`` (paths must match).
+    Verifies the integrity record first; raises ``CheckpointError`` on
+    corruption or on a leaf missing/shape-mismatched vs ``like_tree``."""
+    entries = _load_npz(path)
+    _verify(path, entries)
+    arrays = {k: v for k, v in entries.items()
+              if k not in ("__meta__", "__integrity__")}
     flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
     leaves = []
     for path_k, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        if key not in arrays:
+            raise CheckpointError(
+                f"checkpoint {path!r} has no array for leaf {key!r}; "
+                f"saved keys: {sorted(arrays)[:8]}...")
         arr = arrays[key]
-        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
-        leaves.append(arr.astype(leaf.dtype))
+        if arr.shape != np.shape(leaf):
+            raise CheckpointError(
+                f"checkpoint {path!r}: leaf {key!r} has shape "
+                f"{arr.shape}, expected {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
     return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
 
 
 def load_metadata(path: str) -> dict:
     """The ``metadata`` dict a checkpoint was saved with ({} if none)."""
-    with np.load(path, allow_pickle=False) as data:
-        if "__meta__" not in data.files:
-            return {}
-        return json.loads(str(data["__meta__"]))
+    entries = _load_npz(path)
+    if "__meta__" not in entries:
+        return {}
+    try:
+        return json.loads(str(entries["__meta__"]))
+    except (ValueError, TypeError) as e:
+        raise CheckpointError(
+            f"checkpoint {path!r}: metadata is unparseable: {e}") from e
 
 
 def latest_checkpoint(directory: str) -> str | None:
+    """Newest checkpoint in ``directory`` that passes verification.
+    Corrupt/truncated candidates are skipped with a warning (newest
+    first), so an interrupted final save falls back to the previous
+    good checkpoint; None when no valid candidate remains."""
     if not os.path.isdir(directory):
         return None
     cands = sorted(f for f in os.listdir(directory) if re.match(r"ckpt_\d+\.npz", f))
-    return os.path.join(directory, cands[-1]) if cands else None
+    for name in reversed(cands):
+        path = os.path.join(directory, name)
+        if verify_checkpoint(path):
+            return path
+        warnings.warn(f"skipping corrupt checkpoint {path!r} "
+                      f"(failed integrity verification)")
+    return None

@@ -150,6 +150,14 @@ class FairEnergyConfig:
     # duals, in primal units — falls below this; 0 disables (fixed-point
     # exits only, which reproduce the full-cap trajectory exactly)
     dual_tol: float = 1e-3
+    # graceful degradation (repro.core.faults): compile a divergence/NaN
+    # guard around the dual ascent — if the residual is not shrinking at
+    # the iteration cap (or the observation is non-finite) the round
+    # falls back to a feasible eco decision (top-k by channel, equal
+    # bandwidth split) with duals reverted, surfaced in
+    # RoundDecision.fallback. Off by default: zero extra ops, and golden
+    # trajectories legitimately hit the cap while still converging.
+    solver_fallback: bool = False
 
 
 @dataclass(frozen=True)

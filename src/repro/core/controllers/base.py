@@ -38,7 +38,13 @@ Array = jnp.ndarray
 
 
 class RoundObservation(NamedTuple):
-    """Everything a controller may look at in round r."""
+    """Everything a controller may look at in round r.
+
+    Under fault injection with channel-estimate error
+    (``repro.core.faults``), ``h`` is the controller's noisy *estimate*
+    ``h_est`` — the round engine realizes the transmission on the true
+    channel and re-charges energy accordingly, so controllers must treat
+    ``h`` as a belief, not ground truth."""
     u_norms: Array    # [N] — ||u_i^r||_2 reported by each client
     h: Array          # [N] — instantaneous channel gains h_i^r
     P: Array          # [N] — transmit powers P_i
@@ -124,7 +130,14 @@ class ControllerContext:
 
 @runtime_checkable
 class Controller(Protocol):
-    """Structural type every strategy implements."""
+    """Structural type every strategy implements.
+
+    Controllers with per-client learned state (fairness EMAs, duals) MAY
+    additionally implement ``reset_clients(state, mask) -> state`` — the
+    open-population hook (``repro.core.faults``): the round engine calls
+    it with an [N] bool mask of clients that (re)arrived this round, and
+    the controller must give those lanes fresh state. Stateless
+    controllers simply omit it."""
 
     def init(self, n_clients: int) -> Any: ...
 

@@ -68,3 +68,12 @@ class FairEnergy:
         # init from the context) — config lanes vmap over the state
         return solve_round(obs.u_norms, obs.h, obs.P, state,
                            fe_cfg=self.fe_cfg, alive=obs.alive)
+
+    def reset_clients(self, state, mask):
+        """Open-population hook (``repro.core.faults``): give the masked
+        (newly arrived) clients fresh fairness state — participation EMA
+        back to q0, fairness dual back to zero — so a returning slot
+        does not inherit the departed occupant's participation debt."""
+        q0 = jnp.float32(self.fe_cfg.q0)
+        return state._replace(q=jnp.where(mask, q0, state.q),
+                              mu=jnp.where(mask, 0.0, state.mu))

@@ -69,6 +69,10 @@ class RoundDecision(NamedTuple):
     mu: Array         # [N] fairness duals
     n_inner: Array    # inner dual-ascent iterations actually run
     bw_used: Array    # sum of allocated bandwidth (Hz)
+    fallback: Array = False  # True when the round came from the graceful-
+                             # degradation fallback (diverged duals or a
+                             # non-finite observation); always False unless
+                             # FEStatic.fallback compiled the guard in
 
 
 class FEParams(NamedTuple):
@@ -99,6 +103,7 @@ class FEStatic(NamedTuple):
     gss_iters: int
     solver: str          # "newton" | "gss"
     use_pallas: bool
+    fallback: bool = False  # compile the divergence/NaN guard + eco fallback
 
 
 class ControllerState(NamedTuple):
@@ -131,7 +136,8 @@ def static_of(cfg) -> FEStatic:
                     newton_iters=int(getattr(cfg, "newton_iters", 3)),
                     gss_iters=int(cfg.gss_max_iters),
                     solver=solver,
-                    use_pallas=bool(getattr(cfg, "use_pallas_solver", False)))
+                    use_pallas=bool(getattr(cfg, "use_pallas_solver", False)),
+                    fallback=bool(getattr(cfg, "solver_fallback", False)))
 
 
 def init_state(cfg, n_clients: int, *, b_tot: float = None,
@@ -279,52 +285,131 @@ def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
     # violation still moving the duals. Warm starts inherit near-converged
     # duals from the previous round, so this exits in a few iterations;
     # round 0 ramps lam from zero and runs much longer.
-    def cond(carry):
-        _, _, i, res = carry
-        return (i < static.inner_iters) & (res > p.dual_tol)
-
-    def body(carry):
-        lam, mu, i, _ = carry
-        new_lam, new_mu = dual_step(lam, mu)
+    def residual(new_lam, lam, new_mu, mu):
         # a zero dual step is a legal sweep point (that dual disabled);
         # its updates are identically 0, so guard the 0/0 — the disabled
         # dual contributes no residual rather than a NaN that would
         # short-circuit the loop
-        res = jnp.maximum(
+        return jnp.maximum(
             jnp.abs(new_lam - lam) / jnp.maximum(p.alpha_lambda, 1e-30),
             jnp.max(jnp.abs(new_mu - mu)) / jnp.maximum(p.alpha_mu, 1e-30))
-        return new_lam, new_mu, i + 1, res
 
-    lam, mu, n_inner, _ = jax.lax.while_loop(
-        cond, body, (state.lam, state.mu, jnp.int32(0), jnp.float32(jnp.inf)))
+    if static.fallback:
+        # the guarded loop additionally carries the previous residual so
+        # the cap-hit test can distinguish "still shrinking, just slow"
+        # from genuine divergence
+        def cond(carry):
+            _, _, i, res, _ = carry
+            return (i < static.inner_iters) & (res > p.dual_tol)
 
-    # final primal extraction at converged duals
-    gamma_i, b_i, e_i, _ = best_response(lam)
-    benefit = eta * contribution_score(u_norms, gamma_i) + mu * (1.0 - rho) \
-        - e_i - lam * b_i
-    x = (benefit > 0) & alive
+        def body(carry):
+            lam, mu, i, res_in, _ = carry
+            new_lam, new_mu = dual_step(lam, mu)
+            res = residual(new_lam, lam, new_mu, mu)
+            return new_lam, new_mu, i + 1, res, res_in
 
-    # ---- repair: greedy keep until the bandwidth budget fits.  Clients
-    # whose participation EMA would violate q >= pi_min if dropped are kept
-    # FIRST (then by benefit) — a benefit-only repair silently undoes the
-    # fairness the duals enforced (measured: min participation 0.14 < pi_min
-    # at rho=0.6) ----
-    deficit = (p.pi_min - rho * state.q) > 0.0               # violated if x_i=0
-    prio = jnp.where(deficit, 1e6, 0.0) + benefit
-    order = jnp.argsort(jnp.where(x, -prio, jnp.inf))        # selected, priority first
-    b_sorted = b_i[order] * x[order]
-    cum = jnp.cumsum(b_sorted)
-    keep_sorted = (cum <= 1.0) & x[order]
-    keep = jnp.zeros((N,), bool).at[order].set(keep_sorted)
-    x = x & keep
+        lam, mu, n_inner, res, res_prev = jax.lax.while_loop(
+            cond, body, (state.lam, state.mu, jnp.int32(0),
+                         jnp.float32(jnp.inf), jnp.float32(jnp.inf)))
+    else:
+        def cond(carry):
+            _, _, i, res = carry
+            return (i < static.inner_iters) & (res > p.dual_tol)
 
-    xf = x.astype(jnp.float32)
-    bandwidth = xf * b_i * p.b_tot
-    energy = xf * e_i
-    q_new = rho * state.q + (1.0 - rho) * xf                 # eq. (1)
+        def body(carry):
+            lam, mu, i, _ = carry
+            new_lam, new_mu = dual_step(lam, mu)
+            res = residual(new_lam, lam, new_mu, mu)
+            return new_lam, new_mu, i + 1, res
 
-    dec = RoundDecision(x=x, gamma=jnp.where(x, gamma_i, 0.0),
-                        bandwidth=bandwidth, energy=energy, lam=lam, mu=mu,
-                        n_inner=n_inner, bw_used=jnp.sum(bandwidth))
-    return dec, ControllerState(lam=lam, mu=mu, q=q_new, params=p,
+        lam, mu, n_inner, _ = jax.lax.while_loop(
+            cond, body,
+            (state.lam, state.mu, jnp.int32(0), jnp.float32(jnp.inf)))
+
+    def extract_primal(lam, mu):
+        """Final primal extraction at converged duals + greedy repair."""
+        gamma_i, b_i, e_i, _ = best_response(lam)
+        benefit = eta * contribution_score(u_norms, gamma_i) \
+            + mu * (1.0 - rho) - e_i - lam * b_i
+        x = (benefit > 0) & alive
+
+        # ---- repair: greedy keep until the bandwidth budget fits.
+        # Clients whose participation EMA would violate q >= pi_min if
+        # dropped are kept FIRST (then by benefit) — a benefit-only
+        # repair silently undoes the fairness the duals enforced
+        # (measured: min participation 0.14 < pi_min at rho=0.6) ----
+        deficit = (p.pi_min - rho * state.q) > 0.0           # violated if x_i=0
+        prio = jnp.where(deficit, 1e6, 0.0) + benefit
+        order = jnp.argsort(jnp.where(x, -prio, jnp.inf))    # selected, priority first
+        b_sorted = b_i[order] * x[order]
+        cum = jnp.cumsum(b_sorted)
+        keep_sorted = (cum <= 1.0) & x[order]
+        keep = jnp.zeros((N,), bool).at[order].set(keep_sorted)
+        x = x & keep
+
+        xf = x.astype(jnp.float32)
+        bandwidth = xf * b_i * p.b_tot
+        energy = xf * e_i
+        q_new = rho * state.q + (1.0 - rho) * xf             # eq. (1)
+
+        dec = RoundDecision(x=x, gamma=jnp.where(x, gamma_i, 0.0),
+                            bandwidth=bandwidth, energy=energy, lam=lam,
+                            mu=mu, n_inner=n_inner,
+                            bw_used=jnp.sum(bandwidth))
+        return dec, q_new
+
+    if not static.fallback:
+        dec, q_new = extract_primal(lam, mu)
+        return dec, ControllerState(lam=lam, mu=mu, q=q_new, params=p,
+                                    e_cmp=e_cmp)
+
+    # ---- graceful degradation (static.fallback): a diverged ascent or a
+    # poisoned observation must not leak garbage duals/energies into the
+    # scan carry.  Divergence = cap hit with the residual above tol and
+    # not shrinking (or non-finite); poisoned = any non-finite entry in
+    # the observation the solver consumed ----
+    obs_ok = (jnp.all(jnp.isfinite(u_norms)) & jnp.all(jnp.isfinite(h))
+              & jnp.all(jnp.isfinite(P)))
+    diverged = (((n_inner >= static.inner_iters) & (res > p.dual_tol)
+                 & ~(res < res_prev)) | ~jnp.isfinite(res))
+    use_fb = ~obs_ok | diverged
+
+    def fb_branch(_):
+        # eco decision: top-k clients by channel gain, equal bandwidth
+        # split, cheapest gamma — always primal-feasible, no duals.  With
+        # a poisoned observation nothing is selected at all (the round is
+        # rejected: zero energy, participation EMA frozen) because even
+        # the "good" lanes of a NaN observation cannot be trusted.
+        k_fb = max(1, N // 5)
+        g_fb = grid[0]
+        b_each = jnp.float32(1.0 / k_fb)
+        score_h = jnp.where(jnp.isfinite(h) & alive, h, -jnp.inf)
+        order = jnp.argsort(-score_h)
+        ranks = jnp.zeros((N,), jnp.int32).at[order].set(
+            jnp.arange(N, dtype=jnp.int32))
+        e_fb = comm_energy(g_fb, b_each * p.b_tot, P, h, p.s_bits, p.i_bits,
+                           p.n0) + e_cmp
+        x_fb = ((ranks < k_fb) & alive & jnp.isfinite(h)
+                & jnp.isfinite(e_fb) & obs_ok)
+        xf_fb = x_fb.astype(jnp.float32)
+        bw = xf_fb * b_each * p.b_tot
+        # duals revert to the warm-start state: the diverged iterates are
+        # exactly what must not seed the next round
+        dec = RoundDecision(x=x_fb, gamma=jnp.where(x_fb, g_fb, 0.0),
+                            bandwidth=bw,
+                            energy=jnp.where(x_fb, e_fb, 0.0),
+                            lam=state.lam, mu=state.mu, n_inner=n_inner,
+                            bw_used=jnp.sum(bw),
+                            fallback=jnp.zeros((), bool))
+        q_fb = jnp.where(obs_ok, rho * state.q + (1.0 - rho) * xf_fb,
+                         state.q)
+        return dec, q_fb
+
+    def solve_branch(_):
+        dec, q_new = extract_primal(lam, mu)
+        return dec._replace(fallback=jnp.zeros((), bool)), q_new
+
+    dec, q_new = jax.lax.cond(use_fb, fb_branch, solve_branch, None)
+    dec = dec._replace(fallback=use_fb)
+    return dec, ControllerState(lam=dec.lam, mu=dec.mu, q=q_new, params=p,
                                 e_cmp=e_cmp)

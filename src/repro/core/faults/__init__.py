@@ -1,0 +1,53 @@
+"""Fault injection and graceful degradation for the FairEnergy FL loop.
+
+Three layers, composed by the round engine in ``repro.fl.server``:
+
+* :mod:`config` — ``FaultConfig``, the adversarial-simulator knobs
+  (crash / corruption / channel-estimate error / open-population churn);
+* :mod:`inject` — (seed, round)-pure draws for each fault stream;
+* :mod:`defense` — the registered aggregator layer (``"mean"`` legacy
+  weighted mean, ``"defended"`` finite-screen + norm-clip + trimmed
+  mean) plus ``DefenseConfig`` / ``DefenseState``.
+
+A disabled ``FaultConfig`` together with the ``"mean"`` aggregator
+compiles the exact legacy scan program — pinned bit-for-bit against
+``tests/golden/fairenergy_main_12round.json``.
+"""
+from repro.core.faults.config import CORRUPT_MODES, FaultConfig
+from repro.core.faults.defense import (
+    DefendedAggregator,
+    DefenseConfig,
+    DefenseState,
+    MeanAggregator,
+    available_aggregators,
+    init_defense_state,
+    make_aggregator,
+    register_aggregator,
+)
+from repro.core.faults.inject import (
+    arrival_mask,
+    channel_estimate,
+    corrupt_draw,
+    corrupt_payload,
+    crash_draw,
+    presence_mask,
+)
+
+__all__ = [
+    "CORRUPT_MODES",
+    "FaultConfig",
+    "DefenseConfig",
+    "DefenseState",
+    "DefendedAggregator",
+    "MeanAggregator",
+    "available_aggregators",
+    "init_defense_state",
+    "make_aggregator",
+    "register_aggregator",
+    "arrival_mask",
+    "channel_estimate",
+    "corrupt_draw",
+    "corrupt_payload",
+    "crash_draw",
+    "presence_mask",
+]

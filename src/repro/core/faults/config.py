@@ -1,0 +1,89 @@
+"""Fault-injection configuration: the knobs of the adversarial simulator.
+
+``FaultConfig`` is a frozen dataclass mirroring ``AsyncConfig``
+(``repro.core.rounds.config``): it rides on trainers, scenarios, and CLI
+flags, and its *disabled* default (all rates zero, no churn, no channel
+error) is the backward-compat contract — a trainer given a disabled
+config must compile the exact legacy scan program, bit-for-bit against
+the pinned goldens.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+CORRUPT_MODES = ("nan", "inf", "scale", "mixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Knobs of the fault-injection subsystem (``repro.core.faults``).
+
+    crash_rate: per-round probability that a *selected* client crashes
+        mid-round. A crashed client's update never reaches the server
+        (it leaves the participation mask like a deadline miss) and its
+        battery is charged only the energy spent up to the crash —
+        computation first, then prorated transmission
+        (``repro.core.rounds.partial_round_energy``).
+    corrupt_rate: per-round probability that a client's *transmitted*
+        payload arrives corrupted. Corruption hits the post-sparsify
+        update the server actually receives; the controller's observed
+        update norms stay clean (the client looked healthy when it was
+        selected — that is the attack).
+    corrupt_mode: what a corrupted payload looks like — ``"nan"`` /
+        ``"inf"`` poison every coefficient, ``"scale"`` multiplies the
+        row by ``-corrupt_scale`` (a sign-flipped outlier), ``"mixed"``
+        (default) draws one of the three per corrupted client.
+    corrupt_scale: outlier magnitude for the scaled mode.
+    h_err_std: lognormal sigma of the channel-*estimate* error: the
+        controller decides on ``h_est = h * exp(sigma * N(0,1))`` while
+        the realized transmission runs on the true ``h`` — energy is
+        re-charged at the true channel and the shortfall surfaces
+        through the deadline/``made`` machinery. 0 disables.
+    churn_dwell: mean membership epoch length in rounds for the open
+        population — each client redraws presence once per ``dwell``
+        rounds (with a per-client random phase, so the fleet doesn't
+        flip in lockstep). 0 disables churn (closed population).
+    churn_away: per-epoch probability that a client is absent. Departed
+        clients join the hard ``alive`` mask (never observed, never
+        selected, never charged); arriving clients get fresh fairness
+        state via the controller's ``reset_clients`` hook.
+
+    All draws are (seed, round)-pure: private ``fold_in`` streams off
+    the trainer's fault key, so resuming or re-running a round injects
+    the identical faults — the same purity contract as fading, batch
+    sampling, and harvesting.
+    """
+    crash_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    corrupt_mode: str = "mixed"
+    corrupt_scale: float = 1e3
+    h_err_std: float = 0.0
+    churn_dwell: int = 0
+    churn_away: float = 0.3
+
+    def __post_init__(self):
+        for name in ("crash_rate", "corrupt_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.corrupt_mode not in CORRUPT_MODES:
+            raise ValueError(f"corrupt_mode must be one of {CORRUPT_MODES}, "
+                             f"got {self.corrupt_mode!r}")
+        if self.corrupt_scale <= 0.0:
+            raise ValueError(f"corrupt_scale must be > 0, got "
+                             f"{self.corrupt_scale}")
+        if self.h_err_std < 0.0:
+            raise ValueError(f"h_err_std must be >= 0, got {self.h_err_std}")
+        if self.churn_dwell < 0:
+            raise ValueError(f"churn_dwell must be >= 0, got "
+                             f"{self.churn_dwell}")
+        if not 0.0 <= self.churn_away < 1.0:
+            raise ValueError(f"churn_away must be in [0, 1), got "
+                             f"{self.churn_away}")
+
+    @property
+    def enabled(self) -> bool:
+        """Any fault stream active? False => the engine must compile the
+        exact legacy (fault-free) program."""
+        return (self.crash_rate > 0.0 or self.corrupt_rate > 0.0
+                or self.h_err_std > 0.0 or self.churn_dwell > 0)

@@ -1,0 +1,271 @@
+"""Defended aggregation: finite-screen, streaming norm clip, trimmed mean.
+
+The round engine (``repro.fl.server``) routes its combine step through a
+registered *aggregator* — an object mapping the shard-local sparse
+update matrix and participation weights to the weighted-sum pair the
+engine's existing ``psum`` reduces. Two registry entries:
+
+* ``"mean"`` — the legacy |D_i|-weighted mean, emitting exactly the ops
+  the engine inlined before the aggregator layer existed (the
+  backward-compat contract the goldens pin bit-for-bit);
+* ``"defended"`` — ``DefenseConfig``-driven robustness on top of the
+  same weighted mean: a **finite screen** rejecting rows with any
+  non-finite coefficient, **norm clipping** against a streaming EMA of
+  the participating update-norm quantile (the scalar tracker rides in
+  the scan carry as ``DefenseState``), and an optional coordinate-wise
+  **trimmed mean**.
+
+Everything runs shard-local under the clients mesh: the screen and clip
+touch only the ``[n_local, D]`` chunk, the tiny ``[n]`` norms are
+all-gathered for the (replicated) quantile, and only the trimmed mean —
+which needs global per-coordinate order statistics — gathers the full
+update matrix (documented cost; off by default). With every knob
+disabled the defended aggregator reproduces the legacy weighted mean
+bit-for-bit: the screen passes every finite row untouched and the clip
+scale is exactly 1.0 (``x * 1.0`` preserves bits).
+
+Clipping uses the *previous* rounds' quantile tracker, so a round's own
+outliers can never raise their own threshold; the tracker bootstraps
+from the first participating round (no clipping until it has a value).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class DefenseConfig:
+    """Knobs of the defended aggregator.
+
+    finite_screen: reject (zero-weight) any update row containing a NaN
+        or Inf coefficient. Catches poisoned payloads outright.
+    clip_q: quantile of the participating update norms the streaming
+        tracker follows (0 disables clipping). The tracker ``tau`` is a
+        scalar EMA carried in the scan state. Default is the median —
+        any higher quantile can land *on* an adversarial norm once the
+        corrupt fraction exceeds ``1 - clip_q``, poisoning the tracker
+        itself; the median stays honest up to 50% corruption.
+    clip_mult: rows with norm above ``clip_mult * tau`` are rescaled
+        down to that limit — generous by default so honest heavy-tailed
+        rounds pass untouched while 1000x outliers are tamed.
+    clip_beta: EMA rate of the quantile tracker (1.0 = no memory). The
+        tracker sees norms *through the current clip limit*, so even a
+        quantile that hits an outlier can raise ``tau`` by at most a
+        factor ``clip_mult`` per EMA step — the threshold cannot run
+        away under sustained attack.
+    trim_frac: coordinate-wise trimmed mean — drop the lowest and
+        highest ``trim_frac`` fraction of participating values per
+        coordinate and average the rest, *unweighted* (classic robust
+        aggregation; replaces the weighted mean when > 0). Under a mesh
+        this all-gathers the sparse update matrix — O(N x D) per shard.
+    """
+    finite_screen: bool = True
+    clip_q: float = 0.5
+    clip_mult: float = 4.0
+    clip_beta: float = 0.2
+    trim_frac: float = 0.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.clip_q < 1.0:
+            raise ValueError(f"clip_q must be in [0, 1), got {self.clip_q}")
+        if self.clip_mult <= 0.0:
+            raise ValueError(f"clip_mult must be > 0, got {self.clip_mult}")
+        if not 0.0 < self.clip_beta <= 1.0:
+            raise ValueError(f"clip_beta must be in (0, 1], got "
+                             f"{self.clip_beta}")
+        if not 0.0 <= self.trim_frac < 0.5:
+            raise ValueError(f"trim_frac must be in [0, 0.5), got "
+                             f"{self.trim_frac}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.finite_screen or self.clip_q > 0.0 or self.trim_frac > 0.0
+
+
+class DefenseState(NamedTuple):
+    """Scan-carried defense state: ``tau`` is the streaming EMA of the
+    ``clip_q``-quantile of participating update norms (0 = not yet
+    bootstrapped — no clipping)."""
+    tau: Array
+
+
+def init_defense_state() -> DefenseState:
+    return DefenseState(tau=jnp.zeros((), jnp.float32))
+
+
+def _masked_quantile(vals: Array, mask: Array, q: float) -> Array:
+    """q-quantile of ``vals[mask]`` with a traced mask: sort with +inf
+    sentinels and index at ``floor(q * (m - 1))``. 0.0 when the mask is
+    empty (the caller gates the EMA update on that)."""
+    s = jnp.sort(jnp.where(mask, vals, jnp.inf))
+    m = jnp.sum(mask.astype(jnp.int32))
+    idx = jnp.clip(jnp.floor(jnp.float32(q) * (m - 1).astype(jnp.float32))
+                   .astype(jnp.int32), 0, jnp.maximum(m - 1, 0))
+    return jnp.where(m > 0, s[idx], 0.0)
+
+
+# --------------------------------------------------------- registry ----
+_AGGREGATORS: dict[str, type] = {}
+
+
+def register_aggregator(name: str):
+    """Class decorator: ``@register_aggregator("defended")``. The class
+    must be constructible as ``cls(cfg)`` (cfg may be None)."""
+
+    def deco(cls):
+        if name in _AGGREGATORS:
+            raise ValueError(f"aggregator {name!r} already registered")
+        _AGGREGATORS[name] = cls
+        cls.name = name
+        return cls
+
+    return deco
+
+
+def available_aggregators() -> list[str]:
+    return sorted(_AGGREGATORS)
+
+
+def make_aggregator(spec, cfg=None):
+    """Resolve a registry name (building ``cls(cfg)``) or pass through a
+    ready instance (anything callable with an ``init`` method)."""
+    if isinstance(spec, str):
+        try:
+            cls = _AGGREGATORS[spec]
+        except KeyError:
+            raise KeyError(f"unknown aggregator {spec!r}; available: "
+                           f"{available_aggregators()}") from None
+        return cls(cfg)
+    if not (callable(spec) and hasattr(spec, "init")):
+        raise TypeError("aggregator must be a registry name or provide "
+                        f"init/__call__, got {type(spec).__name__}")
+    return spec
+
+
+@register_aggregator("mean")
+class MeanAggregator:
+    """The legacy |D_i|-weighted mean — emits exactly the three ops the
+    engine used before the aggregator layer (``w = xf * w_data``, its
+    sum, ``w @ sparse``), so the compiled program is unchanged."""
+
+    enabled = False
+
+    def __init__(self, cfg=None):
+        del cfg
+
+    def init(self):
+        return ()
+
+    def __call__(self, sparse, part_f, w_data, state, *, axis=None,
+                 n_shards=1):
+        w = part_f * w_data
+        return w @ sparse, jnp.sum(w), state, {}, sparse
+
+
+@register_aggregator("defended")
+class DefendedAggregator:
+    """Screen -> clip -> (weighted or trimmed) combine, shard-local.
+
+    Call signature (the engine's aggregator protocol): ``(sparse
+    [n_local, D], part_f [n_local] 0/1 participation, w_data [n_local]
+    data weights, state, axis=shard axis or None, n_shards) ->
+    (partial [D], wsum, state', stats, cleaned_sparse)``. ``partial`` /
+    ``wsum`` are the pair the engine ``psum``s; ``cleaned_sparse`` is
+    the screened+clipped matrix (what the staleness buffer must store).
+    ``stats`` carries shard-local int32 counts (``n_rejected``,
+    ``n_clipped``) the engine psums into telemetry lanes.
+    """
+
+    def __init__(self, cfg: DefenseConfig):
+        if cfg is None:
+            cfg = DefenseConfig()
+        self.cfg = cfg
+
+    @property
+    def enabled(self) -> bool:
+        return self.cfg.enabled
+
+    def init(self):
+        return init_defense_state() if self.cfg.clip_q > 0.0 else ()
+
+    def __call__(self, sparse, part_f, w_data, state, *, axis=None,
+                 n_shards=1):
+        from repro.fl.updates import finite_rows, row_l2_norms
+        cfg = self.cfg
+        part = part_f > 0.0
+        n_rej = jnp.int32(0)
+        if cfg.finite_screen:
+            ok = finite_rows(sparse)
+            n_rej = jnp.sum((part & ~ok).astype(jnp.int32))
+            part = part & ok
+            part_f = part_f * ok.astype(jnp.float32)
+            # zero the rejected rows: a 0-weight NaN row would still
+            # poison the matmul below (0 * nan = nan)
+            sparse = jnp.where(ok[:, None], sparse, 0.0)
+        n_clip = jnp.int32(0)
+        if cfg.clip_q > 0.0:
+            norms = row_l2_norms(sparse)
+            if axis is not None:
+                norms_g = jax.lax.all_gather(norms, axis, tiled=True)
+                part_g = jax.lax.all_gather(part, axis, tiled=True)
+            else:
+                norms_g, part_g = norms, part
+            tau = state.tau
+            # clip against the PREVIOUS tau: this round's own outliers
+            # cannot raise their own threshold; tau==0 (unbootstrapped)
+            # means an infinite limit — no clipping yet
+            limit = cfg.clip_mult * jnp.where(tau > 0.0, tau, jnp.inf)
+            # the quantile stream sees only finite, nonzero participating
+            # norms (screen-less runs can still carry NaN norms — they
+            # must not poison the tracker), and sees them THROUGH the
+            # clip limit: a quantile landing on an adversarial norm can
+            # raise tau by at most clip_mult per EMA step
+            okq = part_g & jnp.isfinite(norms_g) & (norms_g > 0.0)
+            qn = _masked_quantile(jnp.minimum(norms_g, limit), okq,
+                                  cfg.clip_q)
+            tau_new = jnp.where(
+                jnp.any(okq),
+                jnp.where(tau > 0.0,
+                          (1.0 - cfg.clip_beta) * tau + cfg.clip_beta * qn,
+                          qn),
+                tau)
+            scale = jnp.minimum(1.0, limit / jnp.maximum(norms, 1e-30))
+            scale = jnp.where(part & jnp.isfinite(scale), scale, 1.0)
+            n_clip = jnp.sum((part & (scale < 1.0)).astype(jnp.int32))
+            sparse = sparse * scale[:, None]
+            state = DefenseState(tau=tau_new)
+        stats = {"n_rejected": n_rej, "n_clipped": n_clip}
+        if cfg.trim_frac > 0.0:
+            if axis is not None:
+                sp_g = jax.lax.all_gather(sparse, axis, tiled=True)
+                pt_g = jax.lax.all_gather(part, axis, tiled=True)
+            else:
+                sp_g, pt_g = sparse, part
+            # per-coordinate sort with +inf sentinels on non-participating
+            # rows: the m participating values occupy ranks [0, m) and
+            # the kept window [lo, m - lo) never touches a sentinel
+            vals = jnp.where(pt_g[:, None], sp_g, jnp.inf)
+            srt = jnp.sort(vals, axis=0)
+            m = jnp.sum(pt_g.astype(jnp.int32))
+            lo = jnp.floor(jnp.float32(cfg.trim_frac) * m.astype(jnp.float32)
+                           ).astype(jnp.int32)
+            hi = m - lo
+            idx = jnp.arange(srt.shape[0], dtype=jnp.int32)[:, None]
+            keep = (idx >= lo) & (idx < hi)
+            kept = jnp.sum(jnp.where(keep, srt, 0.0), axis=0)
+            cnt = jnp.maximum(hi - lo, 1).astype(jnp.float32)
+            # every shard computes the identical replicated trimmed mean;
+            # divide by the shard count so the engine's psum pair still
+            # reduces to exactly that mean
+            inv = jnp.float32(1.0 / max(int(n_shards), 1))
+            partial = jnp.where(m > 0, kept / cnt, jnp.zeros_like(kept)) * inv
+            wsum = jnp.where(m > 0, jnp.float32(1.0), jnp.float32(0.0)) * inv
+            return partial, wsum, state, stats, sparse
+        w = part_f * w_data
+        return w @ sparse, jnp.sum(w), state, stats, sparse

@@ -1,0 +1,124 @@
+"""(seed, round)-pure fault draws: crashes, corruption, channel error, churn.
+
+Every function folds the round index (and a private stream tag) into the
+trainer's fault key before drawing, so the injected faults are a pure
+function of (seed, round) — resuming from a checkpoint, re-running a
+chunk, or replaying under the sharded engine reproduces the identical
+fault sequence. The draws are made over the full ``[n_real]`` client
+vector with a replicated key, so every shard of the clients mesh sees
+the same masks (the big per-client payload corruption is then applied
+shard-local to the ``[n_local, D]`` chunk).
+
+Stream tags are small integers folded *before* the round index — they
+can never collide with each other, and the fault base key itself is
+already a dedicated stream off the per-seed key (``repro.fl.server``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+_CRASH_STREAM = 1
+_CORRUPT_STREAM = 2
+_CHEST_STREAM = 3
+_CHURN_STREAM = 4
+_PHASE_STREAM = 5
+
+
+def crash_draw(key: Array, round_idx, n: int, rate: float
+               ) -> tuple[Array, Array]:
+    """Mid-round crash draw: ([n] bool crash mask, [n] f32 crash point).
+
+    The crash point is the uniform fraction of the client's *own* round
+    (comp + comm) at which it dies — the engine charges the energy spent
+    up to that instant via ``partial_round_energy`` and drops the update.
+    """
+    k = jax.random.fold_in(jax.random.fold_in(key, _CRASH_STREAM), round_idx)
+    u = jax.random.uniform(k, (2, n))
+    return u[0] < rate, u[1]
+
+
+def corrupt_draw(key: Array, round_idx, n: int, rate: float
+                 ) -> tuple[Array, Array]:
+    """Payload-corruption draw: ([n] bool mask, [n] f32 flavor uniform).
+
+    The flavor picks the corruption kind in ``"mixed"`` mode (NaN / Inf /
+    scaled outlier); single-kind modes ignore it.
+    """
+    k = jax.random.fold_in(jax.random.fold_in(key, _CORRUPT_STREAM),
+                           round_idx)
+    u = jax.random.uniform(k, (2, n))
+    return u[0] < rate, u[1]
+
+
+def corrupt_payload(updates: Array, mask: Array, flavor: Array, mode: str,
+                    scale: float) -> Array:
+    """Corrupt the masked rows of an ``[n, D]`` update matrix.
+
+    ``mode`` is static: ``"nan"`` / ``"inf"`` poison every coefficient of
+    the row, ``"scale"`` multiplies it by ``-scale`` (a sign-flipped
+    outlier that survives finite-screening and must be caught by norm
+    clipping), ``"mixed"`` draws one of the three per row from
+    ``flavor``. Unmasked rows pass through untouched (bit-for-bit)."""
+    m = mask[:, None]
+    if mode == "nan":
+        return jnp.where(m, jnp.float32(jnp.nan), updates)
+    if mode == "inf":
+        return jnp.where(m, jnp.float32(jnp.inf), updates)
+    if mode == "scale":
+        return jnp.where(m, updates * jnp.float32(-scale), updates)
+    # mixed: ~1/3 NaN, ~1/3 Inf, ~1/3 scaled outlier
+    f = flavor[:, None]
+    poisoned = jnp.where(f < (1.0 / 3.0), jnp.float32(jnp.nan),
+                         jnp.where(f < (2.0 / 3.0), jnp.float32(jnp.inf),
+                                   updates * jnp.float32(-scale)))
+    return jnp.where(m, poisoned, updates)
+
+
+def channel_estimate(key: Array, round_idx, h: Array, sigma: float) -> Array:
+    """The controller's noisy view of the channel: ``h * exp(sigma * eps)``
+    with ``eps ~ N(0, 1)`` per client — multiplicative lognormal
+    estimation error (median-unbiased). The engine hands this to the
+    observation while the realized transmission keeps the true ``h``."""
+    k = jax.random.fold_in(jax.random.fold_in(key, _CHEST_STREAM), round_idx)
+    eps = jax.random.normal(k, h.shape, jnp.float32)
+    return h * jnp.exp(jnp.float32(sigma) * eps)
+
+
+def presence_mask(key: Array, round_idx, n: int, away: float, dwell: int
+                  ) -> Array:
+    """[n] bool — which clients are present in round ``round_idx``.
+
+    Piecewise-constant open population: client i redraws a Bernoulli
+    (1 - away) presence once per ``dwell``-round epoch, with a per-client
+    random phase so membership flips are staggered across the fleet
+    rather than synchronized. Pure in (key, round): the presence of any
+    round can be recomputed without scanning history — which is also how
+    the engine derives arrival edges (``present(r) & ~present(r-1)``).
+    """
+    if dwell <= 0:                       # churn disabled: closed population
+        return jnp.ones((n,), jnp.bool_)
+    phase = jax.random.randint(jax.random.fold_in(key, _PHASE_STREAM),
+                               (n,), 0, dwell)
+    epoch = (round_idx + phase) // dwell
+    base = jax.random.fold_in(key, _CHURN_STREAM)
+
+    def u_of(e, i):
+        return jax.random.uniform(
+            jax.random.fold_in(jax.random.fold_in(base, e), i))
+
+    u = jax.vmap(u_of)(epoch, jnp.arange(n, dtype=jnp.int32))
+    return u >= jnp.float32(away)
+
+
+def arrival_mask(key: Array, round_idx, n: int, away: float, dwell: int
+                 ) -> tuple[Array, Array]:
+    """([n] present, [n] arrived-this-round). An arrival is a presence
+    edge — present now, absent last round; round 0 has no edges (the
+    initial population starts with fresh controller state anyway)."""
+    cur = presence_mask(key, round_idx, n, away, dwell)
+    prev = presence_mask(key, jnp.maximum(round_idx - 1, 0), n, away, dwell)
+    arrived = cur & ~prev & (round_idx > 0)
+    return cur, arrived

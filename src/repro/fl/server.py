@@ -60,11 +60,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt as _ckpt
-from repro.core.channel import WirelessNetwork, comm_time, round_gains
+from repro.core.channel import (WirelessNetwork, comm_energy, comm_time,
+                                round_gains)
 from repro.core.controllers import (Controller, ControllerContext,
                                     RoundObservation, make_controller)
 from repro.core.energy import (UNLIMITED_J, alive_mask, comp_energy,
                                comp_time)
+from repro.core.faults import (DefenseConfig, FaultConfig, MeanAggregator,
+                               arrival_mask, channel_estimate, corrupt_draw,
+                               corrupt_payload, crash_draw, make_aggregator)
 from repro.core.rounds import (AsyncConfig, AsyncState, apply_harvest,
                                best_case_round_time, harvest_rates,
                                init_async_state, partial_round_energy,
@@ -76,8 +80,8 @@ from repro.fl import compression
 from repro.fl.client import make_batched_client_step
 from repro.fl.updates import tree_spec, unflatten_update
 from repro.sharding.fl import (CLIENTS_AXIS, async_state_specs,
-                               clients_axis_size, replicated_specs,
-                               shard_client_data)
+                               clients_axis_size, defense_state_specs,
+                               replicated_specs, shard_client_data)
 
 
 # PRNG stream tags (folded into the per-seed base key): far above any
@@ -86,6 +90,7 @@ from repro.sharding.fl import (CLIENTS_AXIS, async_state_specs,
 _CTRL_STREAM = 1 << 20
 _SAMPLE_STREAM = 2 << 20
 _HARVEST_STREAM = 3 << 20
+_FAULT_STREAM = 4 << 20
 
 
 @dataclasses.dataclass
@@ -108,6 +113,16 @@ class RoundLog:
     #                                       the deadline (aggregated)
     n_late: Optional[int] = None          # selected clients past deadline
     n_stale: Optional[int] = None         # buffered updates folded in
+    # --- fault-telemetry fields (None unless fault injection or defended
+    #     aggregation is active — repro.core.faults) ----------------------
+    n_faulted: Optional[int] = None       # crashed + corrupted participants
+    n_rejected: Optional[int] = None      # updates screened out (non-finite
+    #                                       rows, or all of them on a fully
+    #                                       degraded round)
+    clip_frac: Optional[float] = None     # fraction of accepted updates
+    #                                       norm-clipped this round
+    fallback: Optional[bool] = None       # solver fallback round
+    #                                       (RoundDecision.fallback)
 
     @property
     def total_energy(self) -> float:
@@ -135,13 +150,37 @@ class _AsyncRuntime:
     n0: float
 
 
+@dataclasses.dataclass(frozen=True)
+class _FaultsRuntime:
+    """Engine-facing bundle of the resolved fault-injection quantities
+    (``repro.core.faults.FaultConfig`` plus the trainer's per-client
+    timing/energy arrays and channel scalars): closed over by the round
+    core, never traced as an operand. The rate/mode knobs are Python
+    floats — a zero rate compiles that fault stream away entirely."""
+    crash_rate: float
+    corrupt_rate: float
+    corrupt_mode: str
+    corrupt_scale: float
+    h_err_std: float
+    churn_dwell: int
+    churn_away: float
+    t_cmp: jnp.ndarray            # [n_real] s computation time
+    e_cmp: jnp.ndarray            # [n_real] J computation energy
+    b_tot: float
+    s_bits: float
+    i_bits: float
+    n0: float
+
+
 def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                      server_lr: float, use_pallas: bool = False,
                      block: int = compression.DEFAULT_BLOCK,
                      skip_full_sparsify: bool = True,
                      shard_axis: Optional[str] = None,
                      n_real: Optional[int] = None,
-                     async_rt: Optional[_AsyncRuntime] = None):
+                     async_rt: Optional[_AsyncRuntime] = None,
+                     fault_rt: Optional[_FaultsRuntime] = None,
+                     aggregator=None):
     """Pure decide -> sparsify -> aggregate -> apply round body.
 
     Closes over the controller (its ``decide`` must be traceable), the
@@ -183,9 +222,31 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
     extras)`` with ``extras = dict(t_wall, made, n_late, n_stale)``.
     When ``async_rt is None`` the emitted program is *identical* to the
     legacy one — the backward-compat contract the goldens pin.
+
+    ``fault_rt`` (a ``_FaultsRuntime``, requires ``battery`` and the
+    ``fkey`` operand) injects the ``repro.core.faults`` streams: churn
+    joins the hard ``alive`` mask (with the controller's
+    ``reset_clients`` hook on arrivals), the controller observes
+    ``h_est`` while the realized energy is re-charged at the true
+    channel, crashed clients drop from the aggregate with
+    ``partial_round_energy`` proration, and corrupted payloads hit the
+    post-sparsify updates shard-local. ``aggregator`` routes the combine
+    step (default: the legacy ``"mean"`` weighted mean, bit-identical to
+    the inline code it replaced; a ``DefenseConfig``-enabled
+    ``"defended"`` aggregator screens/clips/trims and threads its
+    ``fstate`` carry). With either faults or an enabled defense the core
+    returns a 7-tuple ``(params, dec, state, battery, astate, fstate,
+    extras)`` whose extras additionally carry the ``n_faulted /
+    n_rejected / clip_frac / fallback`` telemetry lanes, and a
+    non-finite aggregate is rejected wholesale (params carry unchanged,
+    every participant counted rejected) instead of poisoning the scan.
     """
     sharded = shard_axis is not None
     n_pad = int(weights.shape[0])
+    faulty = fault_rt is not None
+    agg_obj = aggregator if aggregator is not None else MeanAggregator()
+    defended = bool(getattr(agg_obj, "enabled", False))
+    telemetry = faulty or defended
 
     def _local(vec, fill, i0, n_local):
         """Pad an [n_real] vector with ghost rows and slice this shard's
@@ -195,11 +256,15 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             i0, n_local)
 
     def core(params, updates, u_norms, h, P, r, key, ctrl_state,
-             battery=None, astate=None, hkey=None):
+             battery=None, astate=None, hkey=None, fstate=None, fkey=None):
         if async_rt is not None and battery is None:
             raise ValueError("the async round model needs the battery "
                              "carry (pass battery=jnp.full(n, inf) for "
                              "unlimited capacities)")
+        if faulty and (battery is None or fkey is None):
+            raise ValueError("fault injection needs the battery carry and "
+                             "the fault key operand (pass battery="
+                             "jnp.full(n, inf) for unlimited capacities)")
         if sharded:
             n_local = u_norms.shape[0]
             i0 = jax.lax.axis_index(shard_axis) * n_local
@@ -209,19 +274,40 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             n_local = u_norms.shape[0]
             i0 = jnp.int32(0)
             obs_norms = u_norms
+        n_obs = obs_norms.shape[0]
+        # the controller's channel belief: the true h unless the
+        # channel-estimate fault stream is on — then a lognormal-noised
+        # estimate; the realized transmission below always uses true h
+        h_obs = h
+        if faulty and fault_rt.h_err_std > 0.0:
+            h_obs = channel_estimate(fkey, r, h, fault_rt.h_err_std)
+        present = arrived = None
+        if faulty and fault_rt.churn_dwell > 0:
+            present, arrived = arrival_mask(fkey, r, n_obs,
+                                            fault_rt.churn_away,
+                                            fault_rt.churn_dwell)
         alive = alive_mask(battery) if battery is not None else None
+        if present is not None:
+            # departed clients join the hard mask: never observed as
+            # selectable, never selected, never charged
+            alive = alive & present
+            if hasattr(controller, "reset_clients"):
+                # (re)arrivals get fresh per-client controller state — a
+                # returning slot must not inherit the departed occupant's
+                # fairness debt
+                ctrl_state = controller.reset_clients(ctrl_state, arrived)
         t_obs = None
         if async_rt is not None:
             # best-case round time: a client that cannot make the deadline
             # under ANY allocation is priced out through the same hard
             # mask as a depleted battery — controllers stay unchanged
             t_obs = best_case_round_time(
-                async_rt.t_cmp, P, h, b_tot=async_rt.b_tot,
+                async_rt.t_cmp, P, h_obs, b_tot=async_rt.b_tot,
                 gamma_floor=async_rt.gamma_floor, s_bits=async_rt.s_bits,
                 i_bits=async_rt.i_bits, n0=async_rt.n0)
             alive = alive & (t_obs <= async_rt.deadline)
-        obs = RoundObservation(u_norms=obs_norms, h=h, P=P, round=r, key=key,
-                               alive=alive, t_round=t_obs)
+        obs = RoundObservation(u_norms=obs_norms, h=h_obs, P=P, round=r,
+                               key=key, alive=alive, t_round=t_obs)
         dec, new_state = controller.decide(obs, ctrl_state)
         if battery is not None:
             # hard mask, whatever the controller decided: a depleted
@@ -232,11 +318,28 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                                bandwidth=dec.bandwidth * mf,
                                energy=dec.energy * mf,
                                bw_used=jnp.sum(dec.bandwidth * mf))
-            if async_rt is None:
+            if async_rt is None and not faulty:
                 # debit the round's spend; the depleting transmission is
                 # allowed to finish (brownout), charge floors at 0 so the
                 # carried state stays in [0, capacity] (inf stays inf)
                 battery = jnp.maximum(battery - dec.energy, 0.0)
+        if faulty and fault_rt.h_err_std > 0.0:
+            # the controller priced energy at its h_est belief; the
+            # transmission realizes on the true channel — re-charge at
+            # true h (same allocation). b/gamma guards mirror
+            # masked_decision: comm_energy is inf below the 1 Hz floor
+            # and the unselected-lane inf*0 would otherwise NaN
+            b_safe = jnp.where(dec.x, dec.bandwidth, fault_rt.b_tot)
+            g_safe = jnp.where(dec.x, dec.gamma, 1.0)
+            e_real = dec.x.astype(jnp.float32) * (
+                comm_energy(g_safe, b_safe, P, h, fault_rt.s_bits,
+                            fault_rt.i_bits, fault_rt.n0) + fault_rt.e_cmp)
+            dec = dec._replace(energy=e_real)
+        crashed = cfrac = None
+        if faulty and fault_rt.crash_rate > 0.0:
+            crashed_m, cfrac = crash_draw(fkey, r, n_obs,
+                                          fault_rt.crash_rate)
+            crashed = dec.x & crashed_m
 
         made = late = extras = None
         if async_rt is not None:
@@ -246,8 +349,15 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             t_comm = comm_time(dec.gamma, dec.bandwidth, P, h,
                                async_rt.s_bits, async_rt.i_bits, async_rt.n0)
             t_total = async_rt.t_cmp + t_comm
-            made = dec.x & (t_total <= async_rt.deadline)
-            late = dec.x & ~made
+            feasible = dec.x & (t_total <= async_rt.deadline)
+            # a crashed client is neither made nor late: its update never
+            # reaches the server and its background transmission (if any)
+            # never completes (identical to legacy when crashed is None,
+            # since x & f & ~(x & c) == x & f & ~c)
+            made = feasible if crashed is None else feasible & ~crashed
+            late = (dec.x & ~feasible if crashed is None
+                    else dec.x & ~feasible & ~crashed)
+            e_full = dec.energy
             if not async_rt.staleness:
                 # a dropped update is abandoned at the deadline: charge
                 # computation first, then the prorated transmission (the
@@ -260,6 +370,20 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                     jnp.where(late, jnp.minimum(e_part, dec.energy), 0.0)))
             # with staleness the transmission completes in the background,
             # so late clients pay their full round energy
+            if crashed is not None:
+                # a crashed client dies at the uniform fraction cfrac of
+                # its own round (capped at the deadline abandon unless the
+                # transmission would have continued in the background):
+                # computation first, then prorated transmission
+                # (partial_round_energy is monotone in its deadline, so
+                # the cap and the fp-safety minimum compose exactly)
+                t_cap = (t_total if async_rt.staleness
+                         else jnp.minimum(t_total, async_rt.deadline))
+                t_c = cfrac * jnp.where(dec.x, t_cap, 0.0)
+                e_crash = partial_round_energy(async_rt.t_cmp, t_comm,
+                                               async_rt.e_cmp, P, t_c)
+                dec = dec._replace(energy=jnp.where(
+                    crashed, jnp.minimum(e_crash, e_full), dec.energy))
             battery = jnp.maximum(battery - dec.energy, 0.0)
             battery = apply_harvest(battery, async_rt.cap, hkey, r,
                                     async_rt.rates)
@@ -267,9 +391,37 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             extras = dict(t_wall=t_wall, made=made,
                           n_late=jnp.sum(late.astype(jnp.int32)),
                           n_stale=jnp.int32(0))
+        elif faulty:
+            if crashed is not None:
+                # untimed rounds still prorate crash energy over the
+                # client's own comp+comm duration (guards as above: the
+                # unselected-lane comm_time would be inf)
+                t_comm_f = comm_time(jnp.where(dec.x, dec.gamma, 1.0),
+                                     jnp.where(dec.x, dec.bandwidth,
+                                               fault_rt.b_tot),
+                                     P, h, fault_rt.s_bits, fault_rt.i_bits,
+                                     fault_rt.n0)
+                t_c = cfrac * jnp.where(dec.x, fault_rt.t_cmp + t_comm_f,
+                                        0.0)
+                e_crash = partial_round_energy(fault_rt.t_cmp, t_comm_f,
+                                               fault_rt.e_cmp, P, t_c)
+                dec = dec._replace(energy=jnp.where(
+                    crashed, jnp.minimum(e_crash, dec.energy), dec.energy))
+            # the deferred legacy debit (see the hard-mask block above)
+            battery = jnp.maximum(battery - dec.energy, 0.0)
 
-        # only clients inside the deadline enter this round's aggregate
-        xf = (made if made is not None else dec.x).astype(jnp.float32)
+        # only clients inside the deadline (and not crashed) enter this
+        # round's aggregate
+        part_glob = made if made is not None else dec.x
+        if crashed is not None and made is None:
+            part_glob = dec.x & ~crashed
+        xf = part_glob.astype(jnp.float32)
+        cm = fl_u = None
+        if faulty and fault_rt.corrupt_rate > 0.0:
+            # corruption hits the transmitted payload of participating
+            # clients — drawn globally (replicated masks), applied to the
+            # shard-local sparse matrix below
+            cm, fl_u = corrupt_draw(fkey, r, n_obs, fault_rt.corrupt_rate)
         # unselected rows carry zero aggregation weight, so their sparsity
         # level is irrelevant — treat them as gamma=1 so full-precision
         # rounds (every *selected* gamma == 1) skip the sparsify pass;
@@ -287,9 +439,23 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
         sparse = compression.batch_block_topk(updates, gamma, block=block,
                                               use_pallas=use_pallas,
                                               skip_full=skip_full_sparsify)
-        w = xf * w_data                                         # [N | n_local]
-        wsum = jnp.sum(w)
-        partial = w @ sparse                                    # [D]
+        if cm is not None:
+            if sharded:
+                cm_l = _local(cm, False, i0, n_local)
+                fl_l = _local(fl_u, 0.0, i0, n_local)
+            else:
+                cm_l, fl_l = cm, fl_u
+            sparse = corrupt_payload(sparse, cm_l, fl_l,
+                                     fault_rt.corrupt_mode,
+                                     fault_rt.corrupt_scale)
+        # combine through the aggregator layer: the default "mean" emits
+        # exactly the legacy weighted-mean ops; a defended aggregator
+        # screens/clips/trims shard-local and returns the cleaned sparse
+        # matrix (what the staleness buffer must hold) plus its stats
+        partial, wsum, fstate, dstats, sparse = agg_obj(
+            sparse, xf, w_data, fstate,
+            axis=shard_axis if sharded else None,
+            n_shards=n_pad // n_local)                          # [D], scalar
         if async_rt is not None and async_rt.staleness:
             # ---- staleness-weighted buffered aggregation (shard-local):
             # age the pending slots by this round's wall-clock, fold the
@@ -324,9 +490,39 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             partial = jax.lax.psum(partial, shard_axis)
         agg = partial / jnp.maximum(wsum, 1e-12) * server_lr
         agg = jnp.where(wsum > 0.0, agg, jnp.zeros_like(agg))
+        if telemetry:
+            n_part = jnp.sum(part_glob.astype(jnp.int32))
+            n_rej = dstats.get("n_rejected", jnp.int32(0))
+            n_clip = dstats.get("n_clipped", jnp.int32(0))
+            if sharded and dstats:
+                n_rej = jax.lax.psum(n_rej, shard_axis)
+                n_clip = jax.lax.psum(n_clip, shard_axis)
+            # last-resort guard: whatever slipped past the defenses (or
+            # an undefended run's corrupted payloads) must not poison the
+            # donated params carry forever — reject the whole round and
+            # count every accepted participant as rejected
+            ok_round = jnp.all(jnp.isfinite(agg))
+            agg = jnp.where(ok_round, agg, jnp.zeros_like(agg))
+            n_rej = n_rej + jnp.where(ok_round, jnp.int32(0),
+                                      jnp.maximum(n_part - n_rej, 0))
+            nf = jnp.int32(0)
+            if crashed is not None:
+                nf = nf + jnp.sum(crashed.astype(jnp.int32))
+            if cm is not None:
+                nf = nf + jnp.sum((cm & part_glob).astype(jnp.int32))
+            clip_frac = (n_clip.astype(jnp.float32)
+                         / jnp.maximum(n_part - n_rej, 1).astype(jnp.float32))
+            fextras = dict(
+                n_faulted=nf, n_rejected=n_rej, clip_frac=clip_frac,
+                fallback=jnp.asarray(dec.fallback, jnp.bool_))
         delta_tree = unflatten_update(agg, spec)
         new_params = jax.tree_util.tree_map(
             lambda p, d: p + d.astype(p.dtype), params, delta_tree)
+        if telemetry:
+            ext = dict(extras) if extras is not None else {}
+            ext.update(fextras)
+            return (new_params, dec, new_state, battery, astate, fstate,
+                    ext)
         if async_rt is not None:
             return new_params, dec, new_state, battery, astate, extras
         if battery is not None:
@@ -339,12 +535,15 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
 def make_round_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                       server_lr: float, use_pallas: bool = False,
                       block: int = compression.DEFAULT_BLOCK,
-                      skip_full_sparsify: bool = True):
+                      skip_full_sparsify: bool = True,
+                      fault_rt: Optional[_FaultsRuntime] = None,
+                      aggregator=None):
     """Jitted single-round engine (standalone / back-compat API)."""
     return jax.jit(_make_round_core(
         controller=controller, spec=spec, weights=weights,
         server_lr=server_lr, use_pallas=use_pallas, block=block,
-        skip_full_sparsify=skip_full_sparsify))
+        skip_full_sparsify=skip_full_sparsify, fault_rt=fault_rt,
+        aggregator=aggregator))
 
 
 def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
@@ -354,11 +553,13 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                      block: int = compression.DEFAULT_BLOCK, unroll: int = 1,
                      mesh=None, mesh_axis: str = CLIENTS_AXIS,
                      n_real: Optional[int] = None,
-                     async_rt: Optional[_AsyncRuntime] = None):
+                     async_rt: Optional[_AsyncRuntime] = None,
+                     fault_rt: Optional[_FaultsRuntime] = None,
+                     aggregator=None):
     """Builds the fused multi-round scan program.
 
-    Returns ``scan_fn(params, ctrl_state, battery, astate, data, keys,
-    start_round, last_round, eval_every, n_rounds)`` executing
+    Returns ``scan_fn(params, ctrl_state, battery, astate, fstate, data,
+    keys, start_round, last_round, eval_every, n_rounds)`` executing
     ``n_rounds`` (static) FL rounds as one ``lax.scan``: traced fading +
     batch sampling + client vmap step + decide/sparsify/aggregate/apply
     + battery debit + strided eval. ``battery`` is the [n_real]
@@ -368,14 +569,19 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
     carry: ``()`` unless staleness buffering is on (then a
     ``repro.core.rounds.AsyncState`` — shard-local under a mesh); an
     empty ``()`` contributes no leaves, so the compiled program is the
-    legacy one. ``keys`` is ``dict(fade=..., sample=..., ctrl=...,
-    harvest=...)`` PRNG keys; ``eval_every`` is a traced int (accuracy
-    is NaN on skipped rounds; the ``last_round`` index is always
-    evaluated). Outputs are stacked per-round logs (including the
-    per-round ``battery`` trace, plus ``t_round``/``made``/``n_late``/
-    ``n_stale`` when ``async_rt`` is set). Wrap in ``jax.jit(...,
-    static_argnames="n_rounds", donate_argnums=(0, 1, 2, 3))`` — or
-    ``vmap`` over ``keys`` for sweeps.
+    legacy one. ``fstate`` is the defended-aggregation carry on the same
+    contract (``()`` unless the aggregator tracks a clip quantile —
+    ``repro.core.faults.DefenseState``, replicated under a mesh).
+    ``keys`` is ``dict(fade=..., sample=..., ctrl=..., harvest=...,
+    fault=...)`` PRNG keys (unused streams are dead code the compiler
+    drops); ``eval_every`` is a traced int (accuracy is NaN on skipped
+    rounds; the ``last_round`` index is always evaluated). Outputs are
+    stacked per-round logs (including the per-round ``battery`` trace,
+    plus ``t_round``/``made``/``n_late``/``n_stale`` when ``async_rt``
+    is set, plus ``n_faulted``/``n_rejected``/``clip_frac``/``fallback``
+    when fault injection or a defended aggregator is active). Wrap in
+    ``jax.jit(..., static_argnames="n_rounds", donate_argnums=(0, 1, 2,
+    3, 4))`` — or ``vmap`` over ``keys`` for sweeps.
 
     With ``mesh`` (a 1-D mesh carrying ``mesh_axis``), the whole scan is
     wrapped in ``shard_map``: ``data`` comes in sharded on its client
@@ -400,12 +606,15 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
     core = _make_round_core(controller=controller, spec=spec, weights=weights,
                             server_lr=server_lr, use_pallas=use_pallas,
                             block=block, shard_axis=axis, n_real=n_real,
-                            async_rt=async_rt)
+                            async_rt=async_rt, fault_rt=fault_rt,
+                            aggregator=aggregator)
+    faulty = fault_rt is not None
+    telemetry = faulty or bool(getattr(aggregator, "enabled", False))
 
     n_pad_keys = int(weights.shape[0])
     n_real_keys = n_real if n_real is not None else n_pad_keys
 
-    def scan_body(params, ctrl_state, battery, astate, data, keys,
+    def scan_body(params, ctrl_state, battery, astate, fstate, data, keys,
                   start_round, last_round, eval_every, n_rounds: int):
         n_local = data.lengths.shape[0]             # per-shard when sharded
         if sharded:
@@ -414,7 +623,7 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
             i0 = jnp.int32(0)
 
         def step(carry, r):
-            p, state, batt, ast = carry
+            p, state, batt, ast, fst = carry
             h = round_gains(keys["fade"], pathloss, r, rayleigh)
             # every shard derives the full (tiny) per-client key set —
             # real clients keep the unpadded split stream — and slices
@@ -426,7 +635,11 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                                             local_steps, batch)
             updates, u_norms, losses = client_step(p, batches)
             ckey = jax.random.fold_in(keys["ctrl"], r)
-            if async_rt is not None:
+            if telemetry:
+                p, dec, state, batt, ast, fst, extras = core(
+                    p, updates, u_norms, h, P, r, ckey, state, batt, ast,
+                    keys.get("harvest"), fst, keys.get("fault"))
+            elif async_rt is not None:
                 p, dec, state, batt, ast, extras = core(
                     p, updates, u_norms, h, P, r, ckey, state, batt, ast,
                     keys["harvest"])
@@ -447,12 +660,18 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                 out.update(t_round=extras["t_wall"], made=extras["made"],
                            n_late=extras["n_late"],
                            n_stale=extras["n_stale"])
-            return (p, state, batt, ast), out
+            if telemetry:
+                out.update(n_faulted=extras["n_faulted"],
+                           n_rejected=extras["n_rejected"],
+                           clip_frac=extras["clip_frac"],
+                           fallback=extras["fallback"])
+            return (p, state, batt, ast, fst), out
 
         rs = start_round + jnp.arange(n_rounds, dtype=jnp.int32)
-        (params, ctrl_state, battery, astate), outs = jax.lax.scan(
-            step, (params, ctrl_state, battery, astate), rs, unroll=unroll)
-        return params, ctrl_state, battery, astate, outs
+        (params, ctrl_state, battery, astate, fstate), outs = jax.lax.scan(
+            step, (params, ctrl_state, battery, astate, fstate), rs,
+            unroll=unroll)
+        return params, ctrl_state, battery, astate, fstate, outs
 
     if not sharded:
         return scan_body
@@ -460,25 +679,27 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as PS
 
-    def scan_fn(params, ctrl_state, battery, astate, data, keys, start_round,
-                last_round, eval_every, n_rounds: int):
+    def scan_fn(params, ctrl_state, battery, astate, fstate, data, keys,
+                start_round, last_round, eval_every, n_rounds: int):
         body = functools.partial(scan_body, n_rounds=n_rounds)
         # only `data` and the stale-update buffer are split (leading
         # client axis); everything else — params, controller state,
-        # battery, keys, round bounds, stacked logs — is replicated.
-        # check_rep=False: the outputs *are* replicated (built from
-        # psum/all-gather results) but the static replication checker
-        # cannot see that through the scan carry.
+        # battery, defense state, keys, round bounds, stacked logs — is
+        # replicated. check_rep=False: the outputs *are* replicated
+        # (built from psum/all-gather results) but the static replication
+        # checker cannot see that through the scan carry.
         ast_specs = async_state_specs(astate, mesh_axis)
+        fst_specs = defense_state_specs(fstate)
         sharded_fn = shard_map(
             body, mesh=mesh,
             in_specs=(replicated_specs(params), replicated_specs(ctrl_state),
-                      PS(), ast_specs, PS(mesh_axis), PS(), PS(), PS(), PS()),
+                      PS(), ast_specs, fst_specs, PS(mesh_axis), PS(), PS(),
+                      PS(), PS()),
             out_specs=(replicated_specs(params), replicated_specs(ctrl_state),
-                       PS(), ast_specs, PS()),
+                       PS(), ast_specs, fst_specs, PS()),
             check_rep=False)
-        return sharded_fn(params, ctrl_state, battery, astate, data, keys,
-                          start_round, last_round, eval_every)
+        return sharded_fn(params, ctrl_state, battery, astate, fstate, data,
+                          keys, start_round, last_round, eval_every)
 
     return scan_fn
 
@@ -521,6 +742,18 @@ class FederatedTrainer:
     battery harvesting, and per-round simulated wall-clock in the logs
     (``RoundLog.t_round``). A disabled config (the default) compiles the
     exact legacy program, so synchronous goldens hold bit-for-bit.
+
+    ``fault_cfg``: a ``repro.core.faults.FaultConfig`` injects
+    (seed, round)-pure faults — mid-round crashes with partial-energy
+    proration, corrupted payloads, channel-estimate error, and
+    open-population churn over the client slots. ``defense``: a
+    ``repro.core.faults.DefenseConfig`` routes aggregation through the
+    defended aggregator (finite screen, streaming norm clip, optional
+    trimmed mean). Either activates the ``RoundLog`` fault-telemetry
+    lanes (``n_faulted``/``n_rejected``/``clip_frac``/``fallback``) and
+    the whole-round non-finite-aggregate guard. Both disabled (the
+    default) compile the exact legacy program — same goldens contract
+    as ``async_cfg``.
     """
 
     def __init__(self, *, model_loss, model_params, client_datasets,
@@ -532,7 +765,9 @@ class FederatedTrainer:
                  use_pallas_compression: bool = False, seed: int = 0,
                  mesh=None, mesh_axis: str = CLIENTS_AXIS,
                  device_profile=None,
-                 async_cfg: Optional[AsyncConfig] = None):
+                 async_cfg: Optional[AsyncConfig] = None,
+                 fault_cfg: Optional[FaultConfig] = None,
+                 defense: Optional[DefenseConfig] = None):
         if strategy is not None:
             controller = strategy
         self.loss_fn = model_loss
@@ -579,6 +814,7 @@ class FederatedTrainer:
         self.key = jax.random.fold_in(base, _CTRL_STREAM)       # controller
         self.sample_key = jax.random.fold_in(base, _SAMPLE_STREAM)
         self.harvest_key = jax.random.fold_in(base, _HARVEST_STREAM)
+        self.fault_key = jax.random.fold_in(base, _FAULT_STREAM)
         self._client_step_raw = make_batched_client_step(model_loss, fl_cfg.lr,
                                                          jit=False)
         self._client_step = jax.jit(self._client_step_raw)
@@ -623,6 +859,26 @@ class FederatedTrainer:
         else:
             self._astate0 = ()
         self._astate = jax.tree_util.tree_map(jnp.array, self._astate0)
+
+        # ---- fault injection + defended aggregation (repro.core.faults)
+        # a disabled fault config resolves to fault_rt=None and the
+        # default "mean" aggregator (with its leafless () carry) emits
+        # the exact legacy combine ops — goldens hold bit-for-bit
+        if fault_cfg is not None and not isinstance(fault_cfg, FaultConfig):
+            raise TypeError(f"fault_cfg must be a FaultConfig or None, got "
+                            f"{type(fault_cfg).__name__}")
+        if defense is not None and not isinstance(defense, DefenseConfig):
+            raise TypeError(f"defense must be a DefenseConfig or None, got "
+                            f"{type(defense).__name__}")
+        self.fault_cfg = fault_cfg
+        self.defense_cfg = defense
+        if defense is not None and defense.enabled:
+            self.aggregator = make_aggregator("defended", defense)
+        else:
+            self.aggregator = make_aggregator("mean")
+        self._fault_rt = self._resolve_fault_runtime(fault_cfg)
+        self._fstate0 = self.aggregator.init()
+        self._fstate = jax.tree_util.tree_map(jnp.array, self._fstate0)
         self._calibrated = False
         self.history: list[RoundLog] = []
 
@@ -665,6 +921,36 @@ class FederatedTrainer:
             gamma_floor=float(gamma_floor), s_bits=self.s_bits,
             i_bits=self.i_bits, n0=float(self.ch_cfg.noise_density))
 
+    def _resolve_fault_runtime(self, cfg: Optional[FaultConfig]):
+        """Materialize the engine-facing ``_FaultsRuntime`` (None when
+        the config is absent/disabled): per-client computation time and
+        energy from the device profile (zeros without one — crash
+        proration then charges transmission time only) plus the channel
+        scalars the realized-energy re-charge needs."""
+        if cfg is None or not cfg.enabled:
+            return None
+        n = self.n_clients
+        if self.device_profile is not None:
+            samples = self.fl_cfg.local_steps * self.fl_cfg.local_batch
+            t_cmp = jnp.asarray(comp_time(self.device_profile, samples),
+                                jnp.float32)
+            e_cmp = jnp.asarray(comp_energy(self.device_profile, samples),
+                                jnp.float32)
+        else:
+            t_cmp = jnp.zeros((n,), jnp.float32)
+            e_cmp = jnp.zeros((n,), jnp.float32)
+        return _FaultsRuntime(
+            crash_rate=float(cfg.crash_rate),
+            corrupt_rate=float(cfg.corrupt_rate),
+            corrupt_mode=str(cfg.corrupt_mode),
+            corrupt_scale=float(cfg.corrupt_scale),
+            h_err_std=float(cfg.h_err_std),
+            churn_dwell=int(cfg.churn_dwell),
+            churn_away=float(cfg.churn_away),
+            t_cmp=t_cmp, e_cmp=e_cmp,
+            b_tot=float(self.ch_cfg.bandwidth_total), s_bits=self.s_bits,
+            i_bits=self.i_bits, n0=float(self.ch_cfg.noise_density))
+
     # back-compat alias (the old attribute name) --------------------------
     @property
     def strategy(self) -> str:
@@ -701,9 +987,10 @@ class FederatedTrainer:
                 local_steps=self.fl_cfg.local_steps,
                 batch=self.fl_cfg.local_batch,
                 mesh=self.mesh, mesh_axis=self.mesh_axis,
-                n_real=self.n_clients, async_rt=self._async_rt)
+                n_real=self.n_clients, async_rt=self._async_rt,
+                fault_rt=self._fault_rt, aggregator=self.aggregator)
             self._scan_engine = jax.jit(scan_fn, static_argnames="n_rounds",
-                                        donate_argnums=(0, 1, 2, 3))
+                                        donate_argnums=(0, 1, 2, 3, 4))
             self._scan_fn_raw = scan_fn
         return self._scan_engine
 
@@ -715,13 +1002,14 @@ class FederatedTrainer:
             scan_fn = self._scan_fn_raw
 
             @functools.partial(jax.jit, static_argnames="n_rounds")
-            def sweep(params, state, battery, astate, data, keys, eval_every,
-                      n_rounds: int):
+            def sweep(params, state, battery, astate, fstate, data, keys,
+                      eval_every, n_rounds: int):
                 def one(ks):
-                    _, _, _, _, outs = scan_fn(params, state, battery, astate,
-                                               data, ks, jnp.int32(0),
-                                               jnp.int32(n_rounds - 1),
-                                               eval_every, n_rounds)
+                    _, _, _, _, _, outs = scan_fn(params, state, battery,
+                                                  astate, fstate, data, ks,
+                                                  jnp.int32(0),
+                                                  jnp.int32(n_rounds - 1),
+                                                  eval_every, n_rounds)
                     return outs
                 return jax.vmap(one)(keys)
 
@@ -738,15 +1026,15 @@ class FederatedTrainer:
             scan_fn = self._scan_fn_raw
 
             @functools.partial(jax.jit, static_argnames="n_rounds")
-            def sweep(params, states, battery, astate, data, keys, eval_every,
-                      n_rounds: int):
+            def sweep(params, states, battery, astate, fstate, data, keys,
+                      eval_every, n_rounds: int):
                 def per_cfg(st):
                     def one(ks):
-                        _, _, _, _, outs = scan_fn(params, st, battery,
-                                                   astate, data, ks,
-                                                   jnp.int32(0),
-                                                   jnp.int32(n_rounds - 1),
-                                                   eval_every, n_rounds)
+                        _, _, _, _, _, outs = scan_fn(params, st, battery,
+                                                      astate, fstate, data,
+                                                      ks, jnp.int32(0),
+                                                      jnp.int32(n_rounds - 1),
+                                                      eval_every, n_rounds)
                         return outs
                     return jax.vmap(one)(keys)
                 return jax.vmap(per_cfg)(states)
@@ -839,10 +1127,10 @@ class FederatedTrainer:
         self._maybe_calibrate(r)
         engine = self._get_scan_engine()
         (self.params, self.ctrl_state, self._battery, self._astate,
-         outs) = engine(
+         self._fstate, outs) = engine(
             self.params, self.ctrl_state, self._battery, self._astate,
-            self._data, self._keys(), jnp.int32(r), jnp.int32(r),
-            jnp.int32(1), n_rounds=1)
+            self._fstate, self._data, self._keys(), jnp.int32(r),
+            jnp.int32(r), jnp.int32(1), n_rounds=1)
         self._append_chunk_logs(r, outs)
         return self.history[-1]
 
@@ -860,13 +1148,15 @@ class FederatedTrainer:
     # ------------------------------------------------------- fused engine ----
     def _keys(self):
         return {"fade": self.network.fade_key, "sample": self.sample_key,
-                "ctrl": self.key, "harvest": self.harvest_key}
+                "ctrl": self.key, "harvest": self.harvest_key,
+                "fault": self.fault_key}
 
     def _append_chunk_logs(self, start: int, outs) -> None:
         """Materialize one chunk of stacked scan outputs (single host
         sync) into per-round ``RoundLog``s."""
         host = {k: np.asarray(v) for k, v in outs.items()}
         timed = "t_round" in host
+        faulted = "n_faulted" in host
         for i in range(host["x"].shape[0]):
             x = host["x"][i]
             self.history.append(RoundLog(
@@ -878,7 +1168,11 @@ class FederatedTrainer:
                 t_round=float(host["t_round"][i]) if timed else None,
                 made=host["made"][i] if timed else None,
                 n_late=int(host["n_late"][i]) if timed else None,
-                n_stale=int(host["n_stale"][i]) if timed else None))
+                n_stale=int(host["n_stale"][i]) if timed else None,
+                n_faulted=int(host["n_faulted"][i]) if faulted else None,
+                n_rejected=int(host["n_rejected"][i]) if faulted else None,
+                clip_frac=float(host["clip_frac"][i]) if faulted else None,
+                fallback=bool(host["fallback"][i]) if faulted else None))
 
     def run_scanned(self, rounds: Optional[int] = None, *,
                     chunk: Optional[int] = None, eval_every: int = 1,
@@ -922,10 +1216,10 @@ class FederatedTrainer:
         for ci, s in enumerate(range(start_round, rounds, chunk)):
             n = min(chunk, rounds - s)
             (self.params, self.ctrl_state, self._battery, self._astate,
-             outs) = engine(
+             self._fstate, outs) = engine(
                 self.params, self.ctrl_state, self._battery, self._astate,
-                self._data, keys, jnp.int32(s), jnp.int32(rounds - 1),
-                jnp.int32(eval_every), n_rounds=n)
+                self._fstate, self._data, keys, jnp.int32(s),
+                jnp.int32(rounds - 1), jnp.int32(eval_every), n_rounds=n)
             self._append_chunk_logs(s, outs)
             if ckpt_dir is not None and ((ci + 1) % ckpt_every == 0
                                          or s + n >= rounds):
@@ -941,9 +1235,11 @@ class FederatedTrainer:
     def _carry_tree(self) -> dict:
         """The full scan carry as one pytree (what a checkpoint holds):
         params, controller state (duals / fairness EMA / FEParams),
-        batteries, and the async stale buffer."""
+        batteries, the async stale buffer, and the defended-aggregation
+        state (streaming clip quantile)."""
         return {"params": self.params, "ctrl_state": self.ctrl_state,
-                "battery": self._battery, "astate": self._astate}
+                "battery": self._battery, "astate": self._astate,
+                "fstate": self._fstate}
 
     def save_checkpoint(self, directory: str, next_round: int) -> str:
         """Persist the carry after round ``next_round - 1``; resuming at
@@ -963,11 +1259,13 @@ class FederatedTrainer:
         duals/EMA."""
         tree = _ckpt.restore_checkpoint(path, self._carry_tree())
         meta = _ckpt.load_metadata(path)
-        (self.params, self.ctrl_state, self._battery, self._astate) = (
+        (self.params, self.ctrl_state, self._battery, self._astate,
+         self._fstate) = (
             jax.tree_util.tree_map(jnp.asarray, tree["params"]),
             jax.tree_util.tree_map(jnp.asarray, tree["ctrl_state"]),
             jnp.asarray(tree["battery"]),
-            jax.tree_util.tree_map(jnp.asarray, tree["astate"]))
+            jax.tree_util.tree_map(jnp.asarray, tree["astate"]),
+            jax.tree_util.tree_map(jnp.asarray, tree["fstate"]))
         self._calibrated = True
         return int(meta["next_round"])
 
@@ -979,7 +1277,8 @@ class FederatedTrainer:
         return {"fade": base,
                 "ctrl": jax.random.fold_in(base, _CTRL_STREAM),
                 "sample": jax.random.fold_in(base, _SAMPLE_STREAM),
-                "harvest": jax.random.fold_in(base, _HARVEST_STREAM)}
+                "harvest": jax.random.fold_in(base, _HARVEST_STREAM),
+                "fault": jax.random.fold_in(base, _FAULT_STREAM)}
 
     @classmethod
     def _stacked_seed_keys(cls, bases):
@@ -1034,16 +1333,19 @@ class FederatedTrainer:
                 st = jax.tree_util.tree_map(jnp.array, self.ctrl_state)
                 bt = jnp.array(self._battery0)
                 ast = jax.tree_util.tree_map(jnp.array, self._astate0)
-                _, _, _, _, outs = engine(p, st, bt, ast, self._data, keys,
-                                          jnp.int32(0), jnp.int32(rounds - 1),
-                                          jnp.int32(eval_every),
-                                          n_rounds=rounds)
+                fst = jax.tree_util.tree_map(jnp.array, self._fstate0)
+                _, _, _, _, _, outs = engine(p, st, bt, ast, fst,
+                                             self._data, keys, jnp.int32(0),
+                                             jnp.int32(rounds - 1),
+                                             jnp.int32(eval_every),
+                                             n_rounds=rounds)
                 lanes.append({k: np.asarray(v) for k, v in outs.items()})
             return {k: np.stack([ln[k] for ln in lanes]) for k in lanes[0]}
         keys = self._stacked_seed_keys(bases)
         outs = self._get_sweep_engine()(
             self.params, self.ctrl_state, jnp.array(self._battery0),
             jax.tree_util.tree_map(jnp.array, self._astate0),
+            jax.tree_util.tree_map(jnp.array, self._fstate0),
             self._data, keys, jnp.int32(eval_every), n_rounds=rounds)
         return {k: np.asarray(v) for k, v in outs.items()}
 
@@ -1067,11 +1369,13 @@ class FederatedTrainer:
                     st = jax.tree_util.tree_map(jnp.array, st_c)
                     bt = jnp.array(self._battery0)
                     ast = jax.tree_util.tree_map(jnp.array, self._astate0)
-                    _, _, _, _, outs = engine(p, st, bt, ast, self._data,
-                                              keys, jnp.int32(0),
-                                              jnp.int32(rounds - 1),
-                                              jnp.int32(eval_every),
-                                              n_rounds=rounds)
+                    fst = jax.tree_util.tree_map(jnp.array, self._fstate0)
+                    _, _, _, _, _, outs = engine(p, st, bt, ast, fst,
+                                                 self._data, keys,
+                                                 jnp.int32(0),
+                                                 jnp.int32(rounds - 1),
+                                                 jnp.int32(eval_every),
+                                                 n_rounds=rounds)
                     per_seed.append({k: np.asarray(v) for k, v in outs.items()})
                 lanes.append({k: np.stack([s[k] for s in per_seed])
                               for k in per_seed[0]})
@@ -1082,6 +1386,7 @@ class FederatedTrainer:
         outs = self._get_config_sweep_engine()(
             self.params, states, jnp.array(self._battery0),
             jax.tree_util.tree_map(jnp.array, self._astate0),
+            jax.tree_util.tree_map(jnp.array, self._fstate0),
             self._data, keys, jnp.int32(eval_every), n_rounds=rounds)
         res = {k: np.asarray(v) for k, v in outs.items()}
         res["configs"] = echo

@@ -49,6 +49,16 @@ def update_l2_norm(tree) -> Array:
     return jnp.sqrt(sq)
 
 
+def row_l2_norms(mat: Array) -> Array:
+    """Per-row L2 norms of an [n, D] update matrix."""
+    return jnp.sqrt(jnp.sum(jnp.square(mat), axis=1))
+
+
+def finite_rows(mat: Array) -> Array:
+    """[n] bool — rows of an [n, D] matrix with every coefficient finite."""
+    return jnp.all(jnp.isfinite(mat), axis=1)
+
+
 def tree_scale(tree, s):
     return jax.tree_util.tree_map(lambda l: (l.astype(jnp.float32) * s).astype(l.dtype), tree)
 

@@ -15,6 +15,10 @@ partition concentration, and fading — into a preset addressable by name
                        weighted buffering of late updates
 ``harvesting``         tiered fleet + finite batteries + per-round energy
                        harvesting (depleted clients recharge and return)
+``churn``              tiered fleet + open population (4-round dwell
+                       epochs, 30% away) + 5% mid-round crash rate
+``byzantine-lite``     15% corrupted payloads + noisy channel estimates,
+                       defended aggregation on
 =====================  =======================================================
 
 Everything a scenario draws (tier assignment, battery capacity) is a pure
@@ -50,6 +54,16 @@ class Scenario:
     staleness: bool = False                  # buffer late updates
     staleness_a: float = 0.5                 # w(tau) = (1 + tau)^-a
     harvest_j: Optional[float] = None        # mean per-round recharge (J)
+    # --- fault-injection knobs (repro.core.faults) ----------------------
+    crash_rate: float = 0.0                  # P[mid-round crash | selected]
+    corrupt_rate: float = 0.0                # P[payload corrupted | made]
+    corrupt_mode: str = "mixed"              # nan | inf | scale | mixed
+    corrupt_scale: float = 1e3               # outlier multiplier ("scale")
+    h_err_std: float = 0.0                   # log-normal channel-est. error
+    churn_dwell: int = 0                     # open-population epoch (rounds)
+    churn_away: float = 0.3                  # P[departed | epoch]
+    defended: bool = False                   # robust aggregation on
+    trim_frac: float = 0.0                   # coord-wise trimmed mean frac
 
     def device_profile(self, n: int, seed: int = 0) -> Optional[DeviceProfile]:
         """Build the [n]-client fleet, pure in ``seed``."""
@@ -93,6 +107,31 @@ class Scenario:
             deadline_q=d_q, staleness=self.staleness, staleness_a=a,
             harvest_j=self.harvest_j)
         return cfg if cfg.enabled else None
+
+    def fault_config(self, *, crash_rate: Optional[float] = None,
+                     corrupt_rate: Optional[float] = None):
+        """The scenario's ``repro.core.faults.FaultConfig`` (None when no
+        fault knob is set — the trainer then compiles the exact legacy
+        fault-free program). Explicit CLI overrides win over the preset."""
+        from repro.core.faults import FaultConfig
+        cfg = FaultConfig(
+            crash_rate=crash_rate if crash_rate is not None else self.crash_rate,
+            corrupt_rate=(corrupt_rate if corrupt_rate is not None
+                          else self.corrupt_rate),
+            corrupt_mode=self.corrupt_mode, corrupt_scale=self.corrupt_scale,
+            h_err_std=self.h_err_std, churn_dwell=self.churn_dwell,
+            churn_away=self.churn_away)
+        return cfg if cfg.enabled else None
+
+    def defense_config(self, *, defended: Optional[bool] = None):
+        """The scenario's ``repro.core.faults.DefenseConfig`` (None when
+        defense is off — aggregation stays the exact legacy weighted
+        mean). ``defended`` overrides the preset in either direction."""
+        on = defended if defended is not None else self.defended
+        if not on:
+            return None
+        from repro.core.faults import DefenseConfig
+        return DefenseConfig(trim_frac=self.trim_frac)
 
 
 _REGISTRY: dict[str, Scenario] = {}
@@ -152,6 +191,24 @@ register_scenario(Scenario(
                 "clients miss rounds; their late updates fold in later "
                 "with the w(tau) = (1+tau)^-0.5 staleness discount",
     profile="tiered", deadline_q=0.5, staleness=True, staleness_a=0.5))
+
+register_scenario(Scenario(
+    name="churn",
+    description="tiered fleet under an open population: clients depart / "
+                "(re)arrive on 4-round dwell epochs (30% away) and 5% of "
+                "selected clients crash mid-round, paying partial energy "
+                "and dropping their update",
+    profile="tiered", churn_dwell=4, churn_away=0.3, crash_rate=0.05))
+
+register_scenario(Scenario(
+    name="byzantine-lite",
+    description="homogeneous fleet where 15% of delivered updates are "
+                "corrupted (NaN/Inf/1e3-scaled outliers) and the "
+                "controller sees a noisy channel estimate (sigma=0.25 "
+                "log-normal); defended aggregation (finite screen + "
+                "norm clipping + 10% coordinate-wise trim) is on",
+    profile="uniform", corrupt_rate=0.15, corrupt_mode="mixed",
+    h_err_std=0.25, defended=True, trim_frac=0.1))
 
 register_scenario(Scenario(
     name="harvesting",

@@ -86,6 +86,15 @@ def async_state_specs(astate, axis: str = CLIENTS_AXIS):
                           for leaf in astate))
 
 
+def defense_state_specs(fstate) -> object:
+    """Spec pytree for the defended-aggregation scan carry
+    (``repro.core.faults.DefenseState``): the streaming norm-quantile
+    tracker is a scalar every shard computes identically from the
+    all-gathered norms, so it is replicated. Accepts the empty carry
+    ``()`` (defense off / no clip tracker) and returns ``()``."""
+    return replicated_specs(fstate)
+
+
 def shard_client_data(data, mesh: Mesh, axis: str = CLIENTS_AXIS):
     """device_put the client stacks onto the mesh (client axis split
     across devices). The client count must already be mesh-divisible —

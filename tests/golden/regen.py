@@ -15,6 +15,11 @@ With no arguments every golden is rewritten; pass names (e.g.
 * ``straggler_fairenergy_12round.json`` — async-round physics: the
   straggler scenario (median deadline + staleness buffering), with
   made-masks, stale counts, and per-round simulated wall-clock.
+* ``churn_fairenergy_12round.json`` — fault-injection physics: open-
+  population churn + mid-round crashes (repro.core.faults), with fault
+  telemetry lanes.
+* ``byzantine_fairenergy_12round.json`` — corruption + channel-estimate
+  error under defended aggregation (finite screen + norm clipping).
 """
 import json
 import os
@@ -87,8 +92,46 @@ def regen_straggler():
     print("stale/round:", [int(lg.n_stale) for lg in tr.history])
 
 
+def _fault_payload(tr, scenario):
+    return {
+        "rounds": ROUNDS,
+        "scenario": scenario,
+        "selected": [[int(b) for b in lg.selected] for lg in tr.history],
+        "total_energy": [float(lg.total_energy) for lg in tr.history],
+        "accuracy": [float(lg.accuracy) for lg in tr.history],
+        "n_faulted": [int(lg.n_faulted) for lg in tr.history],
+        "n_rejected": [int(lg.n_rejected) for lg in tr.history],
+        "clip_frac": [float(lg.clip_frac) for lg in tr.history],
+        "fallback": [bool(lg.fallback) for lg in tr.history],
+    }
+
+
+def regen_churn():
+    scn = get_scenario("churn")
+    tr = make_trainer("fairenergy",
+                      device_profile=scn.device_profile(N_CLIENTS, seed=0),
+                      fault_cfg=scn.fault_config(),
+                      defense=scn.defense_config())
+    tr.run_scanned(ROUNDS, verbose=False)
+    _write("churn_fairenergy_12round.json", _fault_payload(tr, "churn"))
+    print("faulted/round:", [int(lg.n_faulted) for lg in tr.history])
+
+
+def regen_byzantine():
+    scn = get_scenario("byzantine-lite")
+    tr = make_trainer("fairenergy",
+                      device_profile=scn.device_profile(N_CLIENTS, seed=0),
+                      fault_cfg=scn.fault_config(),
+                      defense=scn.defense_config())
+    tr.run_scanned(ROUNDS, verbose=False)
+    _write("byzantine_fairenergy_12round.json",
+           _fault_payload(tr, "byzantine-lite"))
+    print("rejected/round:", [int(lg.n_rejected) for lg in tr.history])
+
+
 GOLDENS = {"main": regen_main, "tiered": regen_tiered,
-           "straggler": regen_straggler}
+           "straggler": regen_straggler, "churn": regen_churn,
+           "byzantine": regen_byzantine}
 
 
 def main(names=None):
