@@ -31,7 +31,8 @@ DATA_KW = dict(confusion=0.55, label_noise=0.05, noise=0.9)
 def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
           lr=0.05, local_steps=2, mesh=None, scenario=None,
           deadline=None, staleness_a=None, fault_rate=None, crash_rate=None,
-          churn=None, defense=None):
+          churn=None, defense=None, clusters=None, pool_frac=None,
+          mobility_sigma=None):
     cfg = CNN_FULL
     scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
     beta = scn.beta(0.3) if scn else 0.3
@@ -40,6 +41,13 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
     async_cfg = None
     fault_cfg = None
     defense_cfg = None
+    mobility_cfg = None
+    hierarchy_cfg = None
+    if clusters is not None or pool_frac is not None:
+        from repro.core.hierarchy import HierarchyConfig
+        hierarchy_cfg = HierarchyConfig(
+            clusters=clusters if clusters is not None else 1,
+            pool_frac=pool_frac if pool_frac is not None else 1.0)
     if scn:
         ch_cfg = scn.apply_channel(ch_cfg)
         profile = scn.device_profile(n_clients, seed=seed)
@@ -48,7 +56,11 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
         fault_cfg = scn.fault_config(crash_rate=crash_rate,
                                      corrupt_rate=fault_rate)
         defense_cfg = scn.defense_config(defended=defense)
-    elif deadline is not None:
+        mobility_cfg = scn.mobility_config(sigma_db=mobility_sigma)
+    elif mobility_sigma is not None and mobility_sigma > 0.0:
+        from repro.core.channel import MobilityConfig
+        mobility_cfg = MobilityConfig(sigma_db=mobility_sigma)
+    if scn is None and deadline is not None:
         from repro.core.rounds import AsyncConfig
         async_cfg = AsyncConfig(deadline_s=deadline,
                                 staleness_a=staleness_a
@@ -86,7 +98,8 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
                                 ch_cfg=ch_cfg, controller=controller,
                                 seed=seed, mesh=mesh, device_profile=profile,
                                 async_cfg=async_cfg, fault_cfg=fault_cfg,
-                                defense=defense_cfg, **kw)
+                                defense=defense_cfg, hierarchy=hierarchy_cfg,
+                                mobility=mobility_cfg, **kw)
     return make, fl_cfg
 
 
@@ -325,6 +338,19 @@ if __name__ == "__main__":
                     help="robust aggregation (finite screen + norm clipping "
                          "to a streaming quantile); overrides the scenario "
                          "preset's defended flag")
+    ap.add_argument("--clusters", type=int, default=None,
+                    help="hierarchical control (repro.core.hierarchy): "
+                         "k-means client clusters for stratified candidate "
+                         "sampling; 1 (default) keeps full-population "
+                         "control")
+    ap.add_argument("--pool-frac", type=float, default=None,
+                    help="per-round candidate pool fraction sampled prop. "
+                         "to fairness deficit; controllers solve on the "
+                         "pooled slice only (1.0 = full population)")
+    ap.add_argument("--mobility-sigma", type=float, default=None,
+                    help="slow pathloss drift RMS in dB "
+                         "(repro.core.channel.MobilityConfig); overrides "
+                         "the scenario preset (0 disables)")
     ap.add_argument("--shard-clients", action="store_true",
                     help="run the fused engine sharded over a `clients` "
                          "mesh spanning all visible devices (force multiple "
@@ -354,7 +380,8 @@ if __name__ == "__main__":
               eval_every=a.eval_every, mesh=mesh, scenario=a.scenario,
               deadline=a.deadline, staleness_a=a.staleness_a,
               fault_rate=a.fault_rate, crash_rate=a.crash_rate,
-              churn=a.churn, defense=a.defense,
+              churn=a.churn, defense=a.defense, clusters=a.clusters,
+              pool_frac=a.pool_frac, mobility_sigma=a.mobility_sigma,
               sweep_seeds=list(range(a.seeds)) if a.seeds else None,
               config_sweep=config_sweep)
     if a.paper:

@@ -1,0 +1,239 @@
+"""Population-scale control: full-[N] dual solve vs the sampled
+[K_pool] decide path (``repro.core.hierarchy``).
+
+Two measurements, subprocess-per-arm on the shared harness:
+
+* **decide latency** — per-round controller decide cost at
+  N in {50, 10 000, 100 000}: the full FairEnergy solve (its inner
+  argsort/cumsum repair loop scales with N) vs the sampled path
+  (deficit-weighted Gumbel-top-k pool of 512 + the same solve on the
+  [512] slice — the O(N) work left is element-wise + top_k). Each arm
+  jits a ``lax.scan`` of decides and reports best-rep ms/decide, so
+  dispatch overhead is amortized and compile time excluded. The
+  headline: pooled ms/decide stays near-flat 50 → 1e5 while the full
+  solve grows with N.
+* **accuracy parity** — a 12-round training run at N=2000 (tiny softmax
+  workload), full population vs clusters=4 / pool_frac=0.25, over 3
+  seeds: final accuracy must agree within seed noise — sub-sampled
+  control is a latency win, not an accuracy trade.
+
+Writes ``BENCH_hierarchy.json`` at the repo root.
+
+  PYTHONPATH=src python -m benchmarks.hierarchy_bench [--fast] [--out PATH]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+try:
+    from _harness import base_parser, emit, run_worker, stamp, sweep_best
+except ImportError:                       # python -m benchmarks.hierarchy_bench
+    from benchmarks._harness import (base_parser, emit, run_worker, stamp,
+                                     sweep_best)
+
+POOL = 512
+N_GRID = (50, 10_000, 100_000)
+
+
+# ------------------------------------------------------------ workers ----
+def _build_controller(n: int, mode: str, pool: int):
+    import jax
+    import numpy as np
+
+    from repro.configs import FairEnergyConfig
+    from repro.core.controllers import ControllerContext, make_controller
+    from repro.core.hierarchy import HierarchyConfig, wrap_controller
+
+    rng = np.random.default_rng(0)
+    ctx = ControllerContext(n_clients=n, b_tot=10e6, s_bits=6.4e7,
+                            i_bits=2e6, n0=4e-21,
+                            fe_cfg=FairEnergyConfig(eta=1e-3, eta_auto=False))
+    ctrl = make_controller("fairenergy", ctx)
+    pathloss = rng.uniform(1e-9, 1e-7, n)
+    power = rng.uniform(0.1, 1.0, n)
+    if mode == "pooled":
+        cfg = HierarchyConfig(clusters=8 if n >= 64 else 1,
+                              pool_size=min(pool, n))
+        ctrl = wrap_controller(ctrl, cfg, ctx, pathloss=pathloss, power=power,
+                               base_key=jax.random.PRNGKey(17), seed=0)
+    return ctrl, pathloss, power
+
+
+def _worker_decide(n: int, mode: str, pool: int, steps: int,
+                   reps: int) -> None:
+    """One latency arm: ms/decide of a jitted ``steps``-round decide
+    scan, best of ``reps`` (compile excluded). Prints one JSON line."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.controllers.base import RoundObservation
+
+    ctrl, pathloss, power = _build_controller(n, mode, pool)
+    rng = np.random.default_rng(1)
+    u = jnp.asarray(rng.uniform(0.1, 2.0, n), jnp.float32)
+    h = jnp.asarray(pathloss * rng.exponential(1.0, n), jnp.float32)
+    P = jnp.asarray(power, jnp.float32)
+    base = jax.random.PRNGKey(3)
+
+    def body(state, r):
+        obs = RoundObservation(u_norms=u, h=h, P=P, round=r,
+                               key=jax.random.fold_in(base, r))
+        dec, state = ctrl.decide(obs, state)
+        return state, dec.x.sum()
+
+    @jax.jit
+    def run(state):
+        return jax.lax.scan(body, state,
+                            jnp.arange(steps, dtype=jnp.int32))
+
+    state0 = ctrl.init(n)
+    jax.block_until_ready(run(state0))            # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(state0))
+        best = min(best, time.perf_counter() - t0)
+    print(json.dumps({"n": n, "mode": mode,
+                      "k_pool": min(pool, n) if mode == "pooled" else n,
+                      "ms_per_decide": round(best / steps * 1e3, 4),
+                      "best_rep_s": round(best, 4)}))
+
+
+def _worker_accuracy(n: int, mode: str, pool: int, rounds: int,
+                     seeds: int) -> None:
+    """One accuracy arm: final eval accuracy of a tiny training run per
+    seed, full vs sampled control. Prints one JSON line."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import ChannelConfig, FairEnergyConfig, FLConfig
+    from repro.core.hierarchy import HierarchyConfig
+    from repro.fl import FederatedTrainer
+
+    D_IN, D_HID, N_CLS, SHARD = 16, 32, 4, 24
+
+    def loss_fn(p, b):
+        hid = jnp.tanh(b["x"] @ p["w1"])
+        ll = jax.nn.log_softmax(hid @ p["w2"])
+        return -jnp.mean(jnp.take_along_axis(ll, b["y"][:, None], 1)), {}
+
+    hierarchy = None
+    if mode == "pooled":
+        hierarchy = HierarchyConfig(clusters=4 if n >= 16 else 1,
+                                    pool_frac=min(1.0, pool / n))
+
+    accs = []
+    for seed in range(seeds):
+        rng = np.random.default_rng(seed)
+        params = {
+            "w1": jnp.asarray(rng.normal(size=(D_IN, D_HID))
+                              .astype(np.float32) * 0.1),
+            "w2": jnp.asarray(rng.normal(size=(D_HID, N_CLS))
+                              .astype(np.float32) * 0.1)}
+        datasets = [{"x": rng.normal(size=(SHARD, D_IN)).astype(np.float32),
+                     "y": rng.integers(0, N_CLS, size=SHARD)}
+                    for _ in range(n)]
+        tx = jnp.asarray(rng.normal(size=(256, D_IN)).astype(np.float32))
+        ty = jnp.asarray(rng.integers(0, N_CLS, size=256))
+
+        def eval_fn(p, tx=tx, ty=ty):
+            lg = jnp.tanh(tx @ p["w1"]) @ p["w2"]
+            return jnp.mean((jnp.argmax(lg, -1) == ty).astype(jnp.float32))
+
+        tr = FederatedTrainer(
+            model_loss=loss_fn, model_params=params,
+            client_datasets=datasets, eval_fn=eval_fn,
+            fl_cfg=FLConfig(local_steps=1, local_batch=8, lr=0.1),
+            fe_cfg=FairEnergyConfig(eta=1e-3, eta_auto=False),
+            ch_cfg=ChannelConfig(n_clients=n), controller="fairenergy",
+            seed=seed, hierarchy=hierarchy)
+        tr.run_scanned(rounds, verbose=False)
+        accs.append(float(tr.history[-1].accuracy))
+
+    print(json.dumps({"n": n, "mode": mode, "rounds": rounds,
+                      "acc_per_seed": [round(a, 4) for a in accs],
+                      "acc_mean": round(float(np.mean(accs)), 4),
+                      "acc_std": round(float(np.std(accs)), 4)}))
+
+
+# ------------------------------------------------------- orchestrator ----
+def bench(n_grid, pool, steps, reps, sweeps, acc_n, acc_rounds,
+          acc_seeds) -> dict:
+    def progress(s, key, r):
+        print(f"sweep {s}: {key} {r.get('ms_per_decide', '-')} ms/decide",
+              file=sys.stderr)
+
+    arms = {}
+    for n in n_grid:
+        for mode in ("full", "pooled"):
+            arms[(n, mode)] = (
+                lambda n=n, mode=mode: run_worker(
+                    __file__, ["--task", "decide", "--n", n, "--mode", mode,
+                               "--pool", pool, "--steps", steps,
+                               "--reps", reps]))
+    best = sweep_best(arms, sweeps=sweeps, progress=progress)
+
+    scaling = []
+    for n in n_grid:
+        full = best[(n, "full")]["ms_per_decide"]
+        pooled = best[(n, "pooled")]["ms_per_decide"]
+        scaling.append({"n_clients": n, "k_pool": best[(n, "pooled")]["k_pool"],
+                        "full_ms_per_decide": full,
+                        "pooled_ms_per_decide": pooled,
+                        "pooled_speedup": round(full / pooled, 2)})
+
+    acc = {}
+    for mode in ("full", "pooled"):
+        acc[mode] = run_worker(
+            __file__, ["--task", "accuracy", "--n", acc_n, "--mode", mode,
+                       "--pool", pool, "--rounds", acc_rounds,
+                       "--seeds", acc_seeds])
+        print(f"accuracy {mode}: {acc[mode]['acc_mean']} "
+              f"± {acc[mode]['acc_std']}", file=sys.stderr)
+
+    lo, hi = scaling[0], scaling[-1]
+    return stamp({
+        "workload": "fairenergy dual solve on synthetic channel stats; "
+                    "pooled = deficit-sampled Gumbel-top-k candidate slice",
+        "pool_size": pool, "decide_steps_per_rep": steps,
+        "decide_scaling": scaling,
+        "pooled_flatness_maxN_over_minN": round(
+            hi["pooled_ms_per_decide"] / lo["pooled_ms_per_decide"], 2),
+        "full_growth_maxN_over_minN": round(
+            hi["full_ms_per_decide"] / lo["full_ms_per_decide"], 2),
+        "accuracy_parity": {
+            "n_clients": acc_n, "rounds": acc_rounds, "seeds": acc_seeds,
+            "full": acc["full"], "pooled": acc["pooled"],
+            "gap": round(acc["pooled"]["acc_mean"]
+                         - acc["full"]["acc_mean"], 4)},
+    })
+
+
+def main() -> None:
+    ap = base_parser("BENCH_hierarchy.json", task="decide", n=50,
+                     mode="full", pool=POOL, steps=10, reps=2, rounds=12,
+                     seeds=3)
+    a = ap.parse_args()
+    if a.worker:
+        if a.task == "decide":
+            _worker_decide(a.n, a.mode, a.pool, a.steps, a.reps)
+        else:
+            _worker_accuracy(a.n, a.mode, a.pool, a.rounds, a.seeds)
+        return
+    if a.fast:
+        res = bench((50, 400), pool=32, steps=3, reps=1, sweeps=1,
+                    acc_n=64, acc_rounds=4, acc_seeds=1)
+    else:
+        res = bench(N_GRID, pool=a.pool, steps=a.steps, reps=a.reps,
+                    sweeps=2, acc_n=2000, acc_rounds=a.rounds,
+                    acc_seeds=a.seeds)
+    emit(res, a.out, a.fast)
+
+
+if __name__ == "__main__":
+    main()

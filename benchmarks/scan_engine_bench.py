@@ -24,22 +24,21 @@ trajectory (headline: scan rounds/sec over the legacy per-round driver).
 """
 from __future__ import annotations
 
-import argparse
-import json
-import os
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+try:
+    from _harness import base_parser, emit, stamp, time_interleaved
+except ImportError:                    # python -m benchmarks.scan_engine_bench
+    from benchmarks._harness import (base_parser, emit, stamp,
+                                     time_interleaved)
 
 from repro.configs import ChannelConfig, FairEnergyConfig, FLConfig
 from repro.fl import FederatedTrainer
 
 D_IN, D_HIDDEN, N_CLASSES = 64, 128, 10   # ~9.6k params (round_engine_bench)
 SHARD = 160
-
-REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
 
 def _loss_fn(p, batch):
@@ -70,19 +69,11 @@ def make_trainer(n_clients: int, local_steps: int, batch: int, seed=0):
         fixed_k=max(1, n_clients // 5), seed=seed)
 
 
-def _time_interleaved(arms: dict, rounds: int, reps: int = 3) -> dict:
-    """rounds/sec per arm, best of ``reps`` *interleaved* repetitions —
-    robust to the throughput drift of shared/throttled CPUs, which would
-    otherwise skew arms measured minutes apart."""
-    for fn in arms.values():
-        fn()                               # compile + warm caches
-    best = {name: float("inf") for name in arms}
-    for _ in range(reps):
-        for name, fn in arms.items():
-            t0 = time.perf_counter()
-            fn()
-            best[name] = min(best[name], time.perf_counter() - t0)
-    return {name: rounds / dt for name, dt in best.items()}
+def _rounds_per_sec(arms: dict, rounds: int, reps: int = 3) -> dict:
+    """rounds/sec per arm via the shared harness ``time_interleaved``
+    (warm every arm, then best-of interleaved repetitions)."""
+    return {name: rounds / dt
+            for name, dt in time_interleaved(arms, reps=reps).items()}
 
 
 class _HostShard:
@@ -162,7 +153,7 @@ def bench(n_clients=50, rounds=30, local_steps=2, batch=32, eval_every=5,
     tr_scan = make_trainer(n_clients, local_steps, batch)
     tr_strided = make_trainer(n_clients, local_steps, batch)
 
-    rps = _time_interleaved({
+    rps = _rounds_per_sec({
         "legacy": lambda: [legacy_round(r) for r in range(rounds)],
         "fused": lambda: [tr_loop.run_round(r) for r in range(rounds)],
         "scan": lambda: tr_scan.run_scanned(rounds, eval_every=1,
@@ -172,7 +163,7 @@ def bench(n_clients=50, rounds=30, local_steps=2, batch=32, eval_every=5,
                                                   verbose=False),
     }, rounds, reps=reps)
 
-    return {
+    return stamp({
         "workload": "round_engine_bench softmax / scoremax",
         "n_clients": n_clients, "rounds_per_chunk": rounds,
         "local_steps": local_steps, "batch": batch,
@@ -184,27 +175,17 @@ def bench(n_clients=50, rounds=30, local_steps=2, batch=32, eval_every=5,
         f"scan_eval_every{eval_every}_rounds_per_sec": round(rps["strided"], 2),
         f"scan_eval_every{eval_every}_speedup_vs_legacy_loop":
             round(rps["strided"] / rps["legacy"], 2),
-    }
+    })
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--fast", action="store_true",
-                    help="CI smoke: tiny round count, result not meaningful")
-    ap.add_argument("--clients", type=int, default=50)
-    ap.add_argument("--rounds", type=int, default=30)
-    ap.add_argument("--out", default=os.path.join(REPO_ROOT, "BENCH_scan_engine.json"))
+    ap = base_parser("BENCH_scan_engine.json", clients=50, rounds=30)
     a = ap.parse_args()
     if a.fast:
         res = bench(n_clients=8, rounds=4, eval_every=2)
     else:
         res = bench(n_clients=a.clients, rounds=a.rounds)
-    print(json.dumps(res, indent=1))
-    if not a.fast:
-        with open(a.out, "w") as f:
-            json.dump(res, f, indent=1)
-            f.write("\n")
-        print(f"wrote {a.out}")
+    emit(res, a.out, a.fast)
 
 
 if __name__ == "__main__":

@@ -5,8 +5,10 @@ Measures ``run_scanned`` rounds/sec for N in {50, 200, 800} clients on a
 for a real multi-chip topology: ``XLA_FLAGS=--xla_force_host_platform_
 device_count=8``). Device count is fixed at process startup, so every
 (N, devices) arm runs in its own *worker subprocess* (same file,
-``--worker``); the orchestrator interleaves whole sweeps and keeps each
-arm's best rep — robust to the throughput drift of shared/throttled CPUs.
+``--worker``) via the shared harness (``benchmarks/_harness.py``:
+``run_worker`` + ``sweep_best``); the orchestrator interleaves whole
+sweeps and keeps each arm's best rep — robust to the throughput drift of
+shared/throttled CPUs.
 
 Each worker compiles once, then times fresh-trainer repetitions against
 the cached engine (compile excluded). ScoreMax decisions, 2 local steps,
@@ -21,14 +23,16 @@ container cannot exceed ~2x; the JSON records both counts.
 """
 from __future__ import annotations
 
-import argparse
 import json
-import os
-import subprocess
 import sys
 import time
 
-REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+try:
+    from _harness import (REPO_ROOT, base_parser, emit, run_worker, stamp,
+                          sweep_best)
+except ImportError:                 # python -m benchmarks.sharded_engine_bench
+    from benchmarks._harness import (REPO_ROOT, base_parser, emit, run_worker,
+                                     stamp, sweep_best)
 
 D_IN, D_HIDDEN, N_CLASSES = 64, 256, 10
 SHARD = 160
@@ -98,47 +102,27 @@ def _worker(devices: int, n_clients: int, rounds: int, reps: int,
                       "compile_plus_first_s": round(first_s, 3)}))
 
 
-def _spawn(devices: int, n_clients: int, rounds: int, reps: int,
-           local_steps: int, batch: int) -> dict:
-    env = dict(os.environ)
-    other = [f for f in env.get("XLA_FLAGS", "").split()
-             if not f.startswith("--xla_force_host_platform_device_count")]
-    env["XLA_FLAGS"] = " ".join(
-        [f"--xla_force_host_platform_device_count={devices}"] + other)
-    env.setdefault("JAX_PLATFORMS", "cpu")
-    env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src") + os.pathsep
-                         + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
-    out = subprocess.run(
-        [sys.executable, os.path.abspath(__file__), "--worker",
-         "--devices", str(devices), "--clients", str(n_clients),
-         "--rounds", str(rounds), "--reps", str(reps),
-         "--local-steps", str(local_steps), "--batch", str(batch)],
-        capture_output=True, text=True, env=env, cwd=REPO_ROOT, timeout=1200)
-    if out.returncode != 0:
-        raise RuntimeError(f"worker devices={devices} N={n_clients} failed:\n"
-                           + out.stdout + out.stderr)
-    return json.loads(out.stdout.strip().splitlines()[-1])
-
-
 def bench(client_counts, device_counts, rounds, reps=2, sweeps=2,
           local_steps=2, batch=32) -> dict:
-    arms = [(n, d) for n in client_counts for d in device_counts]
-    best: dict = {}
-    for s in range(sweeps):        # interleave whole sweeps against drift
-        for n, d in arms:
-            r = _spawn(d, n, rounds, reps, local_steps, batch)
-            key = (n, d)
-            if key not in best or r["rounds_per_sec"] > best[key]["rounds_per_sec"]:
-                best[key] = r
-            print(f"sweep {s}: N={n} devices={d} "
-                  f"{r['rounds_per_sec']:.2f} rounds/s", file=sys.stderr)
+    arms = {
+        (n, d): (lambda n=n, d=d: run_worker(
+            __file__, ["--devices", d, "--clients", n, "--rounds", rounds,
+                       "--reps", reps, "--local-steps", local_steps,
+                       "--batch", batch], devices=d))
+        for n in client_counts for d in device_counts}
 
-    res = {"workload": f"scoremax softmax d_hidden={D_HIDDEN}, "
-                       f"{local_steps} local steps, batch {batch}, "
-                       f"eval_every=5",
-           "rounds_per_chunk": rounds,
-           "physical_cpus": os.cpu_count(),
-           "device_counts": list(device_counts), "scaling": []}
+    def progress(s, key, r):
+        print(f"sweep {s}: N={key[0]} devices={key[1]} "
+              f"{r['rounds_per_sec']:.2f} rounds/s", file=sys.stderr)
+
+    best = sweep_best(arms, sweeps=sweeps,
+                      score=lambda r: r["rounds_per_sec"], progress=progress)
+
+    res = stamp({"workload": f"scoremax softmax d_hidden={D_HIDDEN}, "
+                             f"{local_steps} local steps, batch {batch}, "
+                             f"eval_every=5",
+                 "rounds_per_chunk": rounds,
+                 "device_counts": list(device_counts), "scaling": []})
     base_dev = min(device_counts)
     for n in client_counts:
         row = {"n_clients": n}
@@ -152,18 +136,8 @@ def bench(client_counts, device_counts, rounds, reps=2, sweeps=2,
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--worker", action="store_true")
-    ap.add_argument("--fast", action="store_true",
-                    help="CI smoke: tiny sweep, result not meaningful")
-    ap.add_argument("--devices", type=int, default=1)
-    ap.add_argument("--clients", type=int, default=200)
-    ap.add_argument("--rounds", type=int, default=10)
-    ap.add_argument("--reps", type=int, default=2)
-    ap.add_argument("--local-steps", type=int, default=2)
-    ap.add_argument("--batch", type=int, default=32)
-    ap.add_argument("--out", default=os.path.join(REPO_ROOT,
-                                                  "BENCH_sharded_engine.json"))
+    ap = base_parser("BENCH_sharded_engine.json", devices=1, clients=200,
+                     rounds=10, reps=2, local_steps=2, batch=32)
     a = ap.parse_args()
     if a.worker:
         _worker(a.devices, a.clients, a.rounds, a.reps, a.local_steps, a.batch)
@@ -172,12 +146,7 @@ def main() -> None:
         res = bench([16], [1, 2], rounds=3, reps=1, sweeps=1)
     else:
         res = bench([50, 200, 800], [1, 8], rounds=a.rounds, reps=a.reps)
-    print(json.dumps(res, indent=1))
-    if not a.fast:
-        with open(a.out, "w") as f:
-            json.dump(res, f, indent=1)
-            f.write("\n")
-        print(f"wrote {a.out}")
+    emit(res, a.out, a.fast)
 
 
 if __name__ == "__main__":

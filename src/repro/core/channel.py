@@ -7,6 +7,9 @@ All functions are jnp and broadcast over clients.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -95,9 +98,73 @@ def round_fading(key: Array, round_idx, n: int) -> Array:
     return jax.random.exponential(rkey, (n,), jnp.float32)
 
 
-def round_gains(key: Array, pathloss: Array, round_idx, rayleigh: bool = True) -> Array:
-    """h_i^r = pathloss_i x fade_i^r (fade == 1 when Rayleigh is off)."""
+# mobility phase stream: folded off the fade key, far above any round
+# index (same tag discipline as the repro.fl.server streams)
+_MOBILITY_STREAM = 6 << 20
+
+# incommensurate harmonic mixture for the slow drift waveform: the
+# irrational-ish frequency ratios keep the per-client trajectories from
+# ever exactly repeating within a run, and the fixed amplitudes give a
+# closed-form RMS so sigma_db is an exact shadowing scale
+_MOB_FREQS = (1.0, 0.521, 0.287)
+_MOB_AMPS = (1.0, 0.6, 0.35)
+_TWO_PI = 6.283185307179586
+
+
+@dataclasses.dataclass(frozen=True)
+class MobilityConfig:
+    """Slow log-normal pathloss drift from client mobility.
+
+    Models shadowing variation as clients move: each client's pathloss is
+    multiplied by ``10 ** (sigma_db * w_i(r) / 10)`` where ``w_i(r)`` is a
+    unit-RMS mixture of incommensurate sinusoids with per-client random
+    phases — a *closed-form* function of the round index, so the drift is
+    (seed, round)-pure (resume/replay-safe, unlike a random walk) while
+    still decorrelating over ``period_rounds`` rounds. ``sigma_db`` is the
+    RMS shadowing scale in dB (3 dB is mild pedestrian shadowing, 8 dB
+    heavy urban); ``sigma_db = 0`` is exactly the static channel.
+    """
+    sigma_db: float = 3.0        # RMS drift amplitude (dB)
+    period_rounds: float = 40.0  # rounds per slowest-harmonic cycle
+
+    def __post_init__(self):
+        if self.sigma_db < 0.0:
+            raise ValueError(f"sigma_db must be >= 0, got {self.sigma_db}")
+        if self.period_rounds <= 0.0:
+            raise ValueError(f"period_rounds must be > 0, "
+                             f"got {self.period_rounds}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.sigma_db > 0.0
+
+
+def mobility_drift(key: Array, round_idx, n: int,
+                   mobility: MobilityConfig) -> Array:
+    """[N] multiplicative pathloss drift for round ``round_idx`` — pure in
+    (key, round). Per-client phases come from a dedicated stream folded
+    off ``key`` (never the per-round fading draw), so enabling mobility
+    leaves the Rayleigh stream untouched."""
+    pkey = jax.random.fold_in(key, _MOBILITY_STREAM)
+    phases = jax.random.uniform(pkey, (n, len(_MOB_FREQS)), jnp.float32,
+                                0.0, _TWO_PI)
+    amps = jnp.asarray(_MOB_AMPS, jnp.float32)
+    freqs = jnp.asarray(_MOB_FREQS, jnp.float32) / mobility.period_rounds
+    r = jnp.asarray(round_idx, jnp.float32)
+    w = jnp.sum(amps * jnp.sin(_TWO_PI * freqs * r + phases), axis=-1)
+    w = w / jnp.sqrt(jnp.sum(amps ** 2) / 2.0)        # unit RMS over rounds
+    return 10.0 ** (mobility.sigma_db * w / 10.0)
+
+
+def round_gains(key: Array, pathloss: Array, round_idx, rayleigh: bool = True,
+                mobility: Optional[MobilityConfig] = None) -> Array:
+    """h_i^r = pathloss_i x drift_i^r x fade_i^r (fade == 1 when Rayleigh
+    is off; drift == 1 without a mobility config). The mobility branch is
+    Python-level — ``mobility=None`` emits the exact legacy program."""
     pathloss = jnp.asarray(pathloss, jnp.float32)
+    if mobility is not None and mobility.enabled:
+        pathloss = pathloss * mobility_drift(key, round_idx,
+                                             pathloss.shape[0], mobility)
     if not rayleigh:
         return pathloss
     return pathloss * round_fading(key, round_idx, pathloss.shape[0])
@@ -121,7 +188,8 @@ class WirelessNetwork:
     ``gains(r)``, ``power`` and ``pathloss`` are identical with or
     without a profile (pinned by tests/test_energy.py)."""
 
-    def __init__(self, cfg, seed: int = 0, device_profile=None):
+    def __init__(self, cfg, seed: int = 0, device_profile=None,
+                 mobility: Optional[MobilityConfig] = None):
         rng = np.random.default_rng(seed)
         self.cfg = cfg
         n = cfg.n_clients
@@ -130,6 +198,11 @@ class WirelessNetwork:
         self.pathloss = REF_GAIN_1M * self.distance ** (-cfg.pathloss_exp)
         self.fade_key = jax.random.PRNGKey(seed)
         self._pathloss_j = jnp.asarray(self.pathloss, jnp.float32)
+        # a disabled config (sigma_db = 0) is normalized away so callers
+        # branching on `mobility is not None` emit the legacy program
+        if mobility is not None and not mobility.enabled:
+            mobility = None
+        self.mobility = mobility
         if isinstance(device_profile, str):
             from .energy import make_profile
             device_profile = make_profile(device_profile, n, seed=seed)
@@ -139,7 +212,8 @@ class WirelessNetwork:
         self.device_profile = device_profile
 
     def gains(self, round_idx: int = 0) -> np.ndarray:
-        """h_i^r — pathloss x Rayleigh fading (exponential power), pure in
+        """h_i^r — pathloss x mobility drift x Rayleigh fading, pure in
         (seed, round_idx)."""
         return np.asarray(round_gains(self.fade_key, self._pathloss_j,
-                                      round_idx, self.cfg.rayleigh))
+                                      round_idx, self.cfg.rayleigh,
+                                      mobility=self.mobility))

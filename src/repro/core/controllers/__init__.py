@@ -10,11 +10,12 @@ Usage:
     dec, state = ctrl.decide(obs, state)
 
 Registered strategies: ``fairenergy`` (paper Algorithm 1), ``scoremax``,
-``ecorandom``, ``randomfull``, ``channelgreedy``. Add your own with
+``ecorandom``, ``randomfull``, ``channelgreedy``, ``tilted`` (q-FFL /
+tilted-ERM-style fairness selection). Add your own with
 ``@register_controller("name")`` — see ``base.py`` for the protocol.
 """
 from .base import (Controller, ControllerContext, RoundDecision,  # noqa: F401
                    RoundObservation, available_controllers, make_controller,
                    masked_decision, register_controller, topk_mask)
-from . import baselines, fairenergy  # noqa: F401  (registration side effects)
+from . import baselines, fairenergy, tilted  # noqa: F401  (registration side effects)
 from .fairenergy import FairEnergy  # noqa: F401

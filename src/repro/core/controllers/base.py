@@ -58,6 +58,11 @@ class RoundObservation(NamedTuple):
     #                      payload comm at full bandwidth), seconds; only
     #                      set by the async engine (repro.core.rounds).
     #                      None = untimed (legacy) rounds.
+    e_cmp: Any = None  # [N] f32 — per-round computation energy for THESE
+    #                    observation lanes. Set by the sampled decide path
+    #                    (repro.core.hierarchy), whose [K_pool] slice no
+    #                    longer matches ctx.e_cmp_array(); None = read the
+    #                    context (the full-population path).
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +87,8 @@ class ControllerContext:
     eco_gamma: float = 0.1
     eco_bandwidth: Optional[float] = None
     e_cmp: Optional[tuple] = None      # [N] J/round computation energy
+    tilt_t: float = 2.0                # tilted baseline: tilt temperature
+    tilt_ema: float = 0.5              # tilted baseline: score EMA step
 
     def __post_init__(self):
         # shannon_rate clamps bandwidth to a 1 Hz floor (repro.core.channel)
@@ -197,12 +204,18 @@ def masked_decision(x: Array, gamma: Array, bandwidth: Array,
     (the computation term is zero without a device profile), zeroes
     gamma/B/E elsewhere. Unselected rows are priced at B_tot before the
     mask: ``comm_energy`` is ``inf`` below the 1 Hz bandwidth floor, and
-    ``inf * 0`` would poison the masked energies with NaN."""
+    ``inf * 0`` would poison the masked energies with NaN.
+
+    Shape-generic in the observation: under the sampled decide path
+    (``repro.core.hierarchy``) the arrays are the ``[K_pool]`` candidate
+    slice and ``obs.e_cmp`` carries the matching computation energies —
+    only the full-population path falls back to ``ctx.e_cmp_array()``."""
     xf = x.astype(jnp.float32)
+    e_cmp = obs.e_cmp if obs.e_cmp is not None else ctx.e_cmp_array()
     b_safe = jnp.where(x, jnp.asarray(bandwidth), ctx.b_tot)
     energy = xf * (comm_energy(jnp.asarray(gamma), b_safe,
                                obs.P, obs.h, ctx.s_bits, ctx.i_bits, ctx.n0)
-                   + ctx.e_cmp_array())
+                   + e_cmp)
     return RoundDecision(x=x, gamma=jnp.asarray(gamma) * xf,
                          bandwidth=jnp.asarray(bandwidth) * xf, energy=energy,
                          lam=jnp.float32(0), mu=jnp.zeros_like(xf),

@@ -46,8 +46,10 @@ class _StatelessController:
 
     def _random_k_mask(self, obs: RoundObservation):
         """Uniform random K-subset (of the alive clients, in battery
-        scenarios): mask the K smallest of N iid uniforms."""
-        u = jax.random.uniform(obs.key, (self.ctx.n_clients,))
+        scenarios): mask the K smallest of N iid uniforms. Shaped by the
+        observation, not the context — under the sampled decide path
+        (``repro.core.hierarchy``) the lanes are the [K_pool] slice."""
+        u = jax.random.uniform(obs.key, obs.u_norms.shape)
         return topk_mask(self._demote_dead(-u, obs), self.ctx.k)
 
 

@@ -77,3 +77,22 @@ class FairEnergy:
         q0 = jnp.float32(self.fe_cfg.q0)
         return state._replace(q=jnp.where(mask, q0, state.q),
                               mu=jnp.where(mask, 0.0, state.mu))
+
+    # ---- sampled decide-path hooks (repro.core.hierarchy) --------------
+    def sampling_deficit(self, state):
+        """[N] fairness deficit for candidate-pool sampling: how far each
+        client's participation EMA would fall below ``pi_min`` if passed
+        over this round — the same ``pi_min - rho q`` criterion the
+        solver's greedy repair prioritizes, so pool sampling and in-pool
+        selection pull in the same direction."""
+        p = state.params
+        return jnp.maximum(p.pi_min - p.rho * state.q, 0.0)
+
+    def observe_unsampled(self, state, mask):
+        """Pinned non-candidate semantics: a client outside the round's
+        pool counts as observed-but-unselected — its participation EMA
+        decays by the same eq. (1) update with x_i = 0 (``q <- rho q``)
+        while its fairness dual stays frozen. The growing deficit raises
+        its sampling weight in later rounds."""
+        p = state.params
+        return state._replace(q=jnp.where(mask, p.rho * state.q, state.q))

@@ -1,0 +1,73 @@
+"""Tilted-ERM / q-FFL-style fairness baseline controller.
+
+The standard fairness family (Li et al., q-FFL / tilted ERM) reweights
+clients by an exponential tilt of their loss: clients the global model
+serves worst get exponentially more influence. As a *selection*
+controller this becomes stochastic sampling ∝ ``exp(t z_i)`` where
+``z_i`` is the client's normalized score EMA (update norms proxy loss
+improvement, as in the FairEnergy contribution score) — implemented as
+a Gumbel-top-K draw from ``obs.key``, so it is fully traceable and
+reproducible from the trainer seed like every other registry entry.
+
+Transmission side matches the other fixed-K baselines: full precision
+(gamma = 1) and an equal ``B_tot / K`` bandwidth split — the point of
+the baseline is to isolate *fairness-driven selection* against
+FairEnergy's joint selection/compression/bandwidth solve, not to add a
+second allocation heuristic.
+
+State is the [N] score EMA (``TiltedState``); the churn hook resets
+(re)arrived lanes to the fresh-client zero score. ``t = 0`` degenerates
+to uniform random-K; large ``t`` approaches greedy worst-score-first.
+Registered as ``"tilted"`` — it slots into the cross-controller
+invariant suite (``tests/test_invariants.py``) and the sampled decide
+path (``repro.core.hierarchy``) like any other controller: the score
+EMA is a per-client lane the wrapper gathers/scatters automatically.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import (ControllerContext, RoundObservation, masked_decision,
+                   register_controller, topk_mask)
+
+Array = jnp.ndarray
+
+
+class TiltedState(NamedTuple):
+    s: Array    # [N] score EMA (u-norm scale; 0 = fresh client)
+
+
+@register_controller("tilted")
+class TiltedFair:
+    """Stochastic K-subset selection ∝ exp(tilt * normalized score EMA)."""
+
+    def __init__(self, ctx: ControllerContext):
+        self.ctx = ctx
+        self.tilt = float(ctx.tilt_t)
+        self.ema = float(ctx.tilt_ema)
+
+    def init(self, n_clients: int) -> TiltedState:
+        return TiltedState(s=jnp.zeros((n_clients,), jnp.float32))
+
+    def decide(self, obs: RoundObservation, state: TiltedState):
+        ctx = self.ctx
+        s_new = (1.0 - self.ema) * state.s + self.ema * obs.u_norms
+        # normalize by the mean so the tilt temperature is scale-free
+        z = s_new / (jnp.mean(s_new) + 1e-12)
+        logits = self.tilt * z
+        if obs.alive is not None:
+            logits = jnp.where(obs.alive, logits, -jnp.inf)
+        # Gumbel top-K == sampling K clients without replacement ∝ e^logits
+        g = logits + jax.random.gumbel(obs.key, logits.shape, jnp.float32)
+        x = topk_mask(g, ctx.k)
+        gamma = jnp.ones_like(obs.u_norms)
+        bw = jnp.full_like(obs.u_norms, ctx.b_tot / max(ctx.k, 1))
+        return masked_decision(x, gamma, bw, obs, ctx), TiltedState(s=s_new)
+
+    def reset_clients(self, state: TiltedState, mask) -> TiltedState:
+        """Open-population hook: (re)arrived slots start from the fresh
+        zero score, not the departed occupant's EMA."""
+        return TiltedState(s=jnp.where(mask, 0.0, state.s))

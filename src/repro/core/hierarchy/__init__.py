@@ -1,0 +1,24 @@
+"""Population-scale hierarchical control: clustered clients + the
+deficit-sampled ``[K_pool]`` decide path.
+
+Usage (trainer-level — ``FederatedTrainer(..., hierarchy=...)`` wires
+this up automatically):
+
+    from repro.core.hierarchy import HierarchyConfig
+    tr = FederatedTrainer(..., hierarchy=HierarchyConfig(
+        clusters=4, pool_frac=0.25))
+
+See ``config`` (knobs + the disabled-is-legacy contract), ``cluster``
+((seed,)-pure k-means over channel statistics / device tier), and
+``sampling`` (the SampledController wrapper + pinned non-candidate EMA
+semantics). The 2-D ``(clusters, clients)`` aggregation mesh lives in
+``repro.sharding.fl.make_hierarchy_mesh``.
+"""
+from .cluster import assign_nearest, cluster_features, kmeans  # noqa: F401
+from .config import HierarchyConfig  # noqa: F401
+from .sampling import (HierarchyState, SampledController,  # noqa: F401
+                       deficit_weights, pool_indices, wrap_controller)
+
+__all__ = ["HierarchyConfig", "HierarchyState", "SampledController",
+           "assign_nearest", "cluster_features", "deficit_weights",
+           "kmeans", "pool_indices", "wrap_controller"]

@@ -1,0 +1,224 @@
+"""Deficit-sampled decide: the ``[K_pool]`` candidate-slice control path.
+
+``SampledController`` wraps ANY registered controller (FairEnergy's dual
+solve or a baseline) behind the same Controller protocol: each round it
+
+1. draws a candidate pool of ``K_pool`` clients — a Gumbel-top-k draw
+   ∝ the wrapped controller's *fairness deficit* (``sampling_deficit``
+   hook; uniform for stateless baselines), stratified over the k-means
+   clusters (each cluster receives sampling mass ∝ its size, so no
+   cluster starves) and pure in ``(sampler key, round)`` via
+   ``fold_in`` — identical pools on any mesh layout or host;
+2. gathers the observation and every per-client state lane to the
+   ``[K_pool]`` slice and runs the wrapped ``decide`` there — the dual
+   solve / argsort / cumsum all scale with the pool, not N;
+3. scatters the decision and state back. **Non-candidate semantics
+   (pinned by tests/test_hierarchy.py):** non-candidates are carried as
+   unselected — selection/gamma/bandwidth/energy are zero, their
+   participation EMA decays exactly as an observed-but-unselected round
+   (``observe_unsampled`` hook: FairEnergy applies ``q <- rho q``), and
+   their fairness duals are frozen. A client passed over repeatedly thus
+   accumulates deficit and rises in the next pools — the EMA machinery
+   is what makes sub-sampling principled.
+
+The wrapper state ``HierarchyState(inner, assign, key)`` is a pytree, so
+it threads through the scan carry, checkpointing, and ``run_sweep``
+unchanged. The sampler base key is *constant* in the carry (per-round
+keys come from ``fold_in(key, r)``), so resuming mid-trajectory replays
+identical pools. ``FederatedTrainer`` only wraps when
+``HierarchyConfig.sampling_enabled`` — a disabled config leaves the
+controller (and the compiled program) untouched.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..controllers.base import ControllerContext, RoundObservation
+from ..fairenergy import RoundDecision
+from .cluster import assign_nearest, cluster_features, kmeans
+from .config import HierarchyConfig
+
+Array = jnp.ndarray
+
+
+class HierarchyState(NamedTuple):
+    """Scan-carry state of the sampled decide path."""
+    inner: Any       # the wrapped controller's own state
+    assign: Array    # [N] int32 cluster ids (re-assigned on churn arrivals)
+    key: Array       # sampler base key — constant; per-round draws fold r
+
+
+def deficit_weights(deficit: Array, assign: Array, n_clusters: int,
+                    floor: float) -> Array:
+    """[N] sampling weights: ``max(deficit, 0) + floor``, stratified so
+    every cluster's total mass is proportional to its population (a
+    small high-deficit cluster cannot monopolize the pool, an all-
+    satisfied cluster still gets its share of exploration). With one
+    cluster this reduces to plain deficit ranking — the normalization is
+    a constant log-shift the Gumbel top-k is invariant to."""
+    base = jnp.maximum(deficit, 0.0) + floor
+    if n_clusters <= 1:
+        return base
+    seg = jax.ops.segment_sum(base, assign, num_segments=n_clusters)
+    cnt = jax.ops.segment_sum(jnp.ones_like(base), assign,
+                              num_segments=n_clusters)
+    n = base.shape[0]
+    return base * (cnt[assign] / n) / jnp.maximum(seg[assign], 1e-30)
+
+
+def pool_indices(key: Array, round_idx, weights: Array, k_pool: int) -> Array:
+    """[K_pool] int32 candidate indices (ascending): a weighted draw
+    WITHOUT replacement via Gumbel top-k — ``argtop_k(log w + G)`` is
+    distributed as successive draws ∝ w. Pure in ``(key, round_idx)``;
+    zero-weight clients (log w = -inf) are only reachable when fewer
+    than K_pool positive-weight clients exist."""
+    pkey = jax.random.fold_in(key, round_idx)
+    g = jnp.log(jnp.maximum(weights, 0.0)) + \
+        jax.random.gumbel(pkey, weights.shape, jnp.float32)
+    _, idx = jax.lax.top_k(g, k_pool)
+    return jnp.sort(idx).astype(jnp.int32)
+
+
+def _gather_state(tree, idx: Array, n: int):
+    """Gather every per-client leaf ([n, ...]-leading) to the pool slice;
+    scalars / config leaves (FEParams etc.) pass through untouched."""
+    def g(leaf):
+        if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] == n:
+            return leaf[idx]
+        return leaf
+    return jax.tree_util.tree_map(g, tree)
+
+
+def _scatter_state(old, new_pooled, idx: Array, n: int):
+    """Write the pooled lanes back into the full state; non-pool lanes
+    keep their previous values (frozen duals / EMA — the
+    ``observe_unsampled`` hook applies the decay afterwards). Scalar
+    leaves take the new (pool-solved) value: e.g. the bandwidth price
+    ``lam`` is global and carries across rounds."""
+    def s(o, p):
+        if getattr(o, "ndim", 0) >= 1 and o.shape[0] == n:
+            return o.at[idx].set(p)
+        return p
+    return jax.tree_util.tree_map(s, old, new_pooled)
+
+
+class SampledController:
+    """Controller-protocol wrapper implementing the sampled decide path.
+
+    Built by ``wrap_controller`` (which runs the k-means assignment);
+    plugs into the engine exactly like the controller it wraps —
+    ``decide`` takes and returns full-[N] observations/decisions, only
+    the wrapped solve runs on the ``[K_pool]`` slice."""
+
+    def __init__(self, inner, cfg: HierarchyConfig, ctx: ControllerContext,
+                 *, assign0, centroids, features, base_key):
+        self.inner = inner
+        self.cfg = cfg
+        self.ctx = ctx
+        self.n_clients = ctx.n_clients
+        self.k_pool = cfg.resolve_pool(ctx.n_clients)
+        self.assign0 = jnp.asarray(assign0, jnp.int32)
+        self._centroids = jnp.asarray(centroids, jnp.float32)
+        self._features = jnp.asarray(features, jnp.float32)
+        self._base_key = base_key
+        self._e_cmp = ctx.e_cmp_array()
+        self.name = f"sampled({getattr(inner, 'name', type(inner).__name__)})"
+
+    # ---- protocol forwarding ------------------------------------------
+    @property
+    def needs_calibration(self) -> bool:
+        return bool(getattr(self.inner, "needs_calibration", False))
+
+    def calibrate(self, u_norms, h, P) -> None:
+        self.inner.calibrate(u_norms, h, P)
+
+    def init(self, n_clients: int) -> HierarchyState:
+        if n_clients != self.n_clients:
+            raise ValueError(f"wrapper built for {self.n_clients} clients, "
+                             f"init called with {n_clients}")
+        return HierarchyState(inner=self.inner.init(n_clients),
+                              assign=self.assign0, key=self._base_key)
+
+    # ---- sampling -----------------------------------------------------
+    def sampling_weights(self, state: HierarchyState, alive=None) -> Array:
+        """[N] this-round sampling weights from the wrapped controller's
+        deficit (uniform when it has none), cluster-stratified, with
+        dead/departed clients zeroed."""
+        if hasattr(self.inner, "sampling_deficit"):
+            deficit = self.inner.sampling_deficit(state.inner)
+        else:
+            deficit = jnp.zeros((self.n_clients,), jnp.float32)
+        w = deficit_weights(deficit, state.assign, self.cfg.clusters,
+                            self.cfg.deficit_floor)
+        if alive is not None:
+            w = jnp.where(alive, w, 0.0)
+        return w
+
+    def pool_for(self, state: HierarchyState, round_idx, alive=None) -> Array:
+        """[K_pool] candidate indices for round ``round_idx`` — pure in
+        (state.key, round_idx, state of the fairness EMA)."""
+        w = self.sampling_weights(state, alive)
+        return pool_indices(state.key, round_idx, w, self.k_pool)
+
+    # ---- the sampled decide path --------------------------------------
+    def decide(self, obs: RoundObservation,
+               state: HierarchyState) -> tuple[RoundDecision, HierarchyState]:
+        n = self.n_clients
+        idx = self.pool_for(state, obs.round, obs.alive)
+        pobs = RoundObservation(
+            u_norms=obs.u_norms[idx], h=obs.h[idx], P=obs.P[idx],
+            round=obs.round, key=obs.key,
+            alive=None if obs.alive is None else obs.alive[idx],
+            t_round=None if obs.t_round is None else obs.t_round[idx],
+            e_cmp=self._e_cmp[idx])
+        pstate = _gather_state(state.inner, idx, n)
+        dec_p, new_pstate = self.inner.decide(pobs, pstate)
+
+        # scatter the decision: non-candidates are unselected this round
+        zf = jnp.zeros((n,), jnp.float32)
+        dec = RoundDecision(
+            x=jnp.zeros((n,), bool).at[idx].set(dec_p.x),
+            gamma=zf.at[idx].set(dec_p.gamma),
+            bandwidth=zf.at[idx].set(dec_p.bandwidth),
+            energy=zf.at[idx].set(dec_p.energy),
+            lam=dec_p.lam, mu=zf.at[idx].set(dec_p.mu),
+            n_inner=dec_p.n_inner, bw_used=dec_p.bw_used,
+            fallback=dec_p.fallback)
+
+        new_inner = _scatter_state(state.inner, new_pstate, idx, n)
+        if hasattr(self.inner, "observe_unsampled"):
+            unsampled = jnp.ones((n,), bool).at[idx].set(False)
+            new_inner = self.inner.observe_unsampled(new_inner, unsampled)
+        return dec, HierarchyState(inner=new_inner, assign=state.assign,
+                                   key=state.key)
+
+    # ---- open-population hook -----------------------------------------
+    def reset_clients(self, state: HierarchyState,
+                      mask: Array) -> HierarchyState:
+        """Churn arrivals: fresh per-client state in the wrapped
+        controller AND a nearest-centroid re-cluster of the (re)arrived
+        slots (idempotent while client features are static; load-bearing
+        if they ever drift)."""
+        inner = state.inner
+        if hasattr(self.inner, "reset_clients"):
+            inner = self.inner.reset_clients(inner, mask)
+        fresh = assign_nearest(self._features, self._centroids)
+        assign = jnp.where(mask, fresh, state.assign)
+        return HierarchyState(inner=inner, assign=assign, key=state.key)
+
+
+def wrap_controller(inner, cfg: HierarchyConfig, ctx: ControllerContext, *,
+                    pathloss, power, base_key, seed: int) -> SampledController:
+    """Cluster the population ((seed,)-pure k-means over channel stats /
+    device tier) and wrap ``inner`` in the sampled decide path."""
+    feats = cluster_features(pathloss, power,
+                             None if ctx.e_cmp is None else ctx.e_cmp)
+    kseed = cfg.seed if cfg.seed is not None else seed
+    assign0, cents = kmeans(feats, cfg.clusters, seed=kseed,
+                            iters=cfg.kmeans_iters)
+    return SampledController(inner, cfg, ctx, assign0=assign0,
+                             centroids=cents, features=feats,
+                             base_key=base_key)

@@ -79,18 +79,22 @@ from repro.data.pipeline import (client_sample_keys, sample_client_batches,
 from repro.fl import compression
 from repro.fl.client import make_batched_client_step
 from repro.fl.updates import tree_spec, unflatten_update
-from repro.sharding.fl import (CLIENTS_AXIS, async_state_specs,
-                               clients_axis_size, defense_state_specs,
+from repro.core.hierarchy import HierarchyConfig, wrap_controller
+from repro.sharding.fl import (CLIENTS_AXIS, async_state_specs, axis_names,
+                               client_shard_count, clients_axis_size,
+                               defense_state_specs, mesh_client_axes,
                                replicated_specs, shard_client_data)
 
 
 # PRNG stream tags (folded into the per-seed base key): far above any
 # realistic round index so the fading stream's fold_in(base, round) can
-# never collide with another stream's base key
+# never collide with another stream's base key (the mobility drift's
+# phase stream, 6 << 20, lives in repro.core.channel off the fade key)
 _CTRL_STREAM = 1 << 20
 _SAMPLE_STREAM = 2 << 20
 _HARVEST_STREAM = 3 << 20
 _FAULT_STREAM = 4 << 20
+_POOL_STREAM = 5 << 20      # hierarchy candidate-pool sampler base key
 
 
 @dataclasses.dataclass
@@ -242,11 +246,35 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
     every participant counted rejected) instead of poisoning the scan.
     """
     sharded = shard_axis is not None
+    # the client axis may live on one mesh axis (legacy 1-D) or two
+    # (hierarchy (clusters, clients)); a plain string stays a plain
+    # string all the way into the collectives so the 1-D program is
+    # byte-identical to the historical one
+    axes = axis_names(shard_axis) if sharded else ()
+    ax_all = (shard_axis if isinstance(shard_axis, str)
+              else (axes[0] if len(axes) == 1 else axes))
     n_pad = int(weights.shape[0])
     faulty = fault_rt is not None
     agg_obj = aggregator if aggregator is not None else MeanAggregator()
     defended = bool(getattr(agg_obj, "enabled", False))
     telemetry = faulty or defended
+
+    def _psum_stages(x):
+        """Two-tier reduction: innermost (clients) axis first — the
+        cluster-head partial aggregate — then the clusters axis — the
+        server reduction. On a 1-D mesh this is exactly the legacy
+        single psum."""
+        for a in reversed(axes):
+            x = jax.lax.psum(x, a)
+        return x
+
+    def _flat_index():
+        """This shard's position along the flattened (cluster-major)
+        client axis — ``axis_index`` on 1-D, row-major compose on 2-D."""
+        idx = jax.lax.axis_index(axes[0])
+        for a in axes[1:]:
+            idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+        return idx
 
     def _local(vec, fill, i0, n_local):
         """Pad an [n_real] vector with ghost rows and slice this shard's
@@ -267,8 +295,8 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                              "jnp.full(n, inf) for unlimited capacities)")
         if sharded:
             n_local = u_norms.shape[0]
-            i0 = jax.lax.axis_index(shard_axis) * n_local
-            obs_norms = jax.lax.all_gather(u_norms, shard_axis,
+            i0 = _flat_index() * n_local
+            obs_norms = jax.lax.all_gather(u_norms, ax_all,
                                            tiled=True)[:n_real]
         else:
             n_local = u_norms.shape[0]
@@ -454,7 +482,7 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
         # matrix (what the staleness buffer must hold) plus its stats
         partial, wsum, fstate, dstats, sparse = agg_obj(
             sparse, xf, w_data, fstate,
-            axis=shard_axis if sharded else None,
+            axis=ax_all if sharded else None,
             n_shards=n_pad // n_local)                          # [D], scalar
         if async_rt is not None and async_rt.staleness:
             # ---- staleness-weighted buffered aggregation (shard-local):
@@ -483,11 +511,11 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             astate = AsyncState(buf=buf, age=age, t_rem=t_rem)
             n_stale = jnp.sum(ready.astype(jnp.int32))
             if sharded:
-                n_stale = jax.lax.psum(n_stale, shard_axis)
+                n_stale = _psum_stages(n_stale)
             extras["n_stale"] = n_stale
         if sharded:
-            wsum = jax.lax.psum(wsum, shard_axis)
-            partial = jax.lax.psum(partial, shard_axis)
+            wsum = _psum_stages(wsum)
+            partial = _psum_stages(partial)
         agg = partial / jnp.maximum(wsum, 1e-12) * server_lr
         agg = jnp.where(wsum > 0.0, agg, jnp.zeros_like(agg))
         if telemetry:
@@ -495,8 +523,8 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             n_rej = dstats.get("n_rejected", jnp.int32(0))
             n_clip = dstats.get("n_clipped", jnp.int32(0))
             if sharded and dstats:
-                n_rej = jax.lax.psum(n_rej, shard_axis)
-                n_clip = jax.lax.psum(n_clip, shard_axis)
+                n_rej = _psum_stages(n_rej)
+                n_clip = _psum_stages(n_clip)
             # last-resort guard: whatever slipped past the defenses (or
             # an undefended run's corrupted payloads) must not poison the
             # donated params carry forever — reject the whole round and
@@ -555,7 +583,7 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                      n_real: Optional[int] = None,
                      async_rt: Optional[_AsyncRuntime] = None,
                      fault_rt: Optional[_FaultsRuntime] = None,
-                     aggregator=None):
+                     aggregator=None, mobility=None):
     """Builds the fused multi-round scan program.
 
     Returns ``scan_fn(params, ctrl_state, battery, astate, fstate, data,
@@ -593,15 +621,22 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
     arrays in the outputs keep that (unpadded) size.
     """
     sharded = mesh is not None
-    axis = mesh_axis if sharded else None
+    axis = None
+    axes = ()
     if sharded:
+        # a hierarchy mesh carries a leading "clusters" axis: the client
+        # lanes are laid out cluster-major over both mesh axes. The plain
+        # string is kept on a 1-D mesh so the emitted collectives stay
+        # byte-identical to the historical program.
+        axes = mesh_client_axes(mesh, mesh_axis)
+        axis = mesh_axis if len(axes) == 1 else axes
         n_pad = int(weights.shape[0])
         n_real = n_real if n_real is not None else n_pad
-        n_dev = clients_axis_size(mesh, mesh_axis)
+        n_dev = client_shard_count(mesh, mesh_axis)
         if n_pad % n_dev != 0:
             raise ValueError(
                 f"padded client count {n_pad} does not divide the "
-                f"{mesh_axis!r} mesh axis ({n_dev}); stack the datasets "
+                f"{axes} mesh axes ({n_dev}); stack the datasets "
                 f"with pad_to_multiple={n_dev}")
     core = _make_round_core(controller=controller, spec=spec, weights=weights,
                             server_lr=server_lr, use_pallas=use_pallas,
@@ -618,13 +653,17 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                   start_round, last_round, eval_every, n_rounds: int):
         n_local = data.lengths.shape[0]             # per-shard when sharded
         if sharded:
-            i0 = jax.lax.axis_index(mesh_axis) * n_local
+            i0 = jax.lax.axis_index(axes[0])
+            for a in axes[1:]:
+                i0 = i0 * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+            i0 = i0 * n_local
         else:
             i0 = jnp.int32(0)
 
         def step(carry, r):
             p, state, batt, ast, fst = carry
-            h = round_gains(keys["fade"], pathloss, r, rayleigh)
+            h = round_gains(keys["fade"], pathloss, r, rayleigh,
+                            mobility=mobility)
             # every shard derives the full (tiny) per-client key set —
             # real clients keep the unpadded split stream — and slices
             # its local chunk: identical batches in every layout
@@ -647,8 +686,8 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                 p, dec, state, batt = core(p, updates, u_norms, h, P, r,
                                            ckey, state, batt)
             if sharded:
-                losses = jax.lax.all_gather(losses, mesh_axis,
-                                            tiled=True)[:n_real]
+                losses = jax.lax.all_gather(
+                    losses, axis, tiled=True)[:n_real]
             do_eval = ((r % eval_every) == 0) | (r == last_round)
             acc = jax.lax.cond(do_eval,
                                lambda q: eval_fn(q).astype(jnp.float32),
@@ -688,12 +727,13 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
         # replicated. check_rep=False: the outputs *are* replicated
         # (built from psum/all-gather results) but the static replication
         # checker cannot see that through the scan carry.
-        ast_specs = async_state_specs(astate, mesh_axis)
+        ast_specs = async_state_specs(astate, axis)
         fst_specs = defense_state_specs(fstate)
+        data_entry = axes[0] if len(axes) == 1 else tuple(axes)
         sharded_fn = shard_map(
             body, mesh=mesh,
             in_specs=(replicated_specs(params), replicated_specs(ctrl_state),
-                      PS(), ast_specs, fst_specs, PS(mesh_axis), PS(), PS(),
+                      PS(), ast_specs, fst_specs, PS(data_entry), PS(), PS(),
                       PS(), PS()),
             out_specs=(replicated_specs(params), replicated_specs(ctrl_state),
                        PS(), ast_specs, fst_specs, PS()),
@@ -743,6 +783,27 @@ class FederatedTrainer:
     (``RoundLog.t_round``). A disabled config (the default) compiles the
     exact legacy program, so synchronous goldens hold bit-for-bit.
 
+    ``hierarchy``: a ``repro.core.hierarchy.HierarchyConfig`` switches
+    the controller to the sampled decide path — clients are k-means
+    clustered over channel statistics / device tier at init, each round
+    draws a candidate pool ∝ fairness deficit (cluster-stratified), and
+    the wrapped controller solves on the gathered ``[K_pool]`` slice.
+    Non-candidates carry pinned EMA-decay semantics (see
+    ``SampledController``). The sampler base key rides in the scan carry
+    (``HierarchyState.key``) and the per-round draw is
+    ``fold_in(key, round)`` — (seed, round)-pure, so resume/replay and
+    1-device vs N-device runs sample identical pools. A disabled config
+    (``pool_frac=1, clusters=1``) does not wrap at all: the compiled
+    program is literally the legacy one. Note: under ``run_sweep`` the
+    sampler key is shared across seed lanes (it lives in the controller
+    state, which all lanes start from), so pools vary per round but not
+    per seed — per-seed pool variation needs fresh trainers.
+
+    ``mobility``: a ``repro.core.channel.MobilityConfig`` adds slow
+    (seed, round)-pure log-normal pathloss drift (client movement /
+    shadowing) to every engine's channel draw. ``None`` — or a config
+    with ``sigma_db=0`` — compiles the exact legacy channel stream.
+
     ``fault_cfg``: a ``repro.core.faults.FaultConfig`` injects
     (seed, round)-pure faults — mid-round crashes with partial-energy
     proration, corrupted payloads, channel-estimate error, and
@@ -767,7 +828,9 @@ class FederatedTrainer:
                  device_profile=None,
                  async_cfg: Optional[AsyncConfig] = None,
                  fault_cfg: Optional[FaultConfig] = None,
-                 defense: Optional[DefenseConfig] = None):
+                 defense: Optional[DefenseConfig] = None,
+                 hierarchy: Optional[HierarchyConfig] = None,
+                 mobility=None):
         if strategy is not None:
             controller = strategy
         self.loss_fn = model_loss
@@ -778,7 +841,11 @@ class FederatedTrainer:
         self.fl_cfg, self.fe_cfg, self.ch_cfg = fl_cfg, fe_cfg, ch_cfg
         self.n_clients = len(client_datasets)
         self.network = WirelessNetwork(ch_cfg, seed=seed,
-                                       device_profile=device_profile)
+                                       device_profile=device_profile,
+                                       mobility=mobility)
+        # normalized by the network: a disabled (sigma_db=0) config is
+        # None here, and every engine below emits the legacy program
+        self.mobility = self.network.mobility
         self.device_profile = self.network.device_profile
         self.spec = tree_spec(model_params)
         self.n_params = int(sum(np.prod(s) for s in self.spec.shapes))
@@ -803,6 +870,22 @@ class FederatedTrainer:
         self.controller_name = (controller if isinstance(controller, str)
                                 else getattr(controller, "name",
                                              type(controller).__name__.lower()))
+        # ---- hierarchical control (repro.core.hierarchy) ---------------
+        # the wrap is Python-level and only happens when sampling is
+        # actually on: a disabled config (pool_frac=1, clusters=1) leaves
+        # the controller — and therefore the whole compiled program —
+        # literally the legacy one, so the goldens hold bit-for-bit
+        if hierarchy is not None and not isinstance(hierarchy, HierarchyConfig):
+            raise TypeError(f"hierarchy must be a HierarchyConfig or None, "
+                            f"got {type(hierarchy).__name__}")
+        self.hierarchy = hierarchy
+        if hierarchy is not None and hierarchy.sampling_enabled(self.n_clients):
+            self.controller = wrap_controller(
+                self.controller, hierarchy, ctx,
+                pathloss=self.network.pathloss, power=self.network.power,
+                base_key=jax.random.fold_in(jax.random.PRNGKey(seed),
+                                            _POOL_STREAM),
+                seed=seed)
         self.ctrl_state = self.controller.init(self.n_clients)
 
         self.seed = seed
@@ -825,10 +908,13 @@ class FederatedTrainer:
         self._P = jnp.asarray(self.network.power, jnp.float32)
         self.mesh, self.mesh_axis = mesh, mesh_axis
         if mesh is not None:
-            size = clients_axis_size(mesh, mesh_axis)
+            # a hierarchy mesh splits the client axis over (clusters,
+            # clients); the padded count must divide the product
+            caxes = mesh_client_axes(mesh, mesh_axis)
+            size = client_shard_count(mesh, mesh_axis)
             self._data = stack_client_datasets(client_datasets,
                                                pad_to_multiple=size)
-            self._data = shard_client_data(self._data, mesh, mesh_axis)
+            self._data = shard_client_data(self._data, mesh, caxes)
         else:
             self._data = stack_client_datasets(client_datasets)
         self.n_padded = self._data.n_clients      # == n_clients when unsharded
@@ -988,7 +1074,8 @@ class FederatedTrainer:
                 batch=self.fl_cfg.local_batch,
                 mesh=self.mesh, mesh_axis=self.mesh_axis,
                 n_real=self.n_clients, async_rt=self._async_rt,
-                fault_rt=self._fault_rt, aggregator=self.aggregator)
+                fault_rt=self._fault_rt, aggregator=self.aggregator,
+                mobility=self.mobility)
             self._scan_engine = jax.jit(scan_fn, static_argnames="n_rounds",
                                         donate_argnums=(0, 1, 2, 3, 4))
             self._scan_fn_raw = scan_fn
@@ -1049,6 +1136,14 @@ class FederatedTrainer:
         echo) — echo is the post-broadcast {field: [n_lanes values]}."""
         from repro.core.fairenergy import FEParams
         base = self.ctrl_state
+        rewrap = None
+        if hasattr(base, "inner") and hasattr(base, "assign"):
+            # sampled decide path: the FEParams live in the wrapped inner
+            # state; config lanes replace that and keep the cluster
+            # assignment + sampler base key shared across lanes
+            outer = base
+            base = base.inner
+            rewrap = lambda st: outer._replace(inner=st)  # noqa: E731
         if not (hasattr(base, "params") and isinstance(base.params, FEParams)):
             raise ValueError(
                 "config sweep needs a controller whose state carries "
@@ -1081,6 +1176,8 @@ class FederatedTrainer:
         lanes = [base._replace(params=base.params._replace(
             **{k: jnp.float32(v[i]) for k, v in vals.items()}))
             for i in range(n_lanes)]
+        if rewrap is not None:
+            lanes = [rewrap(st) for st in lanes]
         stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *lanes)
         echo = {k: np.asarray(v).tolist() for k, v in vals.items()}
         return stacked, n_lanes, echo

@@ -19,6 +19,8 @@ partition concentration, and fading — into a preset addressable by name
                        epochs, 30% away) + 5% mid-round crash rate
 ``byzantine-lite``     15% corrupted payloads + noisy channel estimates,
                        defended aggregation on
+``mobility``           tiered fleet of moving clients (3 dB RMS slow
+                       pathloss drift on top of Rayleigh fading)
 =====================  =======================================================
 
 Everything a scenario draws (tier assignment, battery capacity) is a pure
@@ -64,6 +66,9 @@ class Scenario:
     churn_away: float = 0.3                  # P[departed | epoch]
     defended: bool = False                   # robust aggregation on
     trim_frac: float = 0.0                   # coord-wise trimmed mean frac
+    # --- mobility knobs (repro.core.channel) ----------------------------
+    mobility_sigma_db: float = 0.0           # RMS pathloss drift (dB); 0=off
+    mobility_period: float = 40.0            # rounds per slowest drift cycle
 
     def device_profile(self, n: int, seed: int = 0) -> Optional[DeviceProfile]:
         """Build the [n]-client fleet, pure in ``seed``."""
@@ -122,6 +127,17 @@ class Scenario:
             h_err_std=self.h_err_std, churn_dwell=self.churn_dwell,
             churn_away=self.churn_away)
         return cfg if cfg.enabled else None
+
+    def mobility_config(self, *, sigma_db: Optional[float] = None):
+        """The scenario's ``repro.core.channel.MobilityConfig`` (None
+        when mobility is off — the channel stream stays the exact legacy
+        one). ``sigma_db`` overrides the preset in either direction
+        (0 disables)."""
+        s = sigma_db if sigma_db is not None else self.mobility_sigma_db
+        if s <= 0.0:
+            return None
+        from repro.core.channel import MobilityConfig
+        return MobilityConfig(sigma_db=s, period_rounds=self.mobility_period)
 
     def defense_config(self, *, defended: Optional[bool] = None):
         """The scenario's ``repro.core.faults.DefenseConfig`` (None when
@@ -209,6 +225,13 @@ register_scenario(Scenario(
                 "norm clipping + 10% coordinate-wise trim) is on",
     profile="uniform", corrupt_rate=0.15, corrupt_mode="mixed",
     h_err_std=0.25, defended=True, trim_frac=0.1))
+
+register_scenario(Scenario(
+    name="mobility",
+    description="tiered fleet of moving clients: slow (seed, round)-pure "
+                "log-normal pathloss drift (3 dB RMS shadowing, ~30-round "
+                "cycles) on top of per-round Rayleigh fading",
+    profile="tiered", mobility_sigma_db=3.0, mobility_period=30.0))
 
 register_scenario(Scenario(
     name="harvesting",

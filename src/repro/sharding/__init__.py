@@ -1,9 +1,11 @@
-from .fl import (CLIENTS_AXIS, client_data_specs, client_stack_spec,
-                 clients_axis_size, make_clients_mesh, replicated_specs,
-                 shard_client_data)
+from .fl import (CLIENTS_AXIS, CLUSTERS_AXIS, axis_names, client_data_specs,
+                 client_shard_count, client_stack_spec, clients_axis_size,
+                 make_clients_mesh, make_hierarchy_mesh, mesh_client_axes,
+                 replicated_specs, shard_client_data)
 from .specs import (batch_axes, cache_specs, data_specs, param_specs, to_named)
 
 __all__ = ["param_specs", "data_specs", "cache_specs", "batch_axes", "to_named",
-           "CLIENTS_AXIS", "make_clients_mesh", "clients_axis_size",
-           "client_stack_spec", "client_data_specs", "replicated_specs",
-           "shard_client_data"]
+           "CLIENTS_AXIS", "CLUSTERS_AXIS", "make_clients_mesh",
+           "make_hierarchy_mesh", "mesh_client_axes", "axis_names",
+           "clients_axis_size", "client_shard_count", "client_stack_spec",
+           "client_data_specs", "replicated_specs", "shard_client_data"]

@@ -20,6 +20,9 @@ With no arguments every golden is rewritten; pass names (e.g.
   telemetry lanes.
 * ``byzantine_fairenergy_12round.json`` — corruption + channel-estimate
   error under defended aggregation (finite screen + norm clipping).
+* ``mobility_fairenergy_12round.json`` — mobility channel physics: the
+  mobility scenario's slow (seed, round)-pure pathloss drift on top of
+  Rayleigh fading (repro.core.channel.MobilityConfig).
 """
 import json
 import os
@@ -129,9 +132,29 @@ def regen_byzantine():
     print("rejected/round:", [int(lg.n_rejected) for lg in tr.history])
 
 
+def regen_mobility():
+    scn = get_scenario("mobility")
+    tr = make_trainer("fairenergy",
+                      device_profile=scn.device_profile(N_CLIENTS, seed=0),
+                      mobility=scn.mobility_config())
+    tr.run_scanned(ROUNDS, verbose=False)
+    _write("mobility_fairenergy_12round.json", {
+        "rounds": ROUNDS,
+        "scenario": "mobility",
+        "sigma_db": float(scn.mobility_sigma_db),
+        "period_rounds": float(scn.mobility_period),
+        "selected": [[int(b) for b in lg.selected] for lg in tr.history],
+        "energy": [np.asarray(lg.energy, np.float64).tolist()
+                   for lg in tr.history],
+        "total_energy": [float(lg.total_energy) for lg in tr.history],
+        "accuracy": [float(lg.accuracy) for lg in tr.history],
+    })
+    print("selected/round:", [int(lg.n_selected) for lg in tr.history])
+
+
 GOLDENS = {"main": regen_main, "tiered": regen_tiered,
            "straggler": regen_straggler, "churn": regen_churn,
-           "byzantine": regen_byzantine}
+           "byzantine": regen_byzantine, "mobility": regen_mobility}
 
 
 def main(names=None):

@@ -1,0 +1,359 @@
+"""Hierarchical control (repro.core.hierarchy): clustering, deficit
+sampling, the sampled decide path, and the 2-D aggregation mesh.
+
+Pins the PR's contracts:
+
+* cluster assignment and candidate pools are (seed, round)-pure and
+  identical across 1-device and forced-8-device meshes (subprocess);
+* deficit-biased sampling provably over-samples high-deficit clients on
+  a fixed draw grid (hypothesis-gated randomized variant);
+* non-candidates carry the pinned EMA semantics (q decays by rho, mu
+  frozen);
+* the disabled config (pool_frac=1, clusters=1) reproduces the main
+  golden bit-for-bit, and ``make_hierarchy_mesh(1)`` degenerates to the
+  legacy 1-D clients mesh.
+
+Run me as a script for the forced-8-device worker:
+``python tests/test_hierarchy.py`` (spawned by the subprocess test).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FairEnergyConfig
+from repro.core.controllers import ControllerContext, make_controller
+from repro.core.controllers.base import RoundObservation
+from repro.core.hierarchy import (HierarchyConfig, assign_nearest,
+                                  cluster_features, deficit_weights, kmeans,
+                                  pool_indices, wrap_controller)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HYP = True
+except ImportError:                                   # pragma: no cover
+    _HYP = False
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.dirname(TESTS_DIR)
+
+FE_CFG = FairEnergyConfig(eta=1e-3, eta_auto=False)
+
+
+def _ctx(n, e_cmp=None):
+    return ControllerContext(n_clients=n, b_tot=10e6, s_bits=6.4e7,
+                             i_bits=2e6, n0=4e-21, fe_cfg=FE_CFG,
+                             e_cmp=e_cmp)
+
+
+def _wrapped(n=12, clusters=3, pool_frac=0.5, seed=0):
+    rng = np.random.default_rng(seed)
+    ctx = _ctx(n, e_cmp=tuple(rng.uniform(1e-5, 5e-3, n)))
+    inner = make_controller("fairenergy", ctx)
+    pl = rng.uniform(1e-9, 1e-7, n)
+    pw = rng.uniform(0.1, 1.0, n)
+    cfg = HierarchyConfig(clusters=clusters, pool_frac=pool_frac)
+    w = wrap_controller(inner, cfg, ctx, pathloss=pl, power=pw,
+                        base_key=jax.random.PRNGKey(seed + 99), seed=seed)
+    return w, ctx, rng
+
+
+def _obs(ctx, rng, r, n):
+    return RoundObservation(
+        u_norms=jnp.asarray(rng.uniform(0.1, 2.0, n), jnp.float32),
+        h=jnp.asarray(rng.uniform(1e-8, 1e-6, n), jnp.float32),
+        P=jnp.asarray(rng.uniform(0.1, 1.0, n), jnp.float32),
+        round=jnp.int32(r), key=jax.random.PRNGKey(1000 + r))
+
+
+# ------------------------------------------------------------- config ----
+def test_config_validation_and_resolution():
+    cfg = HierarchyConfig(clusters=4, pool_frac=0.25)
+    assert cfg.resolve_pool(100) == 25
+    assert cfg.sampling_enabled(100)
+    assert not HierarchyConfig().sampling_enabled(100)     # disabled default
+    assert HierarchyConfig(pool_size=7).resolve_pool(100) == 7
+    assert HierarchyConfig(pool_size=7).resolve_pool(5) == 5   # capped at n
+    # clusters alone (pool_frac=1) still enables sampling-path machinery
+    assert HierarchyConfig(clusters=2).sampling_enabled(100)
+    with pytest.raises(ValueError):
+        HierarchyConfig(clusters=0)
+    with pytest.raises(ValueError):
+        HierarchyConfig(pool_frac=0.0)
+    with pytest.raises(ValueError):
+        HierarchyConfig(pool_frac=1.5)
+    with pytest.raises(ValueError):
+        HierarchyConfig(pool_size=0)
+
+
+# ------------------------------------------------------------ k-means ----
+def test_kmeans_seed_pure_and_covering():
+    rng = np.random.default_rng(3)
+    n, k = 40, 4
+    feats = cluster_features(rng.uniform(1e-9, 1e-7, n),
+                             rng.uniform(0.1, 1.0, n),
+                             rng.uniform(1e-5, 5e-3, n))
+    a1, c1 = kmeans(feats, k, seed=7)
+    a2, c2 = kmeans(feats, k, seed=7)
+    np.testing.assert_array_equal(a1, a2)              # (seed,)-pure
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    assert a1.dtype == np.int32
+    assert set(np.unique(a1)) == set(range(k))         # no empty cluster
+    # assign_nearest is consistent with the converged assignment
+    np.testing.assert_array_equal(
+        np.asarray(assign_nearest(jnp.asarray(feats), jnp.asarray(c1))), a1)
+    # a different seed is allowed to find a different local optimum, but
+    # must still cover
+    a3, _ = kmeans(feats, k, seed=8)
+    assert set(np.unique(a3)) == set(range(k))
+
+
+def test_kmeans_degenerate_k_ge_n():
+    feats = cluster_features(np.full(3, 1e-8), np.full(3, 0.5))
+    a, c = kmeans(feats, 5, seed=0)
+    np.testing.assert_array_equal(a, np.arange(3, dtype=np.int32))
+
+
+# ------------------------------------------------------ pool sampling ----
+def test_pool_indices_pure_sorted_unique():
+    key = jax.random.PRNGKey(42)
+    w = jnp.asarray(np.random.default_rng(0).uniform(0.1, 1.0, 30),
+                    jnp.float32)
+    for r in range(5):
+        i1 = np.asarray(pool_indices(key, jnp.int32(r), w, 8))
+        i2 = np.asarray(pool_indices(key, jnp.int32(r), w, 8))
+        np.testing.assert_array_equal(i1, i2)          # (key, round)-pure
+        assert (np.diff(i1) > 0).all()                 # sorted, unique
+        assert i1.shape == (8,) and i1.dtype == np.int32
+    # different rounds draw different pools (overwhelmingly)
+    pools = {tuple(np.asarray(pool_indices(key, jnp.int32(r), w, 8)))
+             for r in range(20)}
+    assert len(pools) > 1
+
+
+def test_zero_weight_never_sampled_unless_underfilled():
+    key = jax.random.PRNGKey(0)
+    w = jnp.zeros((20,), jnp.float32).at[jnp.arange(5)].set(1.0)
+    for r in range(10):
+        idx = np.asarray(pool_indices(key, jnp.int32(r), w, 5))
+        np.testing.assert_array_equal(idx, np.arange(5))
+    # underfilled pool (k_pool > #nonzero) must still return k distinct
+    idx = np.asarray(pool_indices(key, jnp.int32(0), w, 8))
+    assert len(set(idx.tolist())) == 8
+    assert set(range(5)) <= set(idx.tolist())          # nonzero all included
+
+
+def run_deficit_bias(seed, hi_deficit):
+    """High-deficit clients must be sampled strictly more often than
+    zero-deficit ones on a fixed grid of per-round draws."""
+    n, k_pool, draws = 24, 6, 120
+    deficit = np.zeros(n, np.float32)
+    hi = [1, 7, 13]
+    deficit[hi] = hi_deficit
+    w = deficit_weights(jnp.asarray(deficit), jnp.zeros(n, jnp.int32), 1,
+                        floor=0.05)
+    key = jax.random.PRNGKey(seed)
+    counts = np.zeros(n)
+    for r in range(draws):
+        counts[np.asarray(pool_indices(key, jnp.int32(r), w, k_pool))] += 1
+    lo_rate = counts[deficit == 0].mean() / draws
+    hi_rate = counts[hi].mean() / draws
+    # weight ratio (hi_deficit + floor) / floor >= 11 at the default
+    # grid; demand a decisive (not knife-edge) gap
+    assert hi_rate > lo_rate + 0.2, (hi_rate, lo_rate)
+    assert hi_rate > 2.0 * lo_rate, (hi_rate, lo_rate)
+
+
+def test_deficit_bias_fixed_grid():
+    run_deficit_bias(seed=0, hi_deficit=0.5)
+
+
+if _HYP:
+    @given(seed=st.integers(0, 100), hi_deficit=st.floats(0.3, 2.0))
+    @settings(max_examples=10, deadline=None)
+    def test_deficit_bias_property(seed, hi_deficit):
+        run_deficit_bias(seed, hi_deficit)
+
+
+def test_deficit_weights_cluster_stratified():
+    # clusters=1 degenerates to deficit + floor
+    d = jnp.asarray([0.4, 0.0, 0.1, 0.0], jnp.float32)
+    w1 = deficit_weights(d, jnp.zeros(4, jnp.int32), 1, floor=0.05)
+    np.testing.assert_allclose(np.asarray(w1),
+                               np.maximum(np.asarray(d), 0) + 0.05,
+                               rtol=1e-6)
+    # stratified: per-cluster weight mass is n_c / N regardless of the
+    # raw deficit imbalance between clusters
+    assign = jnp.asarray([0, 0, 1, 1, 1, 1], jnp.int32)
+    d2 = jnp.asarray([5.0, 3.0, 0.01, 0.0, 0.02, 0.0], jnp.float32)
+    w2 = np.asarray(deficit_weights(d2, assign, 2, floor=0.05))
+    np.testing.assert_allclose(w2[:2].sum(), 2 / 6, rtol=1e-5)
+    np.testing.assert_allclose(w2[2:].sum(), 4 / 6, rtol=1e-5)
+
+
+# ------------------------------------------- sampled controller state ----
+def test_unsampled_ema_decay_pinned():
+    """Pinned non-candidate semantics: q decays by rho (the x=0 EMA
+    update), mu stays frozen; pooled lanes take the solver's update."""
+    w, ctx, rng = _wrapped(n=12, clusters=1, pool_frac=0.5)
+    state = w.init(12)
+    rho = float(state.inner.params.rho)
+    for r in range(4):
+        q_prev = np.asarray(state.inner.q)
+        mu_prev = np.asarray(state.inner.mu)
+        dec, state = w.decide(_obs(ctx, rng, r, 12), state)
+        idx = np.asarray(w.pool_for(state, jnp.int32(r), None))
+        out = np.setdiff1d(np.arange(12), idx)
+        np.testing.assert_allclose(np.asarray(state.inner.q)[out],
+                                   rho * q_prev[out], rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(state.inner.mu)[out],
+                                      mu_prev[out])
+        # non-candidates are carried as unselected
+        assert not np.asarray(dec.x)[out].any()
+
+
+def test_sampled_decide_is_replay_pure():
+    w, ctx, rng = _wrapped(n=12, clusters=3, pool_frac=0.5, seed=5)
+    def run():
+        r_ = np.random.default_rng(5)
+        state = w.init(12)
+        outs = []
+        for r in range(4):
+            dec, state = w.decide(_obs(ctx, r_, r, 12), state)
+            outs.append((np.asarray(dec.x), np.asarray(dec.energy),
+                         np.asarray(w.pool_for(state, jnp.int32(r), None))))
+        return outs
+    for (x1, e1, p1), (x2, e2, p2) in zip(run(), run()):
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(e1, e2)
+        np.testing.assert_array_equal(p1, p2)
+
+
+def test_reset_clients_forwards_and_reassigns():
+    w, ctx, rng = _wrapped(n=12, clusters=3, pool_frac=0.5)
+    state = w.init(12)
+    _, state = w.decide(_obs(ctx, rng, 0, 12), state)
+    mask = jnp.zeros((12,), bool).at[jnp.asarray([2, 5])].set(True)
+    new = w.reset_clients(state, mask)
+    q0 = float(FE_CFG.q0)
+    np.testing.assert_allclose(np.asarray(new.inner.q)[[2, 5]], q0)
+    np.testing.assert_array_equal(np.asarray(new.inner.mu)[[2, 5]], 0.0)
+    # static features => re-clustering is idempotent (documented): the
+    # re-assigned lanes land back in their original cluster
+    np.testing.assert_array_equal(np.asarray(new.assign),
+                                  np.asarray(state.assign))
+
+
+def test_wrapper_forwards_name_and_calibration():
+    w, ctx, _ = _wrapped()
+    assert w.name == "sampled(fairenergy)"
+    assert w.needs_calibration == w.inner.needs_calibration
+
+
+# --------------------------------------------------- trainer-level -------
+sys.path.insert(0, TESTS_DIR)
+from test_scan_engine import ROUNDS, make_trainer  # noqa: E402
+
+with open(os.path.join(TESTS_DIR, "golden",
+                       "fairenergy_main_12round.json")) as f:
+    GOLDEN = json.load(f)
+
+
+def test_disabled_config_matches_golden_bitwise():
+    """pool_frac=1, clusters=1 must not wrap at all: the compiled program
+    is literally the legacy one — exact masks, energies, accuracy."""
+    tr = make_trainer("fairenergy",
+                      hierarchy=HierarchyConfig(clusters=1, pool_frac=1.0))
+    # the no-wrap contract, checked structurally too
+    assert not hasattr(tr.controller, "inner")
+    tr.run_scanned(ROUNDS, verbose=False)
+    for r, lg in enumerate(tr.history):
+        assert [int(b) for b in lg.selected] == GOLDEN["selected"][r], r
+        np.testing.assert_array_equal(
+            np.asarray(lg.energy, np.float64), GOLDEN["energy"][r])
+        assert float(lg.accuracy) == GOLDEN["accuracy"][r], r
+
+
+def test_sampled_trainer_masks_bounded_by_pool():
+    """Under sampling the trainer wraps the controller; every round's
+    selection is capped by K_pool (pool containment itself is pinned at
+    the wrapper level by test_unsampled_ema_decay_pinned)."""
+    cfg = HierarchyConfig(clusters=2, pool_frac=0.5)
+    tr = make_trainer("fairenergy", hierarchy=cfg)
+    assert hasattr(tr.controller, "inner")             # wrapped
+    tr.run_scanned(ROUNDS, verbose=False)
+    k_pool = cfg.resolve_pool(tr.n_clients)
+    assert all(lg.n_selected <= k_pool for lg in tr.history)
+    assert any(lg.n_selected > 0 for lg in tr.history)
+
+
+def test_sampled_trainer_checkpoint_resume():
+    """HierarchyState (incl. the sampler base key) rides the checkpoint
+    carry: resuming mid-trajectory replays the identical pools/masks."""
+    import tempfile
+    cfg = HierarchyConfig(clusters=2, pool_frac=0.5)
+    with tempfile.TemporaryDirectory() as d:
+        full = make_trainer("fairenergy", hierarchy=cfg)
+        full.run_scanned(ROUNDS, chunk=4, ckpt_dir=d, verbose=False)
+        tr2 = make_trainer("fairenergy", hierarchy=cfg)
+        start = tr2.restore_checkpoint(
+            os.path.join(d, "ckpt_00000004.npz"))
+        assert start == 4
+        tr2.run_scanned(ROUNDS, chunk=4, start_round=start, verbose=False)
+    for a, b in zip(full.history[4:], tr2.history):
+        np.testing.assert_array_equal(a.selected, b.selected,
+                                      err_msg=f"round {a.round}")
+        assert a.accuracy == b.accuracy
+
+
+# ------------------------------------------- multi-device equivalence ----
+def _hierarchy_trace(use_mesh):
+    """Pools + masks of a clusters=2, pool_frac=0.5 run — the worker body
+    shared by the 1-device in-process run and the forced-8-device
+    subprocess (optionally on the 2-D hierarchy mesh)."""
+    mesh = None
+    if use_mesh:
+        from repro.sharding import make_hierarchy_mesh
+        mesh = make_hierarchy_mesh(2)
+    cfg = HierarchyConfig(clusters=2, pool_frac=0.5)
+    tr = make_trainer("fairenergy", hierarchy=cfg, mesh=mesh)
+    tr.run_scanned(ROUNDS, verbose=False)
+    state = tr.ctrl_state
+    pools = [np.asarray(tr.controller.pool_for(
+        state, jnp.int32(r), None)).tolist() for r in range(ROUNDS)]
+    return {"pools": pools,
+            "assign": np.asarray(state.assign).tolist(),
+            "masks": [[int(b) for b in lg.selected] for lg in tr.history],
+            "accuracy": [float(lg.accuracy) for lg in tr.history]}
+
+
+@pytest.mark.slow
+def test_multi_device_pools_and_masks_match():
+    """Candidate pools, cluster assignment, and selection masks are
+    identical on 1 device and on a forced-8-device 2-D hierarchy mesh."""
+    ref = _hierarchy_trace(use_mesh=False)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(REPO_ROOT, "src"), TESTS_DIR]))
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "worker"],
+        env=env, cwd=REPO_ROOT, capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    got = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert got["assign"] == ref["assign"]
+    assert got["pools"] == ref["pools"]
+    assert got["masks"] == ref["masks"]
+    np.testing.assert_allclose(got["accuracy"], ref["accuracy"], rtol=1e-6)
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "worker":
+        out = _hierarchy_trace(use_mesh=len(jax.devices()) >= 8)
+        print(json.dumps(out))
