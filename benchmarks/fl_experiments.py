@@ -32,7 +32,8 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
           lr=0.05, local_steps=2, mesh=None, scenario=None,
           deadline=None, staleness_a=None, fault_rate=None, crash_rate=None,
           churn=None, defense=None, clusters=None, pool_frac=None,
-          mobility_sigma=None):
+          mobility_sigma=None, max_retx=None, burst_p=None,
+          price_outage=None):
     cfg = CNN_FULL
     scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
     beta = scn.beta(0.3) if scn else 0.3
@@ -43,6 +44,7 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
     defense_cfg = None
     mobility_cfg = None
     hierarchy_cfg = None
+    link_cfg = None
     if clusters is not None or pool_frac is not None:
         from repro.core.hierarchy import HierarchyConfig
         hierarchy_cfg = HierarchyConfig(
@@ -57,6 +59,8 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
                                      corrupt_rate=fault_rate)
         defense_cfg = scn.defense_config(defended=defense)
         mobility_cfg = scn.mobility_config(sigma_db=mobility_sigma)
+        link_cfg = scn.link_config(max_retx=max_retx, burst_p=burst_p,
+                                   price_outage=price_outage)
     elif mobility_sigma is not None and mobility_sigma > 0.0:
         from repro.core.channel import MobilityConfig
         mobility_cfg = MobilityConfig(sigma_db=mobility_sigma)
@@ -74,6 +78,13 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
     if scn is None and defense:
         from repro.core.faults import DefenseConfig
         defense_cfg = DefenseConfig()
+    if scn is None and (burst_p or price_outage or max_retx is not None):
+        from repro.core.link import LinkConfig
+        link_cfg = LinkConfig(
+            outage=True, max_retx=max_retx if max_retx is not None else 2,
+            burst_p=burst_p or 0.0, i_burst_n0=99.0 if burst_p else 0.0,
+            price_outage=bool(price_outage))
+        link_cfg = link_cfg if link_cfg.enabled else None
     imgs, labels = make_fmnist_like(n_train, seed=seed, **DATA_KW)
     ti, tl = make_fmnist_like(n_test, seed=seed + 999,
                               **dict(DATA_KW, label_noise=0.0))
@@ -98,7 +109,8 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
                                 ch_cfg=ch_cfg, controller=controller,
                                 seed=seed, mesh=mesh, device_profile=profile,
                                 async_cfg=async_cfg, fault_cfg=fault_cfg,
-                                defense=defense_cfg, hierarchy=hierarchy_cfg,
+                                defense=defense_cfg, link_cfg=link_cfg,
+                                hierarchy=hierarchy_cfg,
                                 mobility=mobility_cfg, **kw)
     return make, fl_cfg
 
@@ -172,6 +184,13 @@ def run_all(n_clients=20, rounds=60, target=0.80, seed=0, verbose=True,
                                               for lg in tr.history])),
                 n_fallback_rounds=int(sum(bool(lg.fallback)
                                           for lg in tr.history)))
+        if tr.history and tr.history[0].n_retx is not None:
+            results["strategies"][name].update(
+                n_retx=int(sum(lg.n_retx for lg in tr.history)),
+                n_outage=int(sum(lg.n_outage for lg in tr.history)),
+                mean_goodput_frac=float(np.mean([lg.goodput_frac
+                                                 for lg in tr.history])),
+                e_retx_J=float(sum(lg.e_retx for lg in tr.history)))
 
     if sweep_seeds:
         sweep = {"seeds": [int(s) for s in sweep_seeds], "strategies": {}}
@@ -260,6 +279,10 @@ def summarize(res):
                   f"{s['n_rejected']} rejected, clip "
                   f"{s['mean_clip_frac']:.2f}, "
                   f"{s['n_fallback_rounds']} solver-fallback rounds")
+        if "n_retx" in s:
+            print(f"{'':14s}link: {s['n_retx']} retx, {s['n_outage']} "
+                  f"outages, goodput {s['mean_goodput_frac']:.2f}, "
+                  f"retx energy {s['e_retx_J']*1e3:.3f} mJ")
     fe = res["strategies"]["fairenergy"].get("energy_to_target_J")
     for base in ("scoremax", "ecorandom"):
         bt = res["strategies"].get(base, {}).get("energy_to_target_J")
@@ -347,6 +370,20 @@ if __name__ == "__main__":
                     help="per-round candidate pool fraction sampled prop. "
                          "to fairness deficit; controllers solve on the "
                          "pooled slice only (1.0 = full population)")
+    ap.add_argument("--max-retx", type=int, default=None,
+                    help="HARQ retransmission budget per round "
+                         "(repro.core.link): extra attempts charge real "
+                         "airtime energy; overrides the scenario preset "
+                         "(scenario-less runs get outage with a 6 dB "
+                         "fade margin)")
+    ap.add_argument("--burst-p", type=float, default=None,
+                    help="Gilbert-Elliott quiet->burst probability per "
+                         "round: bursty interference raising the noise "
+                         "floor; overrides the scenario preset's burst_p")
+    ap.add_argument("--price-outage", action="store_true", default=None,
+                    help="fold the expected attempt count 1/(1-p_out) into "
+                         "the solver's comm-energy pricing (outage-aware "
+                         "selection); overrides the scenario preset")
     ap.add_argument("--mobility-sigma", type=float, default=None,
                     help="slow pathloss drift RMS in dB "
                          "(repro.core.channel.MobilityConfig); overrides "
@@ -382,6 +419,8 @@ if __name__ == "__main__":
               fault_rate=a.fault_rate, crash_rate=a.crash_rate,
               churn=a.churn, defense=a.defense, clusters=a.clusters,
               pool_frac=a.pool_frac, mobility_sigma=a.mobility_sigma,
+              max_retx=a.max_retx, burst_p=a.burst_p,
+              price_outage=a.price_outage,
               sweep_seeds=list(range(a.seeds)) if a.seeds else None,
               config_sweep=config_sweep)
     if a.paper:

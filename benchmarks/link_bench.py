@@ -1,0 +1,223 @@
+"""Macrobenchmark: outage-aware vs naive solver pricing on a bursty
+uplink (``repro.core.link``).
+
+Three accuracy arms on the same model / data / controller (fairenergy),
+on a tiered-device fleet, subprocess-per-arm on the shared harness:
+
+* ``lossless`` — no link impairments: the reference trajectory;
+* ``bursty_naive`` — Gilbert-Elliott bursty interference (deep 20 dB
+  noise rise in the burst state) + Rayleigh packet outages + bounded
+  HARQ retransmission, with the solver pricing the *quiet* channel: it
+  keeps scheduling clients sitting in a burst, whose attempts are
+  near-certain to fail — retransmission energy burned, updates dropped;
+* ``bursty_priced`` — the identical link stream, but with
+  ``price_outage=True``: the solver's comm-energy term is scaled by the
+  expected attempt count 1/(1-p_out), so burst-hit clients look up to
+  ~1000x more expensive and are deselected until the burst clears.
+
+The headline number is ``bursty_priced`` final accuracy as a fraction
+of ``lossless`` (budget: >= 0.9) vs the naive arm's accuracy loss
+and/or extra retransmission energy. A separate **overhead** pair times
+the fused scan with the link subsystem *disabled* against the
+pre-change legacy program — a disabled ``LinkConfig`` must compile the
+identical scan, so the budget is a tight <= 2%.
+
+Writes ``BENCH_link.json`` at the repo root (skipped under ``--fast``,
+the CI smoke mode).
+
+  PYTHONPATH=src python -m benchmarks.link_bench [--fast] [--out PATH]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+try:
+    from _harness import base_parser, emit, run_worker, stamp, time_interleaved
+except ImportError:                       # python -m benchmarks.link_bench
+    from benchmarks._harness import (base_parser, emit, run_worker, stamp,
+                                     time_interleaved)
+
+# The link stress profile: bursts arrive often (p=0.15) and linger
+# (q=0.45 -> mean dwell ~2.2 rounds), raising the noise floor 100x
+# (20 dB) — burst-state attempts are near-certain outages at the 6 dB
+# fade margin, so naive pricing wastes every retransmission it buys.
+LINK = dict(outage=True, fade_margin_db=6.0, max_retx=2, backoff_s=0.05,
+            burst_p=0.15, burst_q=0.45, i_burst_n0=99.0)
+
+ARMS = ("lossless", "bursty_naive", "bursty_priced")
+
+
+# ------------------------------------------------------------ workers ----
+def _make_trainer(n_clients: int, seed: int, link_cfg, rounds_hint=None):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import ChannelConfig, FairEnergyConfig, FLConfig
+    from repro.core.energy import make_profile
+    from repro.fl import FederatedTrainer
+
+    D_IN, D_HID, N_CLS, SHARD = 64, 128, 10, 160
+    rng = np.random.default_rng(7)        # fixed model/data across seeds
+    params = {"w1": jnp.asarray(rng.normal(size=(D_IN, D_HID))
+                                .astype(np.float32) * 0.05),
+              "w2": jnp.asarray(rng.normal(size=(D_HID, N_CLS))
+                                .astype(np.float32) * 0.05)}
+    # Fixed random linear teacher so accuracy genuinely climbs — a
+    # dropped-update round then costs real progress, not noise.
+    teacher = rng.normal(size=(D_IN, N_CLS)).astype(np.float32)
+
+    def draw(n):
+        x = rng.normal(size=(n, D_IN)).astype(np.float32)
+        logits = x @ teacher + 0.5 * rng.normal(size=(n, N_CLS))
+        return x, logits.argmax(-1)
+
+    datasets = []
+    for _ in range(n_clients):
+        x, y = draw(SHARD)
+        datasets.append({"x": x, "y": y})
+    tx, ty = draw(512)
+    tx, ty = jnp.asarray(tx), jnp.asarray(ty)
+
+    def loss_fn(p, b):
+        hid = jnp.tanh(b["x"] @ p["w1"])
+        ll = jax.nn.log_softmax(hid @ p["w2"])
+        return -jnp.mean(jnp.take_along_axis(ll, b["y"][:, None], 1)), {}
+
+    def eval_fn(p):
+        lg = jnp.tanh(tx @ p["w1"]) @ p["w2"]
+        return jnp.mean((jnp.argmax(lg, -1) == ty).astype(jnp.float32))
+
+    return FederatedTrainer(
+        model_loss=loss_fn, model_params=params, client_datasets=datasets,
+        eval_fn=eval_fn,
+        fl_cfg=FLConfig(local_steps=2, local_batch=32, lr=0.05),
+        fe_cfg=FairEnergyConfig(), ch_cfg=ChannelConfig(n_clients=n_clients),
+        controller="fairenergy", seed=seed,
+        device_profile=make_profile("tiered", n_clients, seed=seed),
+        link_cfg=link_cfg)
+
+
+def _worker_accuracy(arm: str, n_clients: int, rounds: int,
+                     seeds: int) -> None:
+    """One accuracy arm over all seeds. Prints one JSON line."""
+    import numpy as np
+
+    from repro.core.link import LinkConfig
+
+    link_cfg = None
+    if arm != "lossless":
+        link_cfg = LinkConfig(**LINK, price_outage=(arm == "bursty_priced"))
+
+    per_seed = []
+    for seed in range(seeds):
+        tr = _make_trainer(n_clients, seed, link_cfg)
+        tr.run_scanned(rounds, verbose=False)
+        s = {"final_acc": round(float(tr.history[-1].accuracy), 4),
+             "best_acc": round(max(float(lg.accuracy)
+                                   for lg in tr.history), 4),
+             "total_energy_J": round(float(sum(lg.total_energy
+                                               for lg in tr.history)), 4)}
+        if tr.history[0].n_retx is not None:
+            s["n_retx"] = int(sum(lg.n_retx for lg in tr.history))
+            s["n_outage"] = int(sum(lg.n_outage for lg in tr.history))
+            s["mean_goodput_frac"] = round(float(np.mean(
+                [lg.goodput_frac for lg in tr.history])), 4)
+            s["e_retx_J"] = round(float(sum(lg.e_retx
+                                            for lg in tr.history)), 4)
+        per_seed.append(s)
+
+    def mean(k):
+        vals = [s[k] for s in per_seed if k in s]
+        return round(float(np.mean(vals)), 4) if vals else None
+
+    print(json.dumps({
+        "arm": arm, "n_clients": n_clients, "rounds": rounds,
+        "final_acc_mean": mean("final_acc"),
+        "best_acc_mean": mean("best_acc"),
+        "total_energy_J_mean": mean("total_energy_J"),
+        "n_retx_mean": mean("n_retx"),
+        "n_outage_mean": mean("n_outage"),
+        "mean_goodput_frac": mean("mean_goodput_frac"),
+        "e_retx_J_mean": mean("e_retx_J"),
+        "per_seed": per_seed}))
+
+
+def _run_overhead_pair(n_clients: int, rounds: int, reps: int = 3) -> dict:
+    """Host wall-clock of the fused scan: link subsystem constructed but
+    DISABLED (must compile the identical legacy program) vs the plain
+    legacy trainer. Interleaved best-of-reps timing; budget <= 2%."""
+    from repro.core.link import LinkConfig
+
+    tr_legacy = _make_trainer(n_clients, 0, None)
+    tr_link = _make_trainer(n_clients, 0, LinkConfig())     # disabled
+    best = time_interleaved(
+        {"legacy": lambda: tr_legacy.run_scanned(rounds, verbose=False),
+         "link_disabled": lambda: tr_link.run_scanned(rounds, verbose=False)},
+        reps=reps)
+    return {
+        "rounds": rounds,
+        "legacy_rounds_per_sec": round(rounds / best["legacy"], 2),
+        "link_disabled_rounds_per_sec": round(
+            rounds / best["link_disabled"], 2),
+        "overhead_pct": round(
+            100.0 * (best["link_disabled"] / best["legacy"] - 1.0), 2),
+    }
+
+
+# ------------------------------------------------------- orchestrator ----
+def bench(n_clients, rounds, seeds, overhead_rounds, fast=False) -> dict:
+    arms = {}
+    for arm in ARMS:
+        arms[arm] = run_worker(
+            __file__, ["--task", "accuracy", "--arm", arm,
+                       "--clients", n_clients, "--rounds", rounds,
+                       "--seeds", seeds])
+        print(f"{arm}: final_acc {arms[arm]['final_acc_mean']} "
+              f"retx {arms[arm]['n_retx_mean']} "
+              f"e_retx {arms[arm]['e_retx_J_mean']}", file=sys.stderr)
+
+    ref = arms["lossless"]["final_acc_mean"]
+    for arm in ("bursty_naive", "bursty_priced"):
+        arms[arm]["acc_vs_lossless"] = (
+            round(arms[arm]["final_acc_mean"] / ref, 4) if ref else None)
+
+    res = stamp({
+        "workload": "softmax tiered-fleet / fairenergy under "
+                    "Gilbert-Elliott bursty interference",
+        "fast": fast,
+        "n_clients": n_clients, "rounds": rounds, "seeds": seeds,
+        "link": LINK,
+        "arms": arms,
+        "overhead_tiered": _run_overhead_pair(n_clients, overhead_rounds),
+    })
+    naive, priced = arms["bursty_naive"], arms["bursty_priced"]
+    res["headline"] = {
+        "priced_acc_retention": priced["acc_vs_lossless"],
+        "naive_acc_retention": naive["acc_vs_lossless"],
+        "naive_extra_retx_energy_J": (
+            None if naive["e_retx_J_mean"] is None else round(
+                naive["e_retx_J_mean"] - (priced["e_retx_J_mean"] or 0.0), 4)),
+    }
+    return res
+
+
+def main() -> None:
+    ap = base_parser("BENCH_link.json", task="accuracy", arm="lossless",
+                     clients=40, rounds=30, seeds=3)
+    a = ap.parse_args()
+    if a.worker:
+        _worker_accuracy(a.arm, a.clients, a.rounds, a.seeds)
+        return
+    if a.fast:
+        res = bench(n_clients=8, rounds=6, seeds=1, overhead_rounds=4,
+                    fast=True)
+    else:
+        res = bench(n_clients=a.clients, rounds=a.rounds, seeds=a.seeds,
+                    overhead_rounds=a.rounds)
+    emit(res, a.out, a.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .streams import MOBILITY_STREAM
+
 Array = jnp.ndarray
 
 # thermal noise density kT at 290K ~ 4e-21 W/Hz (-174 dBm/Hz)
@@ -99,8 +101,8 @@ def round_fading(key: Array, round_idx, n: int) -> Array:
 
 
 # mobility phase stream: folded off the fade key, far above any round
-# index (same tag discipline as the repro.fl.server streams)
-_MOBILITY_STREAM = 6 << 20
+# index (tag registered centrally in repro.core.streams)
+_MOBILITY_STREAM = MOBILITY_STREAM
 
 # incommensurate harmonic mixture for the slow drift waveform: the
 # irrational-ish frequency ratios keep the per-client trajectories from

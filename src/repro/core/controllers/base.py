@@ -63,6 +63,13 @@ class RoundObservation(NamedTuple):
     #                    (repro.core.hierarchy), whose [K_pool] slice no
     #                    longer matches ctx.e_cmp_array(); None = read the
     #                    context (the full-population path).
+    e_scale: Any = None  # [N] f32 — comm-energy pricing factor, >= 1. Set
+    #                      by the link engine (repro.core.link) in
+    #                      price_outage mode to the expected-attempt
+    #                      factor 1/(1 - p_out); outage-aware controllers
+    #                      scale their comm-energy pricing by it. None =
+    #                      lossless pricing (the legacy path). Baselines
+    #                      may ignore it.
 
 
 @dataclasses.dataclass(frozen=True)

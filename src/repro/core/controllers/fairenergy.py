@@ -67,7 +67,8 @@ class FairEnergy:
         # channel scalars and float knobs come from state.params (set by
         # init from the context) — config lanes vmap over the state
         return solve_round(obs.u_norms, obs.h, obs.P, state,
-                           fe_cfg=self.fe_cfg, alive=obs.alive)
+                           fe_cfg=self.fe_cfg, alive=obs.alive,
+                           e_scale=obs.e_scale)
 
     def reset_clients(self, state, mask):
         """Open-population hook (``repro.core.faults``): give the masked

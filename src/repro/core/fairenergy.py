@@ -173,7 +173,8 @@ def init_state(cfg, n_clients: int, *, b_tot: float = None,
 
 def solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
                 *, fe_cfg, s_bits: float = None, i_bits: float = None,
-                b_tot: float = None, n0: float = None, alive: Array = None
+                b_tot: float = None, n0: float = None, alive: Array = None,
+                e_scale: Array = None
                 ) -> tuple[RoundDecision, ControllerState]:
     """One round of Algorithm 1. All client quantities are [N] arrays.
 
@@ -194,6 +195,17 @@ def solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
     best-response. ``alive`` ([N] bool, default all-true) hard-masks
     battery-depleted clients out of selection; their fairness-dual
     drivers are waived (a dead client cannot satisfy pi_min).
+
+    ``e_scale`` ([N] f32, default None = all-ones) is the outage-aware
+    comm-energy pricing factor (``repro.core.link``, price_outage mode):
+    the per-client expected transmission count ``1/(1 - p_out)``. It
+    multiplies E_cmm only (computation is spent once regardless of
+    retries). Scaling E_cmm by a per-client constant ``a`` is exactly
+    the substitution ``lam -> lam / a`` inside that client's bandwidth
+    best-response (``a E(b) + lam b = a (E(b) + (lam/a) b)``), so the
+    analytic Newton solve just shifts its stationarity constant by
+    ``-ln a`` — the best-response shape is unchanged. None compiles the
+    exact legacy program.
     """
     given = (s_bits, i_bits, b_tot, n0)
     if any(v is not None for v in given):
@@ -204,12 +216,14 @@ def solve_round(u_norms: Array, h: Array, P: Array, state: ControllerState,
             fe_cfg, b_tot=b_tot, s_bits=s_bits, i_bits=i_bits, n0=n0))
     if alive is None:
         alive = jnp.ones(u_norms.shape, bool)
-    return _solve_round(u_norms, h, P, alive, state, static_of(fe_cfg))
+    return _solve_round(u_norms, h, P, alive, state, static_of(fe_cfg),
+                        e_scale)
 
 
 @functools.partial(jax.jit, static_argnames=("static",))
 def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
-                 state: ControllerState, static: FEStatic
+                 state: ControllerState, static: FEStatic,
+                 e_scale: Array = None
                  ) -> tuple[RoundDecision, ControllerState]:
     N = u_norms.shape[0]
     p = state.params
@@ -228,6 +242,15 @@ def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
         return comm_energy(gam, b_frac * p.b_tot, Pg, hg, p.s_bits, p.i_bits,
                            p.n0)
 
+    # outage-aware pricing (repro.core.link, price_outage): the expected-
+    # attempt factor multiplies E_cmm per client. Python-level gate: the
+    # None path compiles the exact legacy program.
+    es_col = None if e_scale is None else e_scale[:, None]
+
+    def priced_energy_of(b_frac):
+        e = energy_of(b_frac)
+        return e if es_col is None else e * es_col
+
     score = contribution_score(u_norms[:, None], gam)        # [N,G]
 
     def best_response_gss(lam):
@@ -235,14 +258,14 @@ def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
         E_cmp is constant in b, so it never moves the bandwidth argmin —
         it is added after the search, to the energy and the objective."""
         def phi_b(b_frac):
-            return energy_of(b_frac) + lam * b_frac          # score term const wrt b
+            return priced_energy_of(b_frac) + lam * b_frac   # score term const wrt b
         b_star, phi_star = golden_section_minimize(
             phi_b, jnp.full((N, G), b_lo), 1.0, iters=static.gss_iters)
         phi_full = phi_star + e_cmp[:, None] - eta * score   # [N,G]
         g_idx = jnp.argmin(phi_full, axis=1)                 # [N]
         take = lambda t: jnp.take_along_axis(t, g_idx[:, None], 1)[:, 0]
-        return (take(gam), take(b_star), take(energy_of(b_star)) + e_cmp,
-                take(phi_full))
+        return (take(gam), take(b_star),
+                take(priced_energy_of(b_star)) + e_cmp, take(phi_full))
 
     # lam-independent stationarity constant, hoisted out of the dual loop
     # (a loop-invariant while_loop operand; the Pallas kernel recomputes
@@ -250,6 +273,11 @@ def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
     nt_base = None if (static.solver == "gss" or static.use_pallas) else \
         _ds_ref.ln_k_base(Pg, hg, gam, b_tot=p.b_tot, s_bits=p.s_bits,
                           i_bits=p.i_bits, n0=p.n0)
+    if nt_base is not None and e_scale is not None:
+        # scaling E_cmm by a is lam -> lam/a in the best-response: fold
+        # -ln a into the hoisted stationarity constant (ref path; the
+        # Pallas kernel applies the same shift in-register)
+        nt_base = nt_base - jnp.log(e_scale)[:, None]
 
     def best_response_newton(lam):
         """Analytic best-response: Newton on the SNR stationarity."""
@@ -258,7 +286,7 @@ def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
         return fn(P, h, u_norms, lam, gamma_grid=static.gamma_grid,
                   eta=eta, b_tot=p.b_tot, s_bits=p.s_bits, i_bits=p.i_bits,
                   n0=p.n0, b_lo=b_lo, newton_iters=static.newton_iters,
-                  e_cmp=e_cmp, **kw)
+                  e_cmp=e_cmp, e_scale=e_scale, **kw)
 
     best_response = (best_response_gss if static.solver == "gss"
                      else best_response_newton)

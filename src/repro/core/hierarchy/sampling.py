@@ -173,7 +173,8 @@ class SampledController:
             round=obs.round, key=obs.key,
             alive=None if obs.alive is None else obs.alive[idx],
             t_round=None if obs.t_round is None else obs.t_round[idx],
-            e_cmp=self._e_cmp[idx])
+            e_cmp=self._e_cmp[idx],
+            e_scale=None if obs.e_scale is None else obs.e_scale[idx])
         pstate = _gather_state(state.inner, idx, n)
         dec_p, new_pstate = self.inner.decide(pobs, pstate)
 

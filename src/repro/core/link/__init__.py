@@ -1,0 +1,40 @@
+"""Wireless link reliability for the FairEnergy FL loop.
+
+Two layers, composed by the round engine in ``repro.fl.server``:
+
+* :mod:`config` — ``LinkConfig``, the lossy-uplink knobs (per-attempt
+  Rayleigh outage, bounded HARQ retransmission with backoff,
+  Gilbert-Elliott bursty interference, outage-aware solver pricing);
+* :mod:`model` — (seed, round[, attempt])-pure draws and the carried
+  ``LinkState`` (the per-client burst chain).
+
+A disabled ``LinkConfig`` compiles the exact legacy scan program —
+pinned bit-for-bit against ``tests/golden/fairenergy_main_12round.json``.
+"""
+from repro.core.link.config import LinkConfig
+from repro.core.link.model import (
+    PRICE_P_CAP,
+    LinkState,
+    attempt_energy,
+    attempt_outcomes,
+    attempt_time,
+    burst_channel,
+    burst_step,
+    expected_attempts,
+    init_link_state,
+    outage_probability,
+)
+
+__all__ = [
+    "LinkConfig",
+    "LinkState",
+    "PRICE_P_CAP",
+    "attempt_energy",
+    "attempt_outcomes",
+    "attempt_time",
+    "burst_channel",
+    "burst_step",
+    "expected_attempts",
+    "init_link_state",
+    "outage_probability",
+]

@@ -1,0 +1,147 @@
+"""(seed, round)-pure link draws: burst interference, outage, retries.
+
+Every function folds the round index (and a private stream tag) into the
+trainer's link key before drawing, so the realized link behaviour is a
+pure function of (seed, round) — and, for retransmissions, of the
+attempt index — exactly the purity contract of the fading, sampling,
+harvesting, and fault streams. Draws are made over the full ``[n_real]``
+client vector with a replicated key, so every shard of the clients mesh
+sees the same masks.
+
+Stream tags are small integers folded *before* the round index (the
+``repro.core.faults.inject`` discipline); the link base key itself is
+already a dedicated stream off the per-seed key
+(``repro.core.streams.LINK_STREAM``).
+
+The outage model: the decided rate ``R(b*, gamma*)`` is achievable at
+the *design* SNR — proportional to the channel gain the controller
+believed, ``h_design``. Each attempt rides an independent Rayleigh fast
+fade, i.e. an Exp(1) power factor ``g`` on the *realized* mean SNR
+``margin * h_real`` (``margin`` = linear link-budget fade margin). The
+attempt fails when the instantaneous SNR undershoots the design point:
+
+    p_out = P[g * margin * h_real < h_design]
+          = 1 - exp(-(h_design / h_real) / margin)
+
+Bandwidth and compression cancel out of the threshold (both SNRs are
+taken at the same ``(b*, gamma*)``), so ``p_out`` is a per-client
+*scalar* — constant across the solver's gamma grid — which is why the
+``price_outage`` factor slots into the dual solver without changing the
+bandwidth best-response shape. An unobserved interference burst makes
+``h_design / h_real`` equal the burst noise rise (near-certain outage);
+an over-estimated channel (``FaultConfig.h_err_std``) inflates it the
+same way.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+_GE_STREAM = 1      # Gilbert-Elliott burst transition uniforms
+_OUTAGE_STREAM = 2  # per-attempt outage uniforms
+
+# ceiling on the priced outage probability: keeps the expected-attempt
+# factor 1/(1-p) finite (<= 1000x) even when the realized p_out -> 1
+PRICE_P_CAP = 0.999
+
+
+class LinkState(NamedTuple):
+    """Carried link state: the per-client Gilbert-Elliott burst flag.
+
+    Lives in the scan carry next to battery / staleness / defense state;
+    replicated across the clients mesh (the chain is drawn over the full
+    ``[n_real]`` vector with a replicated key).
+    """
+    burst: Array  # [n] bool — True while the client is in the burst state
+
+
+def init_link_state(n: int) -> LinkState:
+    """All clients start quiet — round 0 sees at most fresh entries."""
+    return LinkState(burst=jnp.zeros((n,), jnp.bool_))
+
+
+def burst_step(key: Array, round_idx, prev_burst: Array, p: float, q: float
+               ) -> Array:
+    """One Gilbert-Elliott transition: [n] bool burst mask for this round.
+
+    Quiet clients enter the burst with probability ``p``, bursting
+    clients recover with probability ``q``. The transition uniforms are
+    pure in (key, round); the chain state itself is the carried
+    recursion (``LinkState.burst``)."""
+    k = jax.random.fold_in(jax.random.fold_in(key, _GE_STREAM), round_idx)
+    u = jax.random.uniform(k, prev_burst.shape)
+    return jnp.where(prev_burst, u >= jnp.float32(q), u < jnp.float32(p))
+
+
+def burst_channel(h: Array, burst: Array, noise_rise: float) -> Array:
+    """Effective channel under burst interference.
+
+    A noise floor raised ``N0 -> N0 * F`` is exactly a channel gain
+    scaled ``h -> h / F`` in the Shannon rate ``B log2(1 + P h / (N0 B))``
+    — so the burst rides through every scalar-``n0`` channel formula
+    (comm time, comm energy, solver) as a plain gain derating."""
+    return jnp.where(burst, h / jnp.float32(noise_rise), h)
+
+
+def outage_probability(h_design: Array, h_real: Array, margin: float
+                       ) -> Array:
+    """[n] per-attempt outage probability (see module docstring).
+
+    ``h_design`` is the channel the controller decided against (its
+    belief), ``h_real`` the realized physics channel; ``margin`` the
+    *linear* fade margin. Truthful belief gives the floor
+    ``1 - exp(-1/margin)``."""
+    ratio = h_design / jnp.maximum(h_real, jnp.float32(1e-30))
+    return jnp.clip(1.0 - jnp.exp(-ratio / jnp.float32(margin)), 0.0, 1.0)
+
+
+def attempt_outcomes(key: Array, round_idx, p_out: Array, max_retx: int
+                     ) -> tuple[Array, Array]:
+    """Bounded-HARQ outcome: ([n] int32 attempts used, [n] bool delivered).
+
+    Draws one uniform per (attempt, client) — shape ``[max_retx + 1, n]``
+    from a stream pure in (key, round), so each attempt's draw is pure in
+    (seed, round, attempt). A client transmits until its first success or
+    until the attempt budget is spent; ``attempts`` counts the
+    transmissions actually made (in ``[1, max_retx + 1]``) and
+    ``delivered`` is False exactly for retx-exhausted clients. Note
+    ``attempts <= max_retx`` implies ``delivered`` (only exhaustion uses
+    the full budget without success)."""
+    n_attempts = int(max_retx) + 1
+    k = jax.random.fold_in(jax.random.fold_in(key, _OUTAGE_STREAM),
+                           round_idx)
+    u = jax.random.uniform(k, (n_attempts,) + p_out.shape)
+    fail = (u < p_out[None, :]).astype(jnp.float32)
+    cumfail = jnp.cumprod(fail, axis=0)      # [A, n]: all of 1..k failed
+    attempts = (1 + jnp.sum(cumfail[:-1], axis=0)).astype(jnp.int32)
+    delivered = cumfail[-1] < 0.5
+    return attempts, delivered
+
+
+def expected_attempts(p_out: Array) -> Array:
+    """[n] expected transmission count ``1 / (1 - p_out)`` — the
+    ``price_outage`` comm-energy factor. ``p_out`` is capped at
+    ``PRICE_P_CAP`` so the factor stays finite (the geometric mean of an
+    *unbounded* retry process; the realized bounded-HARQ cost is lower,
+    making the priced decision conservatively lossy-averse)."""
+    p = jnp.clip(p_out, 0.0, jnp.float32(PRICE_P_CAP))
+    return 1.0 / (1.0 - p)
+
+
+def attempt_time(attempts: Array, t_comm: Array, backoff_s: float) -> Array:
+    """[n] total airtime+backoff of ``attempts`` transmissions of
+    single-attempt airtime ``t_comm`` (one backoff slot precedes each
+    retransmission, none before the first attempt)."""
+    a = attempts.astype(jnp.float32)
+    return a * t_comm + (a - 1.0) * jnp.float32(backoff_s)
+
+
+def attempt_energy(attempts: Array, t_comm: Array, P: Array) -> Array:
+    """[n] transmit energy of ``attempts`` transmissions — ``P`` is spent
+    on air only (backoff slots are idle), so energy is monotone
+    non-decreasing in the attempt count."""
+    return attempts.astype(jnp.float32) * P * t_comm

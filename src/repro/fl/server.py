@@ -69,6 +69,12 @@ from repro.core.energy import (UNLIMITED_J, alive_mask, comp_energy,
 from repro.core.faults import (DefenseConfig, FaultConfig, MeanAggregator,
                                arrival_mask, channel_estimate, corrupt_draw,
                                corrupt_payload, crash_draw, make_aggregator)
+from repro.core.link import (LinkConfig, LinkState, attempt_energy,
+                             attempt_outcomes, attempt_time, burst_channel,
+                             burst_step, expected_attempts, init_link_state,
+                             outage_probability)
+from repro.core.streams import (CTRL_STREAM, FAULT_STREAM, HARVEST_STREAM,
+                                LINK_STREAM, POOL_STREAM, SAMPLE_STREAM)
 from repro.core.rounds import (AsyncConfig, AsyncState, apply_harvest,
                                best_case_round_time, harvest_rates,
                                init_async_state, partial_round_energy,
@@ -82,19 +88,21 @@ from repro.fl.updates import tree_spec, unflatten_update
 from repro.core.hierarchy import HierarchyConfig, wrap_controller
 from repro.sharding.fl import (CLIENTS_AXIS, async_state_specs, axis_names,
                                client_shard_count, clients_axis_size,
-                               defense_state_specs, mesh_client_axes,
-                               replicated_specs, shard_client_data)
+                               defense_state_specs, link_state_specs,
+                               mesh_client_axes, replicated_specs,
+                               shard_client_data)
 
 
-# PRNG stream tags (folded into the per-seed base key): far above any
-# realistic round index so the fading stream's fold_in(base, round) can
-# never collide with another stream's base key (the mobility drift's
-# phase stream, 6 << 20, lives in repro.core.channel off the fade key)
-_CTRL_STREAM = 1 << 20
-_SAMPLE_STREAM = 2 << 20
-_HARVEST_STREAM = 3 << 20
-_FAULT_STREAM = 4 << 20
-_POOL_STREAM = 5 << 20      # hierarchy candidate-pool sampler base key
+# PRNG stream tags (folded into the per-seed base key): registered in
+# repro.core.streams — one registry so two subsystems can never silently
+# fold the same tag and correlate their draws (the mobility drift's
+# phase stream lives in repro.core.channel off the fade key)
+_CTRL_STREAM = CTRL_STREAM
+_SAMPLE_STREAM = SAMPLE_STREAM
+_HARVEST_STREAM = HARVEST_STREAM
+_FAULT_STREAM = FAULT_STREAM
+_POOL_STREAM = POOL_STREAM  # hierarchy candidate-pool sampler base key
+_LINK_STREAM = LINK_STREAM  # burst interference + outage (repro.core.link)
 
 
 @dataclasses.dataclass
@@ -127,6 +135,17 @@ class RoundLog:
     #                                       norm-clipped this round
     fallback: Optional[bool] = None       # solver fallback round
     #                                       (RoundDecision.fallback)
+    # --- link-reliability fields (None unless the link subsystem is
+    #     active — repro.core.link) ---------------------------------------
+    n_retx: Optional[int] = None          # retransmissions across selected
+    #                                       clients this round
+    n_outage: Optional[int] = None        # retx-exhausted clients (update
+    #                                       dropped, energy still charged)
+    goodput_frac: Optional[float] = None  # delivered payload bits / bits
+    #                                       put on air (1.0 on an idle or
+    #                                       lossless round)
+    e_retx: Optional[float] = None        # J spent on retransmissions
+    #                                       (beyond each first attempt)
 
     @property
     def total_energy(self) -> float:
@@ -176,6 +195,32 @@ class _FaultsRuntime:
     n0: float
 
 
+@dataclasses.dataclass(frozen=True)
+class _LinkRuntime:
+    """Engine-facing bundle of the resolved link-reliability quantities
+    (``repro.core.link.LinkConfig`` plus the trainer's per-client
+    timing/energy arrays and channel scalars): closed over by the round
+    core, never traced as an operand. The knobs are Python scalars — a
+    disabled stream (``outage=False`` or ``bursty=False``) compiles away
+    entirely."""
+    outage: bool
+    margin: float                 # linear fade margin 10^(dB/10)
+    max_retx: int
+    backoff_s: float
+    bursty: bool
+    burst_p: float
+    burst_q: float
+    noise_rise: float             # (N0 + I_burst) / N0 >= 1
+    observe_burst: bool
+    price_outage: bool
+    t_cmp: jnp.ndarray            # [n_real] s computation time
+    e_cmp: jnp.ndarray            # [n_real] J computation energy
+    b_tot: float
+    s_bits: float
+    i_bits: float
+    n0: float
+
+
 def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                      server_lr: float, use_pallas: bool = False,
                      block: int = compression.DEFAULT_BLOCK,
@@ -184,7 +229,8 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                      n_real: Optional[int] = None,
                      async_rt: Optional[_AsyncRuntime] = None,
                      fault_rt: Optional[_FaultsRuntime] = None,
-                     aggregator=None):
+                     aggregator=None,
+                     link_rt: Optional[_LinkRuntime] = None):
     """Pure decide -> sparsify -> aggregate -> apply round body.
 
     Closes over the controller (its ``decide`` must be traceable), the
@@ -244,6 +290,23 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
     n_rejected / clip_frac / fallback`` telemetry lanes, and a
     non-finite aggregate is rejected wholesale (params carry unchanged,
     every participant counted rejected) instead of poisoning the scan.
+
+    ``link_rt`` (a ``_LinkRuntime``, requires ``battery`` and the
+    ``lstate``/``lkey`` operands) activates the ``repro.core.link``
+    wireless-reliability model: the Gilbert-Elliott burst chain derates
+    the *physics* channel (the controller optionally keeps the quiet-
+    state belief), each selected client's transmission fails per attempt
+    with its Rayleigh-outage probability and retries up to ``max_retx``
+    times — every attempt charging real airtime and energy, deadline-
+    blowing retries resolving through the async late path — and
+    retx-exhausted clients are dropped from the aggregate while their
+    energy and fairness-EMA effects land honestly. ``price_outage``
+    hands the controller the expected-attempt comm-energy factor via
+    ``RoundObservation.e_scale``. The core then returns an 8-tuple
+    ``(params, dec, state, battery, astate, fstate, lstate, extras)``
+    whose extras add the ``n_retx / n_outage / goodput_frac / e_retx``
+    lanes. When ``link_rt is None`` the emitted program is *identical*
+    to the legacy one — the backward-compat contract the goldens pin.
     """
     sharded = shard_axis is not None
     # the client axis may live on one mesh axis (legacy 1-D) or two
@@ -258,6 +321,9 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
     agg_obj = aggregator if aggregator is not None else MeanAggregator()
     defended = bool(getattr(agg_obj, "enabled", False))
     telemetry = faulty or defended
+    linky = link_rt is not None
+    link_out = linky and link_rt.outage
+    link_burst = linky and link_rt.bursty
 
     def _psum_stages(x):
         """Two-tier reduction: innermost (clients) axis first — the
@@ -284,7 +350,8 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             i0, n_local)
 
     def core(params, updates, u_norms, h, P, r, key, ctrl_state,
-             battery=None, astate=None, hkey=None, fstate=None, fkey=None):
+             battery=None, astate=None, hkey=None, fstate=None, fkey=None,
+             lstate=None, lkey=None):
         if async_rt is not None and battery is None:
             raise ValueError("the async round model needs the battery "
                              "carry (pass battery=jnp.full(n, inf) for "
@@ -292,6 +359,10 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
         if faulty and (battery is None or fkey is None):
             raise ValueError("fault injection needs the battery carry and "
                              "the fault key operand (pass battery="
+                             "jnp.full(n, inf) for unlimited capacities)")
+        if linky and (battery is None or lkey is None):
+            raise ValueError("the link-reliability model needs the battery "
+                             "carry and the link key operand (pass battery="
                              "jnp.full(n, inf) for unlimited capacities)")
         if sharded:
             n_local = u_norms.shape[0]
@@ -303,12 +374,27 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             i0 = jnp.int32(0)
             obs_norms = u_norms
         n_obs = obs_norms.shape[0]
-        # the controller's channel belief: the true h unless the
-        # channel-estimate fault stream is on — then a lognormal-noised
-        # estimate; the realized transmission below always uses true h
-        h_obs = h
+        if link_burst:
+            # one Gilbert-Elliott transition per round (uniforms pure in
+            # (link key, round); the chain itself is the carried lstate).
+            # The burst state derates the *physics* channel — a raised
+            # noise floor is exactly a scaled gain
+            # (repro.core.link.burst_channel) — so every realized comm
+            # time/energy below pays the interference
+            burst = burst_step(lkey, r, lstate.burst, link_rt.burst_p,
+                               link_rt.burst_q)
+            lstate = LinkState(burst=burst)
+            h_phys = burst_channel(h, burst, link_rt.noise_rise)
+        else:
+            h_phys = h
+        # the controller's channel belief: the quiet-state channel unless
+        # it observes the burst (LinkConfig.observe_burst), then
+        # lognormal-noised if the channel-estimate fault stream is on;
+        # the realized transmission below always uses the physics channel
+        h_obs = h_phys if (link_burst and link_rt.observe_burst) else h
         if faulty and fault_rt.h_err_std > 0.0:
-            h_obs = channel_estimate(fkey, r, h, fault_rt.h_err_std)
+            h_obs = channel_estimate(fkey, r, h_obs, fault_rt.h_err_std)
+        h = h_phys
         present = arrived = None
         if faulty and fault_rt.churn_dwell > 0:
             present, arrived = arrival_mask(fkey, r, n_obs,
@@ -334,8 +420,20 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                 gamma_floor=async_rt.gamma_floor, s_bits=async_rt.s_bits,
                 i_bits=async_rt.i_bits, n0=async_rt.n0)
             alive = alive & (t_obs <= async_rt.deadline)
+        p_out = e_scale = None
+        if link_out:
+            # per-attempt outage probability at the decided operating
+            # point: the belief h_obs sets the design SNR, the physics h
+            # the realized fade mean. The (b, gamma) dependence cancels
+            # (both SNRs are taken at the same allocation), so p_out is a
+            # per-client scalar — decision-free, priceable *before* the
+            # decide
+            p_out = outage_probability(h_obs, h, link_rt.margin)
+            if link_rt.price_outage:
+                e_scale = expected_attempts(p_out)
         obs = RoundObservation(u_norms=obs_norms, h=h_obs, P=P, round=r,
-                               key=key, alive=alive, t_round=t_obs)
+                               key=key, alive=alive, t_round=t_obs,
+                               e_scale=e_scale)
         dec, new_state = controller.decide(obs, ctrl_state)
         if battery is not None:
             # hard mask, whatever the controller decided: a depleted
@@ -346,28 +444,60 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                                bandwidth=dec.bandwidth * mf,
                                energy=dec.energy * mf,
                                bw_used=jnp.sum(dec.bandwidth * mf))
-            if async_rt is None and not faulty:
+            if async_rt is None and not faulty and not linky:
                 # debit the round's spend; the depleting transmission is
                 # allowed to finish (brownout), charge floors at 0 so the
                 # carried state stays in [0, capacity] (inf stays inf)
                 battery = jnp.maximum(battery - dec.energy, 0.0)
-        if faulty and fault_rt.h_err_std > 0.0:
-            # the controller priced energy at its h_est belief; the
-            # transmission realizes on the true channel — re-charge at
-            # true h (same allocation). b/gamma guards mirror
+        if (faulty and fault_rt.h_err_std > 0.0) or (link_burst
+                                                     and not link_out):
+            # the controller priced energy at its belief (h_est, and/or
+            # the quiet-state channel under unobserved burst-only
+            # interference); the transmission realizes on the physics
+            # channel — re-charge at true h (same allocation). With the
+            # outage model on, the retx accounting below re-prices the
+            # whole energy instead. b/gamma guards mirror
             # masked_decision: comm_energy is inf below the 1 Hz floor
             # and the unselected-lane inf*0 would otherwise NaN
-            b_safe = jnp.where(dec.x, dec.bandwidth, fault_rt.b_tot)
+            _rt = fault_rt if faulty else link_rt
+            b_safe = jnp.where(dec.x, dec.bandwidth, _rt.b_tot)
             g_safe = jnp.where(dec.x, dec.gamma, 1.0)
             e_real = dec.x.astype(jnp.float32) * (
-                comm_energy(g_safe, b_safe, P, h, fault_rt.s_bits,
-                            fault_rt.i_bits, fault_rt.n0) + fault_rt.e_cmp)
+                comm_energy(g_safe, b_safe, P, h, _rt.s_bits,
+                            _rt.i_bits, _rt.n0) + _rt.e_cmp)
             dec = dec._replace(energy=e_real)
         crashed = cfrac = None
         if faulty and fault_rt.crash_rate > 0.0:
             crashed_m, cfrac = crash_draw(fkey, r, n_obs,
                                           fault_rt.crash_rate)
             crashed = dec.x & crashed_m
+
+        # ---- bounded-HARQ retransmission accounting (repro.core.link):
+        # each attempt is a full airtime of the decided allocation; a
+        # backoff slot precedes each retry. The realized per-client cost
+        # replaces the controller's priced energy wholesale (the priced
+        # value was an expectation; this is the draw) ----
+        attempts_f = delivered = lost_m = t_link = e_retx_vec = None
+        if link_out:
+            b_safe_l = jnp.where(dec.x, dec.bandwidth, link_rt.b_tot)
+            g_safe_l = jnp.where(dec.x, dec.gamma, 1.0)
+            t1 = comm_time(g_safe_l, b_safe_l, P, h, link_rt.s_bits,
+                           link_rt.i_bits, link_rt.n0)
+            attempts, delivered = attempt_outcomes(lkey, r, p_out,
+                                                   link_rt.max_retx)
+            attempts_f = attempts.astype(jnp.float32)
+            t_link = attempt_time(attempts_f, t1, link_rt.backoff_s)
+            xf_l = dec.x.astype(jnp.float32)
+            e_link = xf_l * (attempt_energy(attempts_f, t1, P)
+                             + link_rt.e_cmp)
+            e_retx_vec = xf_l * (attempts_f - 1.0) * P * t1
+            dec = dec._replace(energy=e_link)
+            # a crashed client is counted as a crash, not an outage: its
+            # energy is prorated by the crash machinery below and its
+            # retx telemetry is dropped with it
+            lost_m = dec.x & ~delivered
+            if crashed is not None:
+                lost_m = lost_m & ~crashed
 
         made = late = extras = None
         if async_rt is not None:
@@ -376,6 +506,11 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             # ever read through the selection mask)
             t_comm = comm_time(dec.gamma, dec.bandwidth, P, h,
                                async_rt.s_bits, async_rt.i_bits, async_rt.n0)
+            if link_out:
+                # the realized timeline is the whole retry sequence
+                # (attempts x airtime + backoff slots); deadline-blowing
+                # retries resolve through the existing late path below
+                t_comm = t_link
             t_total = async_rt.t_cmp + t_comm
             feasible = dec.x & (t_total <= async_rt.deadline)
             # a crashed client is neither made nor late: its update never
@@ -385,17 +520,26 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             made = feasible if crashed is None else feasible & ~crashed
             late = (dec.x & ~feasible if crashed is None
                     else dec.x & ~feasible & ~crashed)
+            if delivered is not None:
+                # a retx-exhausted client is neither made nor
+                # late-buffered — its update never decodes — but it pays
+                # like a late one (the airtime was real)
+                made = made & delivered
+                late = late & delivered
             e_full = dec.energy
             if not async_rt.staleness:
                 # a dropped update is abandoned at the deadline: charge
                 # computation first, then the prorated transmission (the
-                # minimum() keeps partial <= full under fp rounding)
+                # minimum() keeps partial <= full under fp rounding).
+                # Exhausted clients inside the deadline ran their full
+                # retry budget: e_part equals the full charge there
+                drop = late if lost_m is None else late | lost_m
                 e_part = partial_round_energy(async_rt.t_cmp, t_comm,
                                               async_rt.e_cmp, P,
                                               async_rt.deadline)
                 dec = dec._replace(energy=jnp.where(
                     made, dec.energy,
-                    jnp.where(late, jnp.minimum(e_part, dec.energy), 0.0)))
+                    jnp.where(drop, jnp.minimum(e_part, dec.energy), 0.0)))
             # with staleness the transmission completes in the background,
             # so late clients pay their full round energy
             if crashed is not None:
@@ -419,16 +563,21 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             extras = dict(t_wall=t_wall, made=made,
                           n_late=jnp.sum(late.astype(jnp.int32)),
                           n_stale=jnp.int32(0))
-        elif faulty:
+        elif faulty or linky:
             if crashed is not None:
                 # untimed rounds still prorate crash energy over the
                 # client's own comp+comm duration (guards as above: the
-                # unselected-lane comm_time would be inf)
-                t_comm_f = comm_time(jnp.where(dec.x, dec.gamma, 1.0),
-                                     jnp.where(dec.x, dec.bandwidth,
-                                               fault_rt.b_tot),
-                                     P, h, fault_rt.s_bits, fault_rt.i_bits,
-                                     fault_rt.n0)
+                # unselected-lane comm_time would be inf); with the
+                # outage model on, the duration is the link-extended
+                # retry timeline
+                if link_out:
+                    t_comm_f = t_link
+                else:
+                    t_comm_f = comm_time(jnp.where(dec.x, dec.gamma, 1.0),
+                                         jnp.where(dec.x, dec.bandwidth,
+                                                   fault_rt.b_tot),
+                                         P, h, fault_rt.s_bits,
+                                         fault_rt.i_bits, fault_rt.n0)
                 t_c = cfrac * jnp.where(dec.x, fault_rt.t_cmp + t_comm_f,
                                         0.0)
                 e_crash = partial_round_energy(fault_rt.t_cmp, t_comm_f,
@@ -443,6 +592,11 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
         part_glob = made if made is not None else dec.x
         if crashed is not None and made is None:
             part_glob = dec.x & ~crashed
+        if delivered is not None and made is None:
+            # untimed path: a retx-exhausted update never decodes, so it
+            # never enters the aggregate (graceful degradation — the
+            # energy and fairness-EMA effects above already landed)
+            part_glob = part_glob & delivered
         xf = part_glob.astype(jnp.float32)
         cm = fl_u = None
         if faulty and fault_rt.corrupt_rate > 0.0:
@@ -546,6 +700,39 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
         delta_tree = unflatten_update(agg, spec)
         new_params = jax.tree_util.tree_map(
             lambda p, d: p + d.astype(p.dtype), params, delta_tree)
+        if linky:
+            if link_out:
+                # link telemetry over non-crashed selected clients (a
+                # crash is accounted as a crash, not link loss); goodput
+                # is link-layer: a delivered-but-late payload still
+                # decoded, only exhausted ones are dead air
+                nc_f = (xf_l if crashed is None
+                        else xf_l * (~crashed).astype(jnp.float32))
+                ok_m = dec.x & delivered
+                if crashed is not None:
+                    ok_m = ok_m & ~crashed
+                d_bits = g_safe_l * link_rt.s_bits + link_rt.i_bits
+                tx_bits = jnp.sum(nc_f * attempts_f * d_bits)
+                ok_bits = jnp.sum(jnp.where(ok_m, d_bits, 0.0))
+                lextras = dict(
+                    n_retx=jnp.sum(nc_f * (attempts_f - 1.0)
+                                   ).astype(jnp.int32),
+                    n_outage=jnp.sum(lost_m.astype(jnp.int32)),
+                    goodput_frac=jnp.where(
+                        tx_bits > 0.0,
+                        ok_bits / jnp.maximum(tx_bits, 1e-30), 1.0),
+                    e_retx=jnp.sum(nc_f * e_retx_vec))
+            else:
+                # burst-only mode: single lossless attempt per selection
+                lextras = dict(n_retx=jnp.int32(0), n_outage=jnp.int32(0),
+                               goodput_frac=jnp.float32(1.0),
+                               e_retx=jnp.float32(0.0))
+            ext = dict(extras) if extras is not None else {}
+            if telemetry:
+                ext.update(fextras)
+            ext.update(lextras)
+            return (new_params, dec, new_state, battery, astate, fstate,
+                    lstate, ext)
         if telemetry:
             ext = dict(extras) if extras is not None else {}
             ext.update(fextras)
@@ -583,11 +770,13 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                      n_real: Optional[int] = None,
                      async_rt: Optional[_AsyncRuntime] = None,
                      fault_rt: Optional[_FaultsRuntime] = None,
-                     aggregator=None, mobility=None):
+                     aggregator=None, mobility=None,
+                     link_rt: Optional[_LinkRuntime] = None):
     """Builds the fused multi-round scan program.
 
-    Returns ``scan_fn(params, ctrl_state, battery, astate, fstate, data,
-    keys, start_round, last_round, eval_every, n_rounds)`` executing
+    Returns ``scan_fn(params, ctrl_state, battery, astate, fstate,
+    lstate, data, keys, start_round, last_round, eval_every, n_rounds)``
+    executing
     ``n_rounds`` (static) FL rounds as one ``lax.scan``: traced fading +
     batch sampling + client vmap step + decide/sparsify/aggregate/apply
     + battery debit + strided eval. ``battery`` is the [n_real]
@@ -599,17 +788,22 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
     empty ``()`` contributes no leaves, so the compiled program is the
     legacy one. ``fstate`` is the defended-aggregation carry on the same
     contract (``()`` unless the aggregator tracks a clip quantile —
-    ``repro.core.faults.DefenseState``, replicated under a mesh).
-    ``keys`` is ``dict(fade=..., sample=..., ctrl=..., harvest=...,
-    fault=...)`` PRNG keys (unused streams are dead code the compiler
-    drops); ``eval_every`` is a traced int (accuracy is NaN on skipped
-    rounds; the ``last_round`` index is always evaluated). Outputs are
-    stacked per-round logs (including the per-round ``battery`` trace,
-    plus ``t_round``/``made``/``n_late``/``n_stale`` when ``async_rt``
+    ``repro.core.faults.DefenseState``, replicated under a mesh), and
+    ``lstate`` the link-reliability carry (``()`` unless the
+    Gilbert-Elliott burst chain is on — ``repro.core.link.LinkState``,
+    replicated under a mesh). ``keys`` is ``dict(fade=..., sample=...,
+    ctrl=..., harvest=..., fault=..., link=...)`` PRNG keys (unused
+    streams are dead code the compiler drops); ``eval_every`` is a
+    traced int (accuracy is NaN on skipped rounds; the ``last_round``
+    index is always evaluated). Outputs are stacked per-round logs
+    (including the per-round ``battery`` trace, plus
+    ``t_round``/``made``/``n_late``/``n_stale`` when ``async_rt``
     is set, plus ``n_faulted``/``n_rejected``/``clip_frac``/``fallback``
-    when fault injection or a defended aggregator is active). Wrap in
-    ``jax.jit(..., static_argnames="n_rounds", donate_argnums=(0, 1, 2,
-    3, 4))`` — or ``vmap`` over ``keys`` for sweeps.
+    when fault injection or a defended aggregator is active, plus
+    ``n_retx``/``n_outage``/``goodput_frac``/``e_retx`` when the link
+    subsystem is). Wrap in ``jax.jit(..., static_argnames="n_rounds",
+    donate_argnums=(0, 1, 2, 3, 4, 5))`` — or ``vmap`` over ``keys``
+    for sweeps.
 
     With ``mesh`` (a 1-D mesh carrying ``mesh_axis``), the whole scan is
     wrapped in ``shard_map``: ``data`` comes in sharded on its client
@@ -642,15 +836,16 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                             server_lr=server_lr, use_pallas=use_pallas,
                             block=block, shard_axis=axis, n_real=n_real,
                             async_rt=async_rt, fault_rt=fault_rt,
-                            aggregator=aggregator)
+                            aggregator=aggregator, link_rt=link_rt)
     faulty = fault_rt is not None
     telemetry = faulty or bool(getattr(aggregator, "enabled", False))
+    linky = link_rt is not None
 
     n_pad_keys = int(weights.shape[0])
     n_real_keys = n_real if n_real is not None else n_pad_keys
 
-    def scan_body(params, ctrl_state, battery, astate, fstate, data, keys,
-                  start_round, last_round, eval_every, n_rounds: int):
+    def scan_body(params, ctrl_state, battery, astate, fstate, lstate, data,
+                  keys, start_round, last_round, eval_every, n_rounds: int):
         n_local = data.lengths.shape[0]             # per-shard when sharded
         if sharded:
             i0 = jax.lax.axis_index(axes[0])
@@ -661,7 +856,7 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
             i0 = jnp.int32(0)
 
         def step(carry, r):
-            p, state, batt, ast, fst = carry
+            p, state, batt, ast, fst, lst = carry
             h = round_gains(keys["fade"], pathloss, r, rayleigh,
                             mobility=mobility)
             # every shard derives the full (tiny) per-client key set —
@@ -674,7 +869,12 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                                             local_steps, batch)
             updates, u_norms, losses = client_step(p, batches)
             ckey = jax.random.fold_in(keys["ctrl"], r)
-            if telemetry:
+            if linky:
+                p, dec, state, batt, ast, fst, lst, extras = core(
+                    p, updates, u_norms, h, P, r, ckey, state, batt, ast,
+                    keys.get("harvest"), fst, keys.get("fault"), lst,
+                    keys.get("link"))
+            elif telemetry:
                 p, dec, state, batt, ast, fst, extras = core(
                     p, updates, u_norms, h, P, r, ckey, state, batt, ast,
                     keys.get("harvest"), fst, keys.get("fault"))
@@ -704,13 +904,19 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                            n_rejected=extras["n_rejected"],
                            clip_frac=extras["clip_frac"],
                            fallback=extras["fallback"])
-            return (p, state, batt, ast, fst), out
+            if linky:
+                out.update(n_retx=extras["n_retx"],
+                           n_outage=extras["n_outage"],
+                           goodput_frac=extras["goodput_frac"],
+                           e_retx=extras["e_retx"])
+            return (p, state, batt, ast, fst, lst), out
 
         rs = start_round + jnp.arange(n_rounds, dtype=jnp.int32)
-        (params, ctrl_state, battery, astate, fstate), outs = jax.lax.scan(
-            step, (params, ctrl_state, battery, astate, fstate), rs,
-            unroll=unroll)
-        return params, ctrl_state, battery, astate, fstate, outs
+        (params, ctrl_state, battery, astate, fstate, lstate), outs = \
+            jax.lax.scan(
+                step, (params, ctrl_state, battery, astate, fstate, lstate),
+                rs, unroll=unroll)
+        return params, ctrl_state, battery, astate, fstate, lstate, outs
 
     if not sharded:
         return scan_body
@@ -718,28 +924,30 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as PS
 
-    def scan_fn(params, ctrl_state, battery, astate, fstate, data, keys,
-                start_round, last_round, eval_every, n_rounds: int):
+    def scan_fn(params, ctrl_state, battery, astate, fstate, lstate, data,
+                keys, start_round, last_round, eval_every, n_rounds: int):
         body = functools.partial(scan_body, n_rounds=n_rounds)
         # only `data` and the stale-update buffer are split (leading
         # client axis); everything else — params, controller state,
-        # battery, defense state, keys, round bounds, stacked logs — is
-        # replicated. check_rep=False: the outputs *are* replicated
-        # (built from psum/all-gather results) but the static replication
-        # checker cannot see that through the scan carry.
+        # battery, defense state, link state, keys, round bounds, stacked
+        # logs — is replicated. check_rep=False: the outputs *are*
+        # replicated (built from psum/all-gather results) but the static
+        # replication checker cannot see that through the scan carry.
         ast_specs = async_state_specs(astate, axis)
         fst_specs = defense_state_specs(fstate)
+        lst_specs = link_state_specs(lstate)
         data_entry = axes[0] if len(axes) == 1 else tuple(axes)
         sharded_fn = shard_map(
             body, mesh=mesh,
             in_specs=(replicated_specs(params), replicated_specs(ctrl_state),
-                      PS(), ast_specs, fst_specs, PS(data_entry), PS(), PS(),
-                      PS(), PS()),
+                      PS(), ast_specs, fst_specs, lst_specs, PS(data_entry),
+                      PS(), PS(), PS(), PS()),
             out_specs=(replicated_specs(params), replicated_specs(ctrl_state),
-                       PS(), ast_specs, fst_specs, PS()),
+                       PS(), ast_specs, fst_specs, lst_specs, PS()),
             check_rep=False)
-        return sharded_fn(params, ctrl_state, battery, astate, fstate, data,
-                          keys, start_round, last_round, eval_every)
+        return sharded_fn(params, ctrl_state, battery, astate, fstate,
+                          lstate, data, keys, start_round, last_round,
+                          eval_every)
 
     return scan_fn
 
@@ -815,6 +1023,18 @@ class FederatedTrainer:
     the whole-round non-finite-aggregate guard. Both disabled (the
     default) compile the exact legacy program — same goldens contract
     as ``async_cfg``.
+
+    ``link_cfg``: a ``repro.core.link.LinkConfig`` models the wireless
+    uplink as unreliable — (seed, round, attempt)-pure Rayleigh-outage
+    packet errors with bounded HARQ retransmission (real energy and
+    airtime per attempt), a Gilbert-Elliott bursty-interference chain
+    that raises the effective noise floor while in the burst state, and
+    optional outage-aware solver pricing (``price_outage`` folds the
+    expected attempt count into the comm-energy term). Activates the
+    ``RoundLog`` link lanes (``n_retx``/``n_outage``/``goodput_frac``/
+    ``e_retx``). ``None`` — or a config with neither ``outage`` nor a
+    bursty chain — compiles the exact legacy program, same goldens
+    contract as ``fault_cfg``.
     """
 
     def __init__(self, *, model_loss, model_params, client_datasets,
@@ -829,6 +1049,7 @@ class FederatedTrainer:
                  async_cfg: Optional[AsyncConfig] = None,
                  fault_cfg: Optional[FaultConfig] = None,
                  defense: Optional[DefenseConfig] = None,
+                 link_cfg: Optional[LinkConfig] = None,
                  hierarchy: Optional[HierarchyConfig] = None,
                  mobility=None):
         if strategy is not None:
@@ -898,6 +1119,7 @@ class FederatedTrainer:
         self.sample_key = jax.random.fold_in(base, _SAMPLE_STREAM)
         self.harvest_key = jax.random.fold_in(base, _HARVEST_STREAM)
         self.fault_key = jax.random.fold_in(base, _FAULT_STREAM)
+        self.link_key = jax.random.fold_in(base, _LINK_STREAM)
         self._client_step_raw = make_batched_client_step(model_loss, fl_cfg.lr,
                                                          jit=False)
         self._client_step = jax.jit(self._client_step_raw)
@@ -965,6 +1187,21 @@ class FederatedTrainer:
         self._fault_rt = self._resolve_fault_runtime(fault_cfg)
         self._fstate0 = self.aggregator.init()
         self._fstate = jax.tree_util.tree_map(jnp.array, self._fstate0)
+
+        # ---- wireless link reliability (repro.core.link) ----------------
+        # a disabled link config resolves to link_rt=None (leafless ()
+        # carry, dead link key) and every engine below builds the exact
+        # legacy program — same goldens contract as the other subsystems
+        if link_cfg is not None and not isinstance(link_cfg, LinkConfig):
+            raise TypeError(f"link_cfg must be a LinkConfig or None, got "
+                            f"{type(link_cfg).__name__}")
+        self.link_cfg = link_cfg
+        self._link_rt = self._resolve_link_runtime(link_cfg)
+        if self._link_rt is not None and self._link_rt.bursty:
+            self._lstate0 = init_link_state(self.n_clients)
+        else:
+            self._lstate0 = ()
+        self._lstate = jax.tree_util.tree_map(jnp.array, self._lstate0)
         self._calibrated = False
         self.history: list[RoundLog] = []
 
@@ -1037,6 +1274,37 @@ class FederatedTrainer:
             b_tot=float(self.ch_cfg.bandwidth_total), s_bits=self.s_bits,
             i_bits=self.i_bits, n0=float(self.ch_cfg.noise_density))
 
+    def _resolve_link_runtime(self, cfg: Optional[LinkConfig]):
+        """Materialize the engine-facing ``_LinkRuntime`` (None when the
+        config is absent/disabled): the linear fade margin, the
+        retransmission budget, the Gilbert-Elliott burst parameters as an
+        effective noise rise, and the per-client computation time/energy
+        the retransmission accounting charges alongside the airtime."""
+        if cfg is None or not cfg.enabled:
+            return None
+        n = self.n_clients
+        if self.device_profile is not None:
+            samples = self.fl_cfg.local_steps * self.fl_cfg.local_batch
+            t_cmp = jnp.asarray(comp_time(self.device_profile, samples),
+                                jnp.float32)
+            e_cmp = jnp.asarray(comp_energy(self.device_profile, samples),
+                                jnp.float32)
+        else:
+            t_cmp = jnp.zeros((n,), jnp.float32)
+            e_cmp = jnp.zeros((n,), jnp.float32)
+        return _LinkRuntime(
+            outage=bool(cfg.outage),
+            margin=float(10.0 ** (cfg.fade_margin_db / 10.0)),
+            max_retx=int(cfg.max_retx), backoff_s=float(cfg.backoff_s),
+            bursty=bool(cfg.bursty), burst_p=float(cfg.burst_p),
+            burst_q=float(cfg.burst_q),
+            noise_rise=1.0 + float(cfg.i_burst_n0),
+            observe_burst=bool(cfg.observe_burst),
+            price_outage=bool(cfg.price_outage),
+            t_cmp=t_cmp, e_cmp=e_cmp,
+            b_tot=float(self.ch_cfg.bandwidth_total), s_bits=self.s_bits,
+            i_bits=self.i_bits, n0=float(self.ch_cfg.noise_density))
+
     # back-compat alias (the old attribute name) --------------------------
     @property
     def strategy(self) -> str:
@@ -1075,9 +1343,9 @@ class FederatedTrainer:
                 mesh=self.mesh, mesh_axis=self.mesh_axis,
                 n_real=self.n_clients, async_rt=self._async_rt,
                 fault_rt=self._fault_rt, aggregator=self.aggregator,
-                mobility=self.mobility)
+                mobility=self.mobility, link_rt=self._link_rt)
             self._scan_engine = jax.jit(scan_fn, static_argnames="n_rounds",
-                                        donate_argnums=(0, 1, 2, 3, 4))
+                                        donate_argnums=(0, 1, 2, 3, 4, 5))
             self._scan_fn_raw = scan_fn
         return self._scan_engine
 
@@ -1089,14 +1357,14 @@ class FederatedTrainer:
             scan_fn = self._scan_fn_raw
 
             @functools.partial(jax.jit, static_argnames="n_rounds")
-            def sweep(params, state, battery, astate, fstate, data, keys,
-                      eval_every, n_rounds: int):
+            def sweep(params, state, battery, astate, fstate, lstate, data,
+                      keys, eval_every, n_rounds: int):
                 def one(ks):
-                    _, _, _, _, _, outs = scan_fn(params, state, battery,
-                                                  astate, fstate, data, ks,
-                                                  jnp.int32(0),
-                                                  jnp.int32(n_rounds - 1),
-                                                  eval_every, n_rounds)
+                    _, _, _, _, _, _, outs = scan_fn(params, state, battery,
+                                                     astate, fstate, lstate,
+                                                     data, ks, jnp.int32(0),
+                                                     jnp.int32(n_rounds - 1),
+                                                     eval_every, n_rounds)
                     return outs
                 return jax.vmap(one)(keys)
 
@@ -1113,15 +1381,14 @@ class FederatedTrainer:
             scan_fn = self._scan_fn_raw
 
             @functools.partial(jax.jit, static_argnames="n_rounds")
-            def sweep(params, states, battery, astate, fstate, data, keys,
-                      eval_every, n_rounds: int):
+            def sweep(params, states, battery, astate, fstate, lstate, data,
+                      keys, eval_every, n_rounds: int):
                 def per_cfg(st):
                     def one(ks):
-                        _, _, _, _, _, outs = scan_fn(params, st, battery,
-                                                      astate, fstate, data,
-                                                      ks, jnp.int32(0),
-                                                      jnp.int32(n_rounds - 1),
-                                                      eval_every, n_rounds)
+                        _, _, _, _, _, _, outs = scan_fn(
+                            params, st, battery, astate, fstate, lstate,
+                            data, ks, jnp.int32(0), jnp.int32(n_rounds - 1),
+                            eval_every, n_rounds)
                         return outs
                     return jax.vmap(one)(keys)
                 return jax.vmap(per_cfg)(states)
@@ -1224,9 +1491,9 @@ class FederatedTrainer:
         self._maybe_calibrate(r)
         engine = self._get_scan_engine()
         (self.params, self.ctrl_state, self._battery, self._astate,
-         self._fstate, outs) = engine(
+         self._fstate, self._lstate, outs) = engine(
             self.params, self.ctrl_state, self._battery, self._astate,
-            self._fstate, self._data, self._keys(), jnp.int32(r),
+            self._fstate, self._lstate, self._data, self._keys(), jnp.int32(r),
             jnp.int32(r), jnp.int32(1), n_rounds=1)
         self._append_chunk_logs(r, outs)
         return self.history[-1]
@@ -1246,7 +1513,7 @@ class FederatedTrainer:
     def _keys(self):
         return {"fade": self.network.fade_key, "sample": self.sample_key,
                 "ctrl": self.key, "harvest": self.harvest_key,
-                "fault": self.fault_key}
+                "fault": self.fault_key, "link": self.link_key}
 
     def _append_chunk_logs(self, start: int, outs) -> None:
         """Materialize one chunk of stacked scan outputs (single host
@@ -1254,6 +1521,7 @@ class FederatedTrainer:
         host = {k: np.asarray(v) for k, v in outs.items()}
         timed = "t_round" in host
         faulted = "n_faulted" in host
+        linked = "n_retx" in host
         for i in range(host["x"].shape[0]):
             x = host["x"][i]
             self.history.append(RoundLog(
@@ -1269,7 +1537,12 @@ class FederatedTrainer:
                 n_faulted=int(host["n_faulted"][i]) if faulted else None,
                 n_rejected=int(host["n_rejected"][i]) if faulted else None,
                 clip_frac=float(host["clip_frac"][i]) if faulted else None,
-                fallback=bool(host["fallback"][i]) if faulted else None))
+                fallback=bool(host["fallback"][i]) if faulted else None,
+                n_retx=int(host["n_retx"][i]) if linked else None,
+                n_outage=int(host["n_outage"][i]) if linked else None,
+                goodput_frac=(float(host["goodput_frac"][i])
+                              if linked else None),
+                e_retx=float(host["e_retx"][i]) if linked else None))
 
     def run_scanned(self, rounds: Optional[int] = None, *,
                     chunk: Optional[int] = None, eval_every: int = 1,
@@ -1313,9 +1586,9 @@ class FederatedTrainer:
         for ci, s in enumerate(range(start_round, rounds, chunk)):
             n = min(chunk, rounds - s)
             (self.params, self.ctrl_state, self._battery, self._astate,
-             self._fstate, outs) = engine(
+             self._fstate, self._lstate, outs) = engine(
                 self.params, self.ctrl_state, self._battery, self._astate,
-                self._fstate, self._data, keys, jnp.int32(s),
+                self._fstate, self._lstate, self._data, keys, jnp.int32(s),
                 jnp.int32(rounds - 1), jnp.int32(eval_every), n_rounds=n)
             self._append_chunk_logs(s, outs)
             if ckpt_dir is not None and ((ci + 1) % ckpt_every == 0
@@ -1332,11 +1605,12 @@ class FederatedTrainer:
     def _carry_tree(self) -> dict:
         """The full scan carry as one pytree (what a checkpoint holds):
         params, controller state (duals / fairness EMA / FEParams),
-        batteries, the async stale buffer, and the defended-aggregation
-        state (streaming clip quantile)."""
+        batteries, the async stale buffer, the defended-aggregation
+        state (streaming clip quantile), and the link burst state
+        (Gilbert-Elliott chain)."""
         return {"params": self.params, "ctrl_state": self.ctrl_state,
                 "battery": self._battery, "astate": self._astate,
-                "fstate": self._fstate}
+                "fstate": self._fstate, "lstate": self._lstate}
 
     def save_checkpoint(self, directory: str, next_round: int) -> str:
         """Persist the carry after round ``next_round - 1``; resuming at
@@ -1357,12 +1631,13 @@ class FederatedTrainer:
         tree = _ckpt.restore_checkpoint(path, self._carry_tree())
         meta = _ckpt.load_metadata(path)
         (self.params, self.ctrl_state, self._battery, self._astate,
-         self._fstate) = (
+         self._fstate, self._lstate) = (
             jax.tree_util.tree_map(jnp.asarray, tree["params"]),
             jax.tree_util.tree_map(jnp.asarray, tree["ctrl_state"]),
             jnp.asarray(tree["battery"]),
             jax.tree_util.tree_map(jnp.asarray, tree["astate"]),
-            jax.tree_util.tree_map(jnp.asarray, tree["fstate"]))
+            jax.tree_util.tree_map(jnp.asarray, tree["fstate"]),
+            jax.tree_util.tree_map(jnp.asarray, tree["lstate"]))
         self._calibrated = True
         return int(meta["next_round"])
 
@@ -1375,7 +1650,8 @@ class FederatedTrainer:
                 "ctrl": jax.random.fold_in(base, _CTRL_STREAM),
                 "sample": jax.random.fold_in(base, _SAMPLE_STREAM),
                 "harvest": jax.random.fold_in(base, _HARVEST_STREAM),
-                "fault": jax.random.fold_in(base, _FAULT_STREAM)}
+                "fault": jax.random.fold_in(base, _FAULT_STREAM),
+                "link": jax.random.fold_in(base, _LINK_STREAM)}
 
     @classmethod
     def _stacked_seed_keys(cls, bases):
@@ -1431,11 +1707,12 @@ class FederatedTrainer:
                 bt = jnp.array(self._battery0)
                 ast = jax.tree_util.tree_map(jnp.array, self._astate0)
                 fst = jax.tree_util.tree_map(jnp.array, self._fstate0)
-                _, _, _, _, _, outs = engine(p, st, bt, ast, fst,
-                                             self._data, keys, jnp.int32(0),
-                                             jnp.int32(rounds - 1),
-                                             jnp.int32(eval_every),
-                                             n_rounds=rounds)
+                lst = jax.tree_util.tree_map(jnp.array, self._lstate0)
+                _, _, _, _, _, _, outs = engine(p, st, bt, ast, fst, lst,
+                                                self._data, keys, jnp.int32(0),
+                                                jnp.int32(rounds - 1),
+                                                jnp.int32(eval_every),
+                                                n_rounds=rounds)
                 lanes.append({k: np.asarray(v) for k, v in outs.items()})
             return {k: np.stack([ln[k] for ln in lanes]) for k in lanes[0]}
         keys = self._stacked_seed_keys(bases)
@@ -1443,6 +1720,7 @@ class FederatedTrainer:
             self.params, self.ctrl_state, jnp.array(self._battery0),
             jax.tree_util.tree_map(jnp.array, self._astate0),
             jax.tree_util.tree_map(jnp.array, self._fstate0),
+            jax.tree_util.tree_map(jnp.array, self._lstate0),
             self._data, keys, jnp.int32(eval_every), n_rounds=rounds)
         return {k: np.asarray(v) for k, v in outs.items()}
 
@@ -1467,12 +1745,13 @@ class FederatedTrainer:
                     bt = jnp.array(self._battery0)
                     ast = jax.tree_util.tree_map(jnp.array, self._astate0)
                     fst = jax.tree_util.tree_map(jnp.array, self._fstate0)
-                    _, _, _, _, _, outs = engine(p, st, bt, ast, fst,
-                                                 self._data, keys,
-                                                 jnp.int32(0),
-                                                 jnp.int32(rounds - 1),
-                                                 jnp.int32(eval_every),
-                                                 n_rounds=rounds)
+                    lst = jax.tree_util.tree_map(jnp.array, self._lstate0)
+                    _, _, _, _, _, _, outs = engine(p, st, bt, ast, fst, lst,
+                                                    self._data, keys,
+                                                    jnp.int32(0),
+                                                    jnp.int32(rounds - 1),
+                                                    jnp.int32(eval_every),
+                                                    n_rounds=rounds)
                     per_seed.append({k: np.asarray(v) for k, v in outs.items()})
                 lanes.append({k: np.stack([s[k] for s in per_seed])
                               for k in per_seed[0]})
@@ -1484,6 +1763,7 @@ class FederatedTrainer:
             self.params, states, jnp.array(self._battery0),
             jax.tree_util.tree_map(jnp.array, self._astate0),
             jax.tree_util.tree_map(jnp.array, self._fstate0),
+            jax.tree_util.tree_map(jnp.array, self._lstate0),
             self._data, keys, jnp.int32(eval_every), n_rounds=rounds)
         res = {k: np.asarray(v) for k, v in outs.items()}
         res["configs"] = echo

@@ -33,11 +33,16 @@ from .ref import _channel, ln_k_gamma_free, newton_snr
 N_SCALARS = 7
 (S_LAM, S_ETA, S_BTOT, S_SBITS, S_IBITS, S_N0, S_BLO) = range(N_SCALARS)
 
-def _best_response_block(P, h, u, ec, sc, *, gamma_grid, newton_iters):
+def _best_response_block(P, h, u, ec, sc, *, gamma_grid, newton_iters,
+                         es=None):
     """Shared kernel body math on loaded [1, BLK] values. ``sc`` indexes
     the scalar vector; ``ec`` is the per-client computation energy block
-    (zeros for the communication-only objective). Returns
-    (gamma*, b*, e*, phi*).
+    (zeros for the communication-only objective); ``es`` the optional
+    per-client outage pricing factor (``repro.core.link``), which scales
+    E_cmm and shifts the stationarity constant by ``-ln es`` (scaling
+    E_cmm by a is ``lam -> lam / a`` in the best-response — the shape of
+    the unroll is unchanged, the factor is scalar per grid point).
+    Returns (gamma*, b*, e*, phi*).
 
     The energy at the clipped best-response IS ``channel.comm_energy``
     plus the additive E_cmp term (``repro.core.energy``), called per
@@ -51,6 +56,8 @@ def _best_response_block(P, h, u, ec, sc, *, gamma_grid, newton_iters):
 
     c = chan.snr_coeff(P, h, n0)
     base = ln_k_gamma_free(P, h, n0=n0, b_tot=b_tot)   # hoisted over gammas
+    if es is not None:
+        base = base - jnp.log(es)                      # lam -> lam / es
     ln_lam = jnp.log(jnp.maximum(lam, 1e-30))
 
     best = None
@@ -59,7 +66,10 @@ def _best_response_block(P, h, u, ec, sc, *, gamma_grid, newton_iters):
         ln_k = ln_lam + base - jnp.log(D)
         t = newton_snr(ln_k, newton_iters)
         b = jnp.clip(c / (t * b_tot), b_lo, 1.0)
-        e = chan.comm_energy(g, b * b_tot, P, h, s_bits, i_bits, n0) + ec
+        e = chan.comm_energy(g, b * b_tot, P, h, s_bits, i_bits, n0)
+        if es is not None:
+            e = e * es
+        e = e + ec
         phi = e + lam * b - eta * u * g
         if best is None:
             best = (jnp.full_like(phi, g), b, e, phi)
@@ -86,34 +96,62 @@ def _dual_solve_kernel(sc_ref, p_ref, h_ref, u_ref, ec_ref,
     phi_ref[...] = phi
 
 
+def _dual_solve_kernel_scaled(sc_ref, p_ref, h_ref, u_ref, ec_ref, es_ref,
+                              gam_ref, b_ref, e_ref, phi_ref, *,
+                              gamma_grid, newton_iters):
+    """Outage-priced variant: a fifth per-client block input carries the
+    comm-energy pricing factor. A separate kernel (not a None default in
+    the unscaled one) so the legacy 4-input program stays byte-identical
+    when pricing is off."""
+    P = p_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    ec = ec_ref[...].astype(jnp.float32)
+    es = es_ref[...].astype(jnp.float32)
+    gam, b, e, phi = _best_response_block(
+        P, h, u, ec, sc_ref, gamma_grid=gamma_grid, newton_iters=newton_iters,
+        es=es)
+    gam_ref[...] = gam
+    b_ref[...] = b
+    e_ref[...] = e
+    phi_ref[...] = phi
+
+
 @functools.partial(jax.jit, static_argnames=("gamma_grid", "newton_iters",
                                              "block", "interpret"))
 def dual_solve_pallas(P: jnp.ndarray, h: jnp.ndarray, u_norms: jnp.ndarray,
-                      e_cmp: jnp.ndarray, scalars: jnp.ndarray, *,
+                      e_cmp: jnp.ndarray, scalars: jnp.ndarray,
+                      e_scale: jnp.ndarray = None, *,
                       gamma_grid: tuple, newton_iters: int = 3,
                       block: int = 128, interpret: bool = True):
     """P/h/u_norms/e_cmp: [n] with n % block == 0; scalars: [N_SCALARS]
     f32 (see the S_* layout). ``e_cmp`` is the per-client computation
-    energy (zeros => communication-only). Returns (gamma*, b*, e*,
-    phi*), each [n]."""
+    energy (zeros => communication-only); ``e_scale`` the optional [n]
+    outage pricing factor (None selects the legacy 4-input kernel, and
+    the None/array split keys separate jit traces). Returns (gamma*, b*,
+    e*, phi*), each [n]."""
     n = P.shape[0]
     assert n % block == 0 and scalars.shape == (N_SCALARS,), \
         (P.shape, scalars.shape)
     nb = n // block
     rows = lambda x: x.reshape(nb, block)
     blk = pl.BlockSpec((1, block), lambda i, sc: (i, 0))
+    n_in = 4 if e_scale is None else 5
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nb,),
-        in_specs=[blk, blk, blk, blk],
+        in_specs=[blk] * n_in,
         out_specs=[blk, blk, blk, blk],
     )
+    kern = _dual_solve_kernel if e_scale is None else _dual_solve_kernel_scaled
+    operands = [rows(P), rows(h), rows(u_norms), rows(e_cmp)]
+    if e_scale is not None:
+        operands.append(rows(e_scale))
     out = pl.pallas_call(
-        functools.partial(_dual_solve_kernel, gamma_grid=gamma_grid,
+        functools.partial(kern, gamma_grid=gamma_grid,
                           newton_iters=newton_iters),
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.float32)] * 4,
         interpret=interpret,
-    )(scalars.astype(jnp.float32), rows(P), rows(h), rows(u_norms),
-      rows(e_cmp))
+    )(scalars.astype(jnp.float32), *operands)
     return tuple(o.reshape(-1) for o in out)

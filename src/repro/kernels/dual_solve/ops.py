@@ -17,27 +17,33 @@ BLOCK = 128
 
 def dual_solve(P: jnp.ndarray, h: jnp.ndarray, u_norms: jnp.ndarray,
                lam: jnp.ndarray, *, gamma_grid: tuple, eta, b_tot, s_bits,
-               i_bits, n0, b_lo, newton_iters: int = 3, e_cmp=None):
+               i_bits, n0, b_lo, newton_iters: int = 3, e_cmp=None,
+               e_scale=None):
     """Same contract as ``ref.dual_solve_ref``: per-client
     ``(gamma*, b*, e*, phi*)`` at bandwidth price ``lam``. The gamma grid
     and Newton iteration count are static; every other scalar is traced
     (packed into the kernel's scalar-prefetch vector). ``e_cmp`` ([N],
-    optional) is the additive per-client computation energy. Pads the
-    client axis to the 128-lane block and truncates the outputs back."""
+    optional) is the additive per-client computation energy; ``e_scale``
+    ([N], optional) the multiplicative outage pricing factor
+    (``repro.core.link`` — None keeps the legacy 4-input kernel). Pads
+    the client axis to the 128-lane block and truncates the outputs
+    back."""
     n = P.shape[0]
     if e_cmp is None:
         e_cmp = jnp.zeros((n,), jnp.float32)
     pad = (-n) % BLOCK
     if pad:
         # padded lanes must stay finite through log/Newton: unit channel,
-        # zero score/comp. They are sliced off before anything consumes
-        # them.
+        # zero score/comp, unit pricing factor (it runs through a log).
+        # They are sliced off before anything consumes them.
         one = jnp.ones((pad,), jnp.float32)
         zero = jnp.zeros((pad,), jnp.float32)
         P = jnp.concatenate([P, one])
         h = jnp.concatenate([h, one])
         u_norms = jnp.concatenate([u_norms, zero])
         e_cmp = jnp.concatenate([e_cmp, zero])
+        if e_scale is not None:
+            e_scale = jnp.concatenate([e_scale.astype(jnp.float32), one])
     sc = jnp.zeros((N_SCALARS,), jnp.float32)
     sc = sc.at[S_LAM].set(lam).at[S_ETA].set(eta).at[S_BTOT].set(b_tot)
     sc = sc.at[S_SBITS].set(s_bits).at[S_IBITS].set(i_bits)
@@ -45,6 +51,7 @@ def dual_solve(P: jnp.ndarray, h: jnp.ndarray, u_norms: jnp.ndarray,
     gam, b, e, phi = dual_solve_pallas(
         P.astype(jnp.float32), h.astype(jnp.float32),
         u_norms.astype(jnp.float32), e_cmp.astype(jnp.float32), sc,
+        None if e_scale is None else e_scale.astype(jnp.float32),
         gamma_grid=tuple(gamma_grid), newton_iters=newton_iters,
         block=BLOCK, interpret=INTERPRET)
     return gam[:n], b[:n], e[:n], phi[:n]

@@ -127,7 +127,7 @@ def dual_solve_ref(P: Array, h: Array, u_norms: Array, lam: Array, *,
                    gamma_grid, eta: Array, b_tot: Array, s_bits: Array,
                    i_bits: Array, n0: Array, b_lo: Array,
                    newton_iters: int = 3, base: Array = None,
-                   e_cmp: Array = None):
+                   e_cmp: Array = None, e_scale: Array = None):
     """Per-client best response over the gamma grid — the jnp oracle for
     the Pallas kernel (and the solver's default jnp fast path).
 
@@ -145,16 +145,29 @@ def dual_solve_ref(P: Array, h: Array, u_norms: Array, lam: Array, *,
     (gamma, b)-independent additive term: E = E_cmm + E_cmp enters the
     objective and the returned energies, but never the bandwidth
     stationarity (``repro.core.energy``).
+
+    ``e_scale`` ([N], optional) is the outage-aware comm-energy pricing
+    factor (``repro.core.link``): E_cmm is multiplied per client, which
+    is exactly ``lam -> lam / e_scale`` inside the bandwidth
+    best-response — ``-ln e_scale`` is folded into the stationarity
+    constant. A caller-supplied ``base`` must already include that shift
+    (``repro.core.fairenergy`` hoists it out of the dual loop); when
+    ``base`` is None it is applied here.
     """
     grid = jnp.asarray(gamma_grid, jnp.float32)                  # [G]
     Pg, hg, ug = P[:, None], h[:, None], u_norms[:, None]        # [N,1]
     gam = jnp.broadcast_to(grid[None, :], (P.shape[0], grid.shape[0]))
+    if base is None and e_scale is not None:
+        base = ln_k_base(Pg, hg, gam, b_tot=b_tot, s_bits=s_bits,
+                         i_bits=i_bits, n0=n0) - jnp.log(e_scale)[:, None]
     b = bandwidth_best_response(lam, Pg, hg, gam, b_tot=b_tot,
                                 s_bits=s_bits, i_bits=i_bits, n0=n0,
                                 b_lo=b_lo, iters=newton_iters,
                                 base=base)                       # [N,G]
     e = _channel().comm_energy(gam, b * b_tot, Pg, hg,
                                s_bits, i_bits, n0)               # [N,G]
+    if e_scale is not None:
+        e = e * e_scale[:, None]                                 # priced comm
     if e_cmp is not None:
         e = e + e_cmp[:, None]                                   # total energy
     phi = e + lam * b - eta * ug * gam                           # [N,G]

@@ -21,6 +21,10 @@ partition concentration, and fading — into a preset addressable by name
                        defended aggregation on
 ``mobility``           tiered fleet of moving clients (3 dB RMS slow
                        pathloss drift on top of Rayleigh fading)
+``lossy-uplink``       Rayleigh packet outages + bounded HARQ
+                       retransmission charging real airtime energy
+``bursty-interference``  Gilbert-Elliott interference bursts raising the
+                       noise floor 20 dB, plus outages/retransmission
 =====================  =======================================================
 
 Everything a scenario draws (tier assignment, battery capacity) is a pure
@@ -69,6 +73,16 @@ class Scenario:
     # --- mobility knobs (repro.core.channel) ----------------------------
     mobility_sigma_db: float = 0.0           # RMS pathloss drift (dB); 0=off
     mobility_period: float = 40.0            # rounds per slowest drift cycle
+    # --- link-reliability knobs (repro.core.link) -----------------------
+    link_outage: bool = False                # Rayleigh packet-error outages
+    fade_margin_db: float = 6.0              # link-budget fade margin (dB)
+    max_retx: int = 2                        # HARQ retransmission budget
+    link_backoff_s: float = 0.0              # backoff slot between attempts
+    burst_p: float = 0.0                     # P[quiet -> burst] per round
+    burst_q: float = 0.5                     # P[burst -> quiet] per round
+    i_burst_n0: float = 0.0                  # burst interference / N0
+    observe_burst: bool = False              # controller sees burst channel
+    price_outage: bool = False               # expected-attempt solver pricing
 
     def device_profile(self, n: int, seed: int = 0) -> Optional[DeviceProfile]:
         """Build the [n]-client fleet, pure in ``seed``."""
@@ -138,6 +152,26 @@ class Scenario:
             return None
         from repro.core.channel import MobilityConfig
         return MobilityConfig(sigma_db=s, period_rounds=self.mobility_period)
+
+    def link_config(self, *, max_retx: Optional[int] = None,
+                    burst_p: Optional[float] = None,
+                    price_outage: Optional[bool] = None):
+        """The scenario's ``repro.core.link.LinkConfig`` (None when no
+        link knob is set — the trainer then compiles the exact legacy
+        lossless-uplink program). Explicit CLI overrides win over the
+        preset."""
+        from repro.core.link import LinkConfig
+        cfg = LinkConfig(
+            outage=self.link_outage,
+            fade_margin_db=self.fade_margin_db,
+            max_retx=max_retx if max_retx is not None else self.max_retx,
+            backoff_s=self.link_backoff_s,
+            burst_p=burst_p if burst_p is not None else self.burst_p,
+            burst_q=self.burst_q, i_burst_n0=self.i_burst_n0,
+            observe_burst=self.observe_burst,
+            price_outage=(price_outage if price_outage is not None
+                          else self.price_outage))
+        return cfg if cfg.enabled else None
 
     def defense_config(self, *, defended: Optional[bool] = None):
         """The scenario's ``repro.core.faults.DefenseConfig`` (None when
@@ -232,6 +266,25 @@ register_scenario(Scenario(
                 "log-normal pathloss drift (3 dB RMS shadowing, ~30-round "
                 "cycles) on top of per-round Rayleigh fading",
     profile="tiered", mobility_sigma_db=3.0, mobility_period=30.0))
+
+register_scenario(Scenario(
+    name="lossy-uplink",
+    description="tiered fleet over an unreliable uplink: Rayleigh packet "
+                "outages against a 5 dB fade margin, up to 2 HARQ "
+                "retransmissions per round (50 ms backoff slots) charging "
+                "real airtime energy; exhausted clients drop their update",
+    profile="tiered", link_outage=True, fade_margin_db=5.0, max_retx=2,
+    link_backoff_s=0.05))
+
+register_scenario(Scenario(
+    name="bursty-interference",
+    description="tiered fleet under Gilbert-Elliott bursty interference: "
+                "a (seed, round)-pure two-state chain (p=0.15, q=0.45) "
+                "raises the effective noise floor 20 dB in the burst "
+                "state while the controller still prices the quiet-state "
+                "channel; Rayleigh outages + 2 HARQ retransmissions",
+    profile="tiered", link_outage=True, fade_margin_db=6.0, max_retx=2,
+    burst_p=0.15, burst_q=0.45, i_burst_n0=99.0))
 
 register_scenario(Scenario(
     name="harvesting",

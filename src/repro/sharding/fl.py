@@ -174,6 +174,15 @@ def defense_state_specs(fstate) -> object:
     return replicated_specs(fstate)
 
 
+def link_state_specs(lstate) -> object:
+    """Spec pytree for the link-reliability scan carry
+    (``repro.core.link.LinkState``): the [N] Gilbert-Elliott burst mask
+    is drawn over the full client vector with a replicated key, so every
+    shard carries the identical chain. Accepts the empty carry ``()``
+    (link off) and returns ``()``."""
+    return replicated_specs(lstate)
+
+
 def shard_client_data(data, mesh: Mesh, axis: AxisSpec = CLIENTS_AXIS):
     """device_put the client stacks onto the mesh (client axis split
     across devices). The client count must already be mesh-divisible —

@@ -23,6 +23,11 @@ With no arguments every golden is rewritten; pass names (e.g.
 * ``mobility_fairenergy_12round.json`` — mobility channel physics: the
   mobility scenario's slow (seed, round)-pure pathloss drift on top of
   Rayleigh fading (repro.core.channel.MobilityConfig).
+* ``lossy_uplink_fairenergy_12round.json`` — link-reliability physics:
+  Rayleigh packet outages + bounded HARQ retransmission
+  (repro.core.link), with the retx/outage/goodput telemetry lanes.
+* ``bursty_interference_fairenergy_12round.json`` — Gilbert-Elliott
+  bursty interference on top of outages/retransmission.
 """
 import json
 import os
@@ -152,9 +157,50 @@ def regen_mobility():
     print("selected/round:", [int(lg.n_selected) for lg in tr.history])
 
 
+def _link_payload(tr, scenario):
+    return {
+        "rounds": ROUNDS,
+        "scenario": scenario,
+        "selected": [[int(b) for b in lg.selected] for lg in tr.history],
+        "total_energy": [float(lg.total_energy) for lg in tr.history],
+        "accuracy": [float(lg.accuracy) for lg in tr.history],
+        "n_retx": [int(lg.n_retx) for lg in tr.history],
+        "n_outage": [int(lg.n_outage) for lg in tr.history],
+        "goodput_frac": [float(lg.goodput_frac) for lg in tr.history],
+        "e_retx": [float(lg.e_retx) for lg in tr.history],
+    }
+
+
+def regen_lossy_uplink():
+    scn = get_scenario("lossy-uplink")
+    tr = make_trainer("fairenergy",
+                      device_profile=scn.device_profile(N_CLIENTS, seed=0),
+                      link_cfg=scn.link_config())
+    tr.run_scanned(ROUNDS, verbose=False)
+    _write("lossy_uplink_fairenergy_12round.json",
+           _link_payload(tr, "lossy-uplink"))
+    print("retx/round:", [int(lg.n_retx) for lg in tr.history])
+    print("outage/round:", [int(lg.n_outage) for lg in tr.history])
+
+
+def regen_bursty_interference():
+    scn = get_scenario("bursty-interference")
+    tr = make_trainer("fairenergy",
+                      device_profile=scn.device_profile(N_CLIENTS, seed=0),
+                      link_cfg=scn.link_config())
+    tr.run_scanned(ROUNDS, verbose=False)
+    _write("bursty_interference_fairenergy_12round.json",
+           _link_payload(tr, "bursty-interference"))
+    print("retx/round:", [int(lg.n_retx) for lg in tr.history])
+    print("goodput/round:", [round(float(lg.goodput_frac), 3)
+                             for lg in tr.history])
+
+
 GOLDENS = {"main": regen_main, "tiered": regen_tiered,
            "straggler": regen_straggler, "churn": regen_churn,
-           "byzantine": regen_byzantine, "mobility": regen_mobility}
+           "byzantine": regen_byzantine, "mobility": regen_mobility,
+           "lossy-uplink": regen_lossy_uplink,
+           "bursty-interference": regen_bursty_interference}
 
 
 def main(names=None):

@@ -404,3 +404,138 @@ else:
     @pytest.mark.parametrize("n,seed", [(5, 0), (8, 17), (13, 101)])
     def test_adversarial_observation_invariants(name, n, seed):
         run_adversarial_observation_invariants(name, n, seed)
+
+
+# ------------------------------------------ link subsystem (core.link) ----
+@pytest.mark.parametrize("name", available_controllers())
+def test_disabled_link_is_legacy_for_every_controller(name):
+    """A disabled ``LinkConfig`` must be a bit-for-bit no-op for EVERY
+    registered controller — current and future: the trainer resolves no
+    link runtime, carries the leafless () link state, and replays the
+    link-free trajectory exactly."""
+    from test_scan_engine import make_trainer
+    from repro.core.link import LinkConfig
+    kw = {"fixed_k": 3} if name in ("randomfull", "channelgreedy") else {}
+    a = make_trainer(name, **kw)
+    a.run_scanned(3, verbose=False)
+    b = make_trainer(name, link_cfg=LinkConfig(), **kw)
+    assert b._link_rt is None and b._lstate == ()
+    b.run_scanned(3, verbose=False)
+    for la, lb in zip(a.history, b.history):
+        np.testing.assert_array_equal(la.selected, lb.selected, err_msg=name)
+        np.testing.assert_array_equal(np.asarray(la.energy),
+                                      np.asarray(lb.energy), err_msg=name)
+        assert la.accuracy == lb.accuracy, name
+        assert lb.n_retx is None and lb.goodput_frac is None
+
+
+def run_attempt_accounting_invariants(seed):
+    """Charged airtime energy and elapsed time are monotone
+    non-decreasing in the attempt count for any (t_comm, P, backoff)
+    draw, and a single attempt charges exactly the lossless-link cost."""
+    from repro.core.link import attempt_energy, attempt_time
+    rng = np.random.default_rng(seed + 71)
+    n = 16
+    t1 = jnp.asarray(rng.uniform(1e-4, 1.0, n), jnp.float32)
+    P = jnp.asarray(rng.uniform(1e-5, 10.0, n), jnp.float32)
+    backoff = float(rng.choice([0.0, 1e-3, 0.5]))
+    prev_t = prev_e = None
+    for a in range(1, 6):
+        att = jnp.full((n,), a, jnp.int32)
+        t = np.asarray(attempt_time(att, t1, backoff))
+        e = np.asarray(attempt_energy(att, t1, P))
+        assert np.isfinite(t).all() and np.isfinite(e).all()
+        if a == 1:
+            np.testing.assert_allclose(t, np.asarray(t1), rtol=1e-6)
+            np.testing.assert_allclose(e, np.asarray(P * t1), rtol=1e-6)
+        else:
+            assert (t >= prev_t).all() and (e >= prev_e).all()
+        prev_t, prev_e = t, e
+
+
+def run_attempt_outcome_invariants(seed):
+    """Adversarial outage probabilities (exact 0/1 endpoints, near-1
+    values, mixed vectors): attempts always land in [1, max_retx+1],
+    stopping before the budget implies delivery, and the implied
+    goodput fraction attempts_delivered/attempts sits in [0, 1]."""
+    from repro.core.link import attempt_outcomes
+    rng = np.random.default_rng(seed + 13)
+    key = jax.random.PRNGKey(seed)
+    n = 32
+    for max_retx in (0, 1, 3):
+        p = jnp.asarray(rng.choice(
+            [0.0, 1e-7, 0.3, 0.999999, 1.0], n), jnp.float32)
+        att, dlv = attempt_outcomes(key, jnp.int32(seed % 97), p, max_retx)
+        a, d = np.asarray(att), np.asarray(dlv)
+        assert ((a >= 1) & (a <= max_retx + 1)).all()
+        assert d[a <= max_retx].all()
+        p_np = np.asarray(p)
+        assert d[p_np == 0.0].all()              # lossless always delivers
+        assert not d[p_np == 1.0].any()          # certain outage never does
+        good = d.sum() / max(a.sum(), 1)
+        assert 0.0 <= good <= 1.0
+
+
+if _HYP:
+    @given(seed=st.integers(0, 500))
+    @settings(max_examples=15, deadline=None)
+    def test_attempt_accounting_invariants(seed):
+        run_attempt_accounting_invariants(seed)
+
+    @given(seed=st.integers(0, 500))
+    @settings(max_examples=15, deadline=None)
+    def test_attempt_outcome_invariants(seed):
+        run_attempt_outcome_invariants(seed)
+else:
+    @pytest.mark.parametrize("seed", [0, 17, 101])
+    def test_attempt_accounting_invariants(seed):
+        run_attempt_accounting_invariants(seed)
+
+    @pytest.mark.parametrize("seed", [0, 17, 101])
+    def test_attempt_outcome_invariants(seed):
+        run_attempt_outcome_invariants(seed)
+
+
+def test_total_outage_never_aggregates_but_charges_energy():
+    """Certain outage (margin -> 0): retx-exhausted clients are NEVER in
+    the aggregate — params bitwise unchanged across rounds, every
+    selected client counted as an outage — while their attempt energy
+    still lands honestly (graceful degradation, not a free lunch)."""
+    from test_scan_engine import make_trainer, _flat
+    from repro.core.link import LinkConfig
+    tr = make_trainer("fairenergy",
+                      link_cfg=LinkConfig(outage=True, fade_margin_db=-600.0,
+                                          max_retx=2))
+    p0 = _flat(tr.params)
+    tr.run_scanned(3, verbose=False)
+    np.testing.assert_array_equal(p0, _flat(tr.params))
+    for lg in tr.history:
+        assert lg.n_outage == lg.n_selected
+        if lg.n_selected:
+            assert lg.goodput_frac == 0.0
+            assert lg.total_energy > 0.0
+
+
+@pytest.mark.parametrize("kw", [
+    dict(outage=True, fade_margin_db=0.0, max_retx=0),
+    dict(outage=True, fade_margin_db=3.0, max_retx=3, backoff_s=0.1),
+    dict(outage=True, fade_margin_db=6.0, max_retx=2,
+         burst_p=0.5, burst_q=0.2, i_burst_n0=999.0),
+    dict(outage=True, fade_margin_db=6.0, max_retx=2, burst_p=0.3,
+         burst_q=0.5, i_burst_n0=99.0, price_outage=True),
+])
+def test_engine_goodput_lawful_under_adversarial_links(kw):
+    """Hostile link configs (no margin, deep bursts, pricing on): the
+    engine's telemetry stays lawful — goodput in [0, 1], counts
+    non-negative, energies finite with retx energy part of the total."""
+    from test_scan_engine import make_trainer
+    from repro.core.link import LinkConfig
+    tr = make_trainer("fairenergy", link_cfg=LinkConfig(**kw))
+    tr.run_scanned(3, verbose=False)
+    for lg in tr.history:
+        assert 0.0 <= lg.goodput_frac <= 1.0, kw
+        assert lg.n_retx >= 0 and lg.n_outage >= 0, kw
+        assert lg.n_outage <= lg.n_selected, kw
+        e = np.asarray(lg.energy)
+        assert np.isfinite(e).all() and (e >= 0).all(), kw
+        assert 0.0 <= lg.e_retx <= lg.total_energy + 1e-12, kw

@@ -1,0 +1,77 @@
+"""Private PRNG stream registry (repro.core.streams).
+
+Every subsystem that draws its own (seed, round)-pure randomness folds a
+stream tag into the per-seed base key. The registry is the single source
+of those tags; these tests pin the contract a new subsystem must honour:
+
+* every tag is a distinct int (two streams sharing a tag would replay
+  each other's bits across every seed);
+* every tag sits at or above ``ROUND_SAFETY_MARGIN``, far outside the
+  round-index range folded later (a small tag would collide with
+  ``fold_in(base, r)`` of another stream);
+* the module-level constants and the ``STREAMS`` dict agree, and the
+  consuming modules (server engine, channel mobility) import their tags
+  from the registry rather than re-deriving them.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import streams
+
+
+def test_tags_unique_and_above_margin():
+    tags = list(streams.STREAMS.values())
+    assert len(tags) == len(set(tags)), "duplicate stream tags"
+    for name, tag in streams.STREAMS.items():
+        assert isinstance(tag, int), name
+        assert tag >= streams.ROUND_SAFETY_MARGIN, (name, tag)
+
+
+def test_constants_match_registry():
+    assert streams.STREAMS == {
+        "ctrl": streams.CTRL_STREAM,
+        "sample": streams.SAMPLE_STREAM,
+        "harvest": streams.HARVEST_STREAM,
+        "fault": streams.FAULT_STREAM,
+        "pool": streams.POOL_STREAM,
+        "mobility": streams.MOBILITY_STREAM,
+        "link": streams.LINK_STREAM,
+    }
+
+
+def test_validate_rejects_bad_registries():
+    with pytest.raises(TypeError):
+        streams.validate_streams({"a": 1 << 20, "b": "not-an-int"})
+    with pytest.raises(ValueError):                    # below the margin
+        streams.validate_streams({"a": 5})
+    with pytest.raises(ValueError):                    # duplicate tag
+        streams.validate_streams({"a": 1 << 20, "b": 1 << 20})
+    # the shipped registry validates (also runs at import)
+    streams.validate_streams()
+
+
+def test_consumers_import_registry_tags():
+    """The engine's aliases and the mobility stream must BE the registry
+    tags — re-derived literals could silently drift apart."""
+    import repro.fl.server as server
+    from repro.core import channel
+
+    assert server._CTRL_STREAM == streams.CTRL_STREAM
+    assert server._SAMPLE_STREAM == streams.SAMPLE_STREAM
+    assert server._HARVEST_STREAM == streams.HARVEST_STREAM
+    assert server._FAULT_STREAM == streams.FAULT_STREAM
+    assert server._POOL_STREAM == streams.POOL_STREAM
+    assert server._LINK_STREAM == streams.LINK_STREAM
+    assert channel._MOBILITY_STREAM == streams.MOBILITY_STREAM
+
+
+def test_stream_keys_are_pairwise_distinct():
+    """Folding each tag into one base key yields pairwise-distinct keys
+    (the property the registry exists to guarantee)."""
+    base = jax.random.PRNGKey(0)
+    keys = [np.asarray(jax.random.fold_in(base, t))
+            for t in streams.STREAMS.values()]
+    for i in range(len(keys)):
+        for j in range(i + 1, len(keys)):
+            assert not np.array_equal(keys[i], keys[j])
