@@ -33,11 +33,12 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
           deadline=None, staleness_a=None, fault_rate=None, crash_rate=None,
           churn=None, defense=None, clusters=None, pool_frac=None,
           mobility_sigma=None, max_retx=None, burst_p=None,
-          price_outage=None):
+          price_outage=None, bits_grid=None):
     cfg = CNN_FULL
     scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
     beta = scn.beta(0.3) if scn else 0.3
     ch_cfg = ChannelConfig(n_clients=n_clients)
+    fe_cfg = FairEnergyConfig()
     profile = None
     async_cfg = None
     fault_cfg = None
@@ -52,6 +53,7 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
             pool_frac=pool_frac if pool_frac is not None else 1.0)
     if scn:
         ch_cfg = scn.apply_channel(ch_cfg)
+        fe_cfg = scn.apply_fe(fe_cfg)
         profile = scn.device_profile(n_clients, seed=seed)
         async_cfg = scn.async_config(deadline_s=deadline,
                                      staleness_a=staleness_a)
@@ -85,6 +87,13 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
             burst_p=burst_p or 0.0, i_burst_n0=99.0 if burst_p else 0.0,
             price_outage=bool(price_outage))
         link_cfg = link_cfg if link_cfg.enabled else None
+    if bits_grid is not None:
+        # explicit CLI grid wins over the scenario preset: the solver's
+        # decision grid becomes the joint (gamma, bits) cross product and
+        # the engine quantizes payloads at the decided width
+        import dataclasses as _dc
+        fe_cfg = _dc.replace(fe_cfg,
+                             bits_grid=tuple(float(b) for b in bits_grid))
     imgs, labels = make_fmnist_like(n_train, seed=seed, **DATA_KW)
     ti, tl = make_fmnist_like(n_test, seed=seed + 999,
                               **dict(DATA_KW, label_noise=0.0))
@@ -105,7 +114,7 @@ def build(n_clients=20, rounds=60, n_train=12000, n_test=2000, seed=0,
     def make(controller, **kw):
         return FederatedTrainer(model_loss=loss_fn, model_params=params,
                                 client_datasets=datasets, eval_fn=eval_fn,
-                                fl_cfg=fl_cfg, fe_cfg=FairEnergyConfig(),
+                                fl_cfg=fl_cfg, fe_cfg=fe_cfg,
                                 ch_cfg=ch_cfg, controller=controller,
                                 seed=seed, mesh=mesh, device_profile=profile,
                                 async_cfg=async_cfg, fault_cfg=fault_cfg,
@@ -191,6 +200,12 @@ def run_all(n_clients=20, rounds=60, target=0.80, seed=0, verbose=True,
                 mean_goodput_frac=float(np.mean([lg.goodput_frac
                                                  for lg in tr.history])),
                 e_retx_J=float(sum(lg.e_retx for lg in tr.history)))
+        if tr.history and tr.history[0].bits is not None:
+            sel_bits = [b for lg in tr.history
+                        for b in lg.bits[lg.selected]]
+            results["strategies"][name].update(
+                mean_bits=float(np.mean(sel_bits)) if sel_bits else 32.0,
+                e_saved_J=float(sum(lg.e_saved for lg in tr.history)))
 
     if sweep_seeds:
         sweep = {"seeds": [int(s) for s in sweep_seeds], "strategies": {}}
@@ -283,6 +298,10 @@ def summarize(res):
             print(f"{'':14s}link: {s['n_retx']} retx, {s['n_outage']} "
                   f"outages, goodput {s['mean_goodput_frac']:.2f}, "
                   f"retx energy {s['e_retx_J']*1e3:.3f} mJ")
+        if "mean_bits" in s:
+            print(f"{'':14s}quantized: mean width "
+                  f"{s['mean_bits']:.1f} bits, "
+                  f"{s['e_saved_J']*1e3:.3f} mJ saved vs 32-bit payloads")
     fe = res["strategies"]["fairenergy"].get("energy_to_target_J")
     for base in ("scoremax", "ecorandom"):
         bt = res["strategies"].get(base, {}).get("energy_to_target_J")
@@ -384,6 +403,13 @@ if __name__ == "__main__":
                     help="fold the expected attempt count 1/(1-p_out) into "
                          "the solver's comm-energy pricing (outage-aware "
                          "selection); overrides the scenario preset")
+    ap.add_argument("--bits-grid", default=None,
+                    help="comma-separated quantization widths (e.g. "
+                         "'8,16,32'): crossed with gamma_grid into the "
+                         "solver's joint (gamma, bits) decision grid "
+                         "(payload gamma*S*bits/32 + I); the engine "
+                         "transmits symmetric fixed-point updates at the "
+                         "decided width; overrides the scenario preset")
     ap.add_argument("--mobility-sigma", type=float, default=None,
                     help="slow pathloss drift RMS in dB "
                          "(repro.core.channel.MobilityConfig); overrides "
@@ -421,6 +447,8 @@ if __name__ == "__main__":
               pool_frac=a.pool_frac, mobility_sigma=a.mobility_sigma,
               max_retx=a.max_retx, burst_p=a.burst_p,
               price_outage=a.price_outage,
+              bits_grid=([float(b) for b in a.bits_grid.split(",")]
+                         if a.bits_grid else None),
               sweep_seeds=list(range(a.seeds)) if a.seeds else None,
               config_sweep=config_sweep)
     if a.paper:

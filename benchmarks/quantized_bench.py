@@ -1,0 +1,216 @@
+"""Macrobenchmark: joint (gamma, bits) compression vs gamma-only.
+
+Three accuracy arms on the same model / data / controller (fairenergy),
+subprocess-per-arm on the shared harness, differing ONLY in the
+controller's decision grid:
+
+* ``gamma_only`` — the legacy scalar grid (``bits_grid=(32.0,)``): every
+  payload ships full fp32 coefficients;
+* ``joint_16_32`` — the dual solver may halve the payload per client
+  per round (16-bit values at fidelity 1 - 2^-15);
+* ``joint_8_16_32`` — the full joint grid down to int8 payloads.
+
+No device profile is attached, so the logged per-round energy is pure
+uplink communication energy — the quantity the joint grid trades
+against the fidelity-discounted contribution score. The headline is the
+``joint_8_16_32`` total comm energy as a fraction of ``gamma_only``
+(budget: strictly < 1) at matched final accuracy (budget: ratio
+>= 0.98 of the gamma-only arm — the fidelity model predicts near-zero
+accuracy cost at these widths). A separate **overhead** pair times the
+fused scan with the quantized path *disabled* (explicit fp32 grid)
+against the legacy trainer — a ``(32.0,)`` grid must compile the
+identical program, so the budget is a tight <= 2%.
+
+Writes ``BENCH_quantized.json`` at the repo root (skipped under
+``--fast``, the CI smoke mode).
+
+  PYTHONPATH=src python -m benchmarks.quantized_bench [--fast] [--out PATH]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+try:
+    from _harness import base_parser, emit, run_worker, stamp, time_interleaved
+except ImportError:                  # python -m benchmarks.quantized_bench
+    from benchmarks._harness import (base_parser, emit, run_worker, stamp,
+                                     time_interleaved)
+
+ARMS = {
+    "gamma_only": (32.0,),
+    "joint_16_32": (16.0, 32.0),
+    "joint_8_16_32": (8.0, 16.0, 32.0),
+}
+
+
+# ------------------------------------------------------------ workers ----
+def _make_trainer(n_clients: int, seed: int, bits_grid):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import ChannelConfig, FairEnergyConfig, FLConfig
+    from repro.fl import FederatedTrainer
+
+    D_IN, D_HID, N_CLS, SHARD = 64, 128, 10, 160
+    rng = np.random.default_rng(7)        # fixed model/data across seeds
+    params = {"w1": jnp.asarray(rng.normal(size=(D_IN, D_HID))
+                                .astype(np.float32) * 0.05),
+              "w2": jnp.asarray(rng.normal(size=(D_HID, N_CLS))
+                                .astype(np.float32) * 0.05)}
+    # Fixed random linear teacher so accuracy genuinely climbs — a
+    # quantization-degraded update then costs real progress, not noise.
+    teacher = rng.normal(size=(D_IN, N_CLS)).astype(np.float32)
+
+    def draw(n):
+        x = rng.normal(size=(n, D_IN)).astype(np.float32)
+        logits = x @ teacher + 0.5 * rng.normal(size=(n, N_CLS))
+        return x, logits.argmax(-1)
+
+    datasets = []
+    for _ in range(n_clients):
+        x, y = draw(SHARD)
+        datasets.append({"x": x, "y": y})
+    tx, ty = draw(512)
+    tx, ty = jnp.asarray(tx), jnp.asarray(ty)
+
+    def loss_fn(p, b):
+        hid = jnp.tanh(b["x"] @ p["w1"])
+        ll = jax.nn.log_softmax(hid @ p["w2"])
+        return -jnp.mean(jnp.take_along_axis(ll, b["y"][:, None], 1)), {}
+
+    def eval_fn(p):
+        lg = jnp.tanh(tx @ p["w1"]) @ p["w2"]
+        return jnp.mean((jnp.argmax(lg, -1) == ty).astype(jnp.float32))
+
+    return FederatedTrainer(
+        model_loss=loss_fn, model_params=params, client_datasets=datasets,
+        eval_fn=eval_fn,
+        fl_cfg=FLConfig(local_steps=2, local_batch=32, lr=0.05),
+        fe_cfg=FairEnergyConfig(bits_grid=tuple(bits_grid)),
+        ch_cfg=ChannelConfig(n_clients=n_clients),
+        controller="fairenergy", seed=seed)
+
+
+def _worker_accuracy(arm: str, n_clients: int, rounds: int,
+                     seeds: int) -> None:
+    """One accuracy arm over all seeds. Prints one JSON line."""
+    import numpy as np
+
+    per_seed = []
+    for seed in range(seeds):
+        tr = _make_trainer(n_clients, seed, ARMS[arm])
+        tr.run_scanned(rounds, verbose=False)
+        s = {"final_acc": round(float(tr.history[-1].accuracy), 4),
+             "best_acc": round(max(float(lg.accuracy)
+                                   for lg in tr.history), 4),
+             # no device profile: total energy IS uplink comm energy
+             "comm_energy_J": round(float(sum(lg.total_energy
+                                              for lg in tr.history)), 6)}
+        if tr.history[0].bits is not None:
+            sel_bits = np.concatenate(
+                [np.asarray(lg.bits)[lg.selected.astype(bool)]
+                 for lg in tr.history])
+            s["mean_bits"] = round(float(sel_bits.mean()), 2)
+            s["e_saved_J"] = round(float(sum(lg.e_saved
+                                             for lg in tr.history)), 6)
+        per_seed.append(s)
+
+    def mean(k):
+        vals = [s[k] for s in per_seed if k in s]
+        return round(float(np.mean(vals)), 6) if vals else None
+
+    print(json.dumps({
+        "arm": arm, "bits_grid": list(ARMS[arm]),
+        "n_clients": n_clients, "rounds": rounds,
+        "final_acc_mean": mean("final_acc"),
+        "best_acc_mean": mean("best_acc"),
+        "comm_energy_J_mean": mean("comm_energy_J"),
+        "mean_bits": mean("mean_bits"),
+        "e_saved_J_mean": mean("e_saved_J"),
+        "per_seed": per_seed}))
+
+
+def _run_overhead_pair(n_clients: int, rounds: int, reps: int = 3) -> dict:
+    """Host wall-clock of the fused scan: explicit fp32 bits_grid (the
+    Python gate must compile the identical legacy program) vs the plain
+    legacy trainer. Interleaved best-of-reps timing; budget <= 2%."""
+    tr_legacy = _make_trainer(n_clients, 0, (32.0,))
+    import dataclasses as _dc
+
+    from repro.configs import FairEnergyConfig
+    assert _dc.asdict(FairEnergyConfig(bits_grid=(32.0,))) == \
+        _dc.asdict(tr_legacy.fe_cfg)  # arms differ only in construction
+    tr_off = _make_trainer(n_clients, 0, (32.0,))
+    assert tr_off._quant_rt is None
+    best = time_interleaved(
+        {"legacy": lambda: tr_legacy.run_scanned(rounds, verbose=False),
+         "quant_disabled": lambda: tr_off.run_scanned(rounds, verbose=False)},
+        reps=reps)
+    return {
+        "rounds": rounds,
+        "legacy_rounds_per_sec": round(rounds / best["legacy"], 2),
+        "quant_disabled_rounds_per_sec": round(
+            rounds / best["quant_disabled"], 2),
+        "overhead_pct": round(
+            100.0 * (best["quant_disabled"] / best["legacy"] - 1.0), 2),
+    }
+
+
+# ------------------------------------------------------- orchestrator ----
+def bench(n_clients, rounds, seeds, overhead_rounds, fast=False) -> dict:
+    arms = {}
+    for arm in ARMS:
+        arms[arm] = run_worker(
+            __file__, ["--task", "accuracy", "--arm", arm,
+                       "--clients", n_clients, "--rounds", rounds,
+                       "--seeds", seeds])
+        print(f"{arm}: final_acc {arms[arm]['final_acc_mean']} "
+              f"comm_E {arms[arm]['comm_energy_J_mean']} "
+              f"mean_bits {arms[arm]['mean_bits']}", file=sys.stderr)
+
+    ref = arms["gamma_only"]
+    for arm in ("joint_16_32", "joint_8_16_32"):
+        arms[arm]["acc_vs_gamma_only"] = (
+            round(arms[arm]["final_acc_mean"] / ref["final_acc_mean"], 4)
+            if ref["final_acc_mean"] else None)
+        arms[arm]["energy_vs_gamma_only"] = round(
+            arms[arm]["comm_energy_J_mean"] / ref["comm_energy_J_mean"], 4)
+
+    res = stamp({
+        "workload": "softmax teacher-labeled fleet / fairenergy with a "
+                    "joint (gamma, bits) decision grid",
+        "fast": fast,
+        "n_clients": n_clients, "rounds": rounds, "seeds": seeds,
+        "arms": arms,
+        "overhead": _run_overhead_pair(n_clients, overhead_rounds),
+    })
+    j = arms["joint_8_16_32"]
+    res["headline"] = {
+        "joint_comm_energy_ratio": j["energy_vs_gamma_only"],
+        "joint_acc_retention": j["acc_vs_gamma_only"],
+        "joint_mean_bits": j["mean_bits"],
+        "joint_e_saved_J": j["e_saved_J_mean"],
+    }
+    return res
+
+
+def main() -> None:
+    ap = base_parser("BENCH_quantized.json", task="accuracy",
+                     arm="gamma_only", clients=40, rounds=12, seeds=3)
+    a = ap.parse_args()
+    if a.worker:
+        _worker_accuracy(a.arm, a.clients, a.rounds, a.seeds)
+        return
+    if a.fast:
+        res = bench(n_clients=8, rounds=6, seeds=1, overhead_rounds=4,
+                    fast=True)
+    else:
+        res = bench(n_clients=a.clients, rounds=a.rounds, seeds=a.seeds,
+                    overhead_rounds=a.rounds)
+    emit(res, a.out, a.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -158,6 +158,15 @@ class FairEnergyConfig:
     # RoundDecision.fallback. Off by default: zero extra ops, and golden
     # trajectories legitimately hit the cap while still converging.
     solver_fallback: bool = False
+    # joint (gamma, bits) compression: quantization bit-widths crossed
+    # with gamma_grid into the flat decision grid (kernels.dual_solve
+    # .ref.joint_levels). Each level charges the channel the payload
+    # gamma*S*(bits/32) + I and earns the fidelity-discounted score
+    # gamma*(1 - 2^(1-bits)); the decided width rides in
+    # RoundDecision.bits and the engine quantizes the sparse update at
+    # it before aggregation. The default (32.0,) compiles the exact
+    # legacy gamma-only program (golden-pinned bit-for-bit).
+    bits_grid: Tuple[float, ...] = (32.0,)
 
 
 @dataclass(frozen=True)

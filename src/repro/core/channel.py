@@ -68,8 +68,19 @@ def bandwidth_from_snr(c: Array, t: Array) -> Array:
     return c / t
 
 
-def payload_bits(gamma: Array, s_bits: float, i_bits: float) -> Array:
-    return gamma * s_bits + i_bits
+def payload_bits(gamma: Array, s_bits: float, i_bits: float,
+                 value_bits=None) -> Array:
+    """The single payload accounting: ``gamma*S*(value_bits/32) + I``.
+
+    ``S = s_bits`` is the full-precision (32-bit-coefficient) model size
+    in bits and ``I`` the index/mask overhead, which quantization cannot
+    shrink. ``value_bits`` (scalar or per-client array; ``None`` means
+    the legacy uncompressed 32) scales only the value payload — the
+    joint (gamma, bits) solver and the quantized wire path both charge
+    through here, so ratio and bit-width accounting can never drift."""
+    if value_bits is None:
+        return gamma * s_bits + i_bits
+    return gamma * (jnp.asarray(value_bits) / 32.0) * s_bits + i_bits
 
 
 def comm_time(gamma: Array, B: Array, P: Array, h: Array, s_bits: float,

@@ -61,13 +61,27 @@ DEFAULT_TIERS: Tuple[Tuple[str, float, float, float], ...] = (
     ("high", 2.0e9, DEFAULT_KAPPA, DEFAULT_CYCLES),
 )
 
+#: per-tier default uplink quantization width (bits/coefficient), aligned
+#: with DEFAULT_TIERS: constrained low-tier devices ship int8 payloads,
+#: mid-tier 16-bit, high-tier full fp32. Opt-in — profiles carry
+#: ``bits=None`` unless a constructor is asked for tier widths, and the
+#: engine's quantized path stays compiled out.
+DEFAULT_TIER_BITS: Tuple[float, ...] = (8.0, 16.0, 32.0)
+
 
 class DeviceProfile(NamedTuple):
-    """Per-client device parameters, array-of-structs ([N] f32 each)."""
+    """Per-client device parameters, array-of-structs ([N] f32 each).
+
+    ``bits`` (optional) is the per-client default uplink quantization
+    width: what the device transmits at when the controller does not
+    carry a joint (gamma, bits) decision of its own. ``None`` (the
+    default on every constructor) means full 32-bit payloads and keeps
+    the engine's quantized-aggregation path compiled out entirely."""
     freq: Array      # CPU frequency f_i (cycles/s)
     kappa: Array     # effective switched capacitance kappa_i
     cycles: Array    # CPU cycles per training sample C_i
     battery: Array   # battery capacity (J); inf = unlimited
+    bits: Optional[Array] = None  # default payload width (bits/coeff)
 
     @property
     def n_clients(self) -> int:
@@ -87,26 +101,43 @@ def comp_energy(profile: DeviceProfile, n_samples) -> Array:
 def uniform_profile(n: int, *, freq_hz: float = DEFAULT_FREQ_HZ,
                     kappa: float = DEFAULT_KAPPA,
                     cycles: float = DEFAULT_CYCLES,
-                    battery_j: float = UNLIMITED_J) -> DeviceProfile:
-    """Homogeneous fleet: every device at the same operating point."""
+                    battery_j: float = UNLIMITED_J,
+                    bits: Optional[float] = None) -> DeviceProfile:
+    """Homogeneous fleet: every device at the same operating point.
+    ``bits`` (optional) sets one default uplink quantization width for
+    the whole fleet; None keeps full-precision payloads."""
     full = lambda v: jnp.full((n,), v, jnp.float32)
     return DeviceProfile(freq=full(freq_hz), kappa=full(kappa),
-                         cycles=full(cycles), battery=full(battery_j))
+                         cycles=full(cycles), battery=full(battery_j),
+                         bits=None if bits is None else full(float(bits)))
 
 
 def tiered_profile(n: int, *, seed: int = 0,
                    tiers: Sequence[Tuple[str, float, float, float]] = DEFAULT_TIERS,
-                   battery_j: float = UNLIMITED_J) -> DeviceProfile:
+                   battery_j: float = UNLIMITED_J,
+                   tier_bits: Optional[Sequence[float]] = None) -> DeviceProfile:
     """Heterogeneous fleet: each client drawn uniformly into a CPU tier.
 
     The tier assignment is a pure function of ``seed`` via a private rng
     stream — building a tiered profile next to a ``WirelessNetwork`` with
-    the same seed does not perturb the network's draws."""
+    the same seed does not perturb the network's draws.
+
+    ``tier_bits`` (optional, aligned with ``tiers`` — e.g.
+    ``DEFAULT_TIER_BITS``) attaches per-tier default uplink quantization
+    widths to the same assignment draw; None keeps full-precision
+    payloads (``DeviceProfile.bits=None``, no engine change)."""
     rng = np.random.default_rng(seed + _TIER_STREAM)
     idx = rng.integers(0, len(tiers), n)
     pick = lambda col: jnp.asarray([tiers[i][col] for i in idx], jnp.float32)
+    bits = None
+    if tier_bits is not None:
+        if len(tier_bits) != len(tiers):
+            raise ValueError(f"tier_bits has {len(tier_bits)} entries for "
+                             f"{len(tiers)} tiers")
+        bits = jnp.asarray([float(tier_bits[i]) for i in idx], jnp.float32)
     return DeviceProfile(freq=pick(1), kappa=pick(2), cycles=pick(3),
-                         battery=jnp.full((n,), battery_j, jnp.float32))
+                         battery=jnp.full((n,), battery_j, jnp.float32),
+                         bits=bits)
 
 
 def with_batteries(profile: DeviceProfile, capacity_j, *,
@@ -131,15 +162,19 @@ def with_batteries(profile: DeviceProfile, capacity_j, *,
 def make_profile(kind: Optional[str], n: int, *, seed: int = 0,
                  battery_j: float = UNLIMITED_J) -> Optional[DeviceProfile]:
     """String-keyed constructor (``WirelessNetwork(device_profile="tiered")``
-    convenience): "uniform" | "tiered" | None."""
+    convenience): "uniform" | "tiered" | "tiered-q" (tiered with the
+    DEFAULT_TIER_BITS per-tier uplink widths) | None."""
     if kind is None or kind == "none":
         return None
     if kind == "uniform":
         return uniform_profile(n, battery_j=battery_j)
     if kind == "tiered":
         return tiered_profile(n, seed=seed, battery_j=battery_j)
+    if kind in ("tiered-q", "tiered_q"):
+        return tiered_profile(n, seed=seed, battery_j=battery_j,
+                              tier_bits=DEFAULT_TIER_BITS)
     raise ValueError(f"unknown device profile kind {kind!r}; "
-                     "expected 'uniform', 'tiered', or None")
+                     "expected 'uniform', 'tiered', 'tiered-q', or None")
 
 
 def alive_mask(battery: Array) -> Array:

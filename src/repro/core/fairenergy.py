@@ -73,6 +73,10 @@ class RoundDecision(NamedTuple):
                              # degradation fallback (diverged duals or a
                              # non-finite observation); always False unless
                              # FEStatic.fallback compiled the guard in
+    bits: Array = None       # [N] decided quantization bit-width (valid
+                             # where selected; 0 elsewhere) — None unless
+                             # FEStatic.bits_grid widens the decision to
+                             # the joint (gamma, bits) grid
 
 
 class FEParams(NamedTuple):
@@ -104,6 +108,10 @@ class FEStatic(NamedTuple):
     solver: str          # "newton" | "gss"
     use_pallas: bool
     fallback: bool = False  # compile the divergence/NaN guard + eco fallback
+    bits_grid: tuple = (32.0,)  # quantization bit-widths; (32.0,) keeps
+                                # the exact legacy gamma-only program,
+                                # anything else compiles the flat joint
+                                # (gamma, bits) grid (ref.joint_levels)
 
 
 class ControllerState(NamedTuple):
@@ -137,7 +145,9 @@ def static_of(cfg) -> FEStatic:
                     gss_iters=int(cfg.gss_max_iters),
                     solver=solver,
                     use_pallas=bool(getattr(cfg, "use_pallas_solver", False)),
-                    fallback=bool(getattr(cfg, "solver_fallback", False)))
+                    fallback=bool(getattr(cfg, "solver_fallback", False)),
+                    bits_grid=tuple(float(b) for b in
+                                    getattr(cfg, "bits_grid", (32.0,))))
 
 
 def init_state(cfg, n_clients: int, *, b_tot: float = None,
@@ -238,9 +248,28 @@ def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
     hg = h[:, None]
     gam = jnp.broadcast_to(grid[None, :], (N, G))
 
+    # joint (gamma, bits) decision grid — Python-level gate: the default
+    # (32.0,) bits_grid compiles the exact legacy gamma-only program.
+    # Each flat level (ref.joint_levels, gamma-major) charges the channel
+    # at the payload-equivalent gamma g*bits/32 and earns the fidelity-
+    # discounted score gamma*fid(bits) (ref.score_fidelity).
+    joint = tuple(static.bits_grid) != (32.0,)
+    if joint:
+        levels = _ds_ref.joint_levels(static.gamma_grid, static.bits_grid)
+        L = len(levels)
+        row = lambda vals: jnp.broadcast_to(
+            jnp.asarray(vals, jnp.float32)[None, :], (N, L))
+        gam = row([g for g, _ in levels])
+        gam_bits = row([bt for _, bt in levels])
+        gam_pay = row([g * bt / 32.0 for g, bt in levels])
+        fid_row = jnp.asarray([1.0 - 2.0 ** (1.0 - bt) for _, bt in levels],
+                              jnp.float32)
+    else:
+        gam_pay, gam_bits, fid_row = gam, None, None
+
     def energy_of(b_frac):                                   # [N,G] fractions
-        return comm_energy(gam, b_frac * p.b_tot, Pg, hg, p.s_bits, p.i_bits,
-                           p.n0)
+        return comm_energy(gam_pay, b_frac * p.b_tot, Pg, hg, p.s_bits,
+                           p.i_bits, p.n0)
 
     # outage-aware pricing (repro.core.link, price_outage): the expected-
     # attempt factor multiplies E_cmm per client. Python-level gate: the
@@ -252,6 +281,14 @@ def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
         return e if es_col is None else e * es_col
 
     score = contribution_score(u_norms[:, None], gam)        # [N,G]
+    if joint:
+        score = score * fid_row[None, :]
+
+    def sel_score(gamma_i, bits_i):
+        """The selection-threshold score at the decided grid level —
+        fidelity-discounted when the joint grid is on."""
+        s = contribution_score(u_norms, gamma_i)
+        return s * _ds_ref.score_fidelity(bits_i) if joint else s
 
     def best_response_gss(lam):
         """Reference oracle: blind GSS on the unimodal phi (Sec. V-C).
@@ -260,18 +297,19 @@ def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
         def phi_b(b_frac):
             return priced_energy_of(b_frac) + lam * b_frac   # score term const wrt b
         b_star, phi_star = golden_section_minimize(
-            phi_b, jnp.full((N, G), b_lo), 1.0, iters=static.gss_iters)
+            phi_b, jnp.full(gam.shape, b_lo), 1.0, iters=static.gss_iters)
         phi_full = phi_star + e_cmp[:, None] - eta * score   # [N,G]
         g_idx = jnp.argmin(phi_full, axis=1)                 # [N]
         take = lambda t: jnp.take_along_axis(t, g_idx[:, None], 1)[:, 0]
-        return (take(gam), take(b_star),
-                take(priced_energy_of(b_star)) + e_cmp, take(phi_full))
+        out = (take(gam), take(b_star),
+               take(priced_energy_of(b_star)) + e_cmp, take(phi_full))
+        return out + (take(gam_bits),) if joint else out
 
     # lam-independent stationarity constant, hoisted out of the dual loop
     # (a loop-invariant while_loop operand; the Pallas kernel recomputes
     # it in-register instead — one fused launch, no [N, G] HBM operand)
     nt_base = None if (static.solver == "gss" or static.use_pallas) else \
-        _ds_ref.ln_k_base(Pg, hg, gam, b_tot=p.b_tot, s_bits=p.s_bits,
+        _ds_ref.ln_k_base(Pg, hg, gam_pay, b_tot=p.b_tot, s_bits=p.s_bits,
                           i_bits=p.i_bits, n0=p.n0)
     if nt_base is not None and e_scale is not None:
         # scaling E_cmm by a is lam -> lam/a in the best-response: fold
@@ -283,6 +321,8 @@ def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
         """Analytic best-response: Newton on the SNR stationarity."""
         fn = _ds_ops.dual_solve if static.use_pallas else _ds_ref.dual_solve_ref
         kw = {} if static.use_pallas else {"base": nt_base}
+        if joint:
+            kw["bits_grid"] = static.bits_grid
         return fn(P, h, u_norms, lam, gamma_grid=static.gamma_grid,
                   eta=eta, b_tot=p.b_tot, s_bits=p.s_bits, i_bits=p.i_bits,
                   n0=p.n0, b_lo=b_lo, newton_iters=static.newton_iters,
@@ -292,8 +332,10 @@ def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
                      else best_response_newton)
 
     def dual_step(lam, mu):
-        gamma_i, b_i, e_i, _ = best_response(lam)
-        x = (e_i + lam * b_i < eta * contribution_score(u_norms, gamma_i)
+        out = best_response(lam)
+        gamma_i, b_i, e_i = out[0], out[1], out[2]
+        bits_i = out[4] if joint else None
+        x = (e_i + lam * b_i < eta * sel_score(gamma_i, bits_i)
              + mu * (1.0 - rho)) & alive
         xf = x.astype(jnp.float32)
         # Algorithm 1 line 11: bandwidth dual (normalized budget = 1)
@@ -356,8 +398,10 @@ def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
 
     def extract_primal(lam, mu):
         """Final primal extraction at converged duals + greedy repair."""
-        gamma_i, b_i, e_i, _ = best_response(lam)
-        benefit = eta * contribution_score(u_norms, gamma_i) \
+        out = best_response(lam)
+        gamma_i, b_i, e_i = out[0], out[1], out[2]
+        bits_i = out[4] if joint else None
+        benefit = eta * sel_score(gamma_i, bits_i) \
             + mu * (1.0 - rho) - e_i - lam * b_i
         x = (benefit > 0) & alive
 
@@ -383,7 +427,9 @@ def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
         dec = RoundDecision(x=x, gamma=jnp.where(x, gamma_i, 0.0),
                             bandwidth=bandwidth, energy=energy, lam=lam,
                             mu=mu, n_inner=n_inner,
-                            bw_used=jnp.sum(bandwidth))
+                            bw_used=jnp.sum(bandwidth),
+                            bits=(jnp.where(x, bits_i, 0.0) if joint
+                                  else None))
         return dec, q_new
 
     if not static.fallback:
@@ -423,12 +469,16 @@ def _solve_round(u_norms: Array, h: Array, P: Array, alive: Array,
         bw = xf_fb * b_each * p.b_tot
         # duals revert to the warm-start state: the diverged iterates are
         # exactly what must not seed the next round
+        # fallback transmits uncompressed-width payloads (e_fb charges the
+        # full 32-bit model), so the decided width is 32 where selected
         dec = RoundDecision(x=x_fb, gamma=jnp.where(x_fb, g_fb, 0.0),
                             bandwidth=bw,
                             energy=jnp.where(x_fb, e_fb, 0.0),
                             lam=state.lam, mu=state.mu, n_inner=n_inner,
                             bw_used=jnp.sum(bw),
-                            fallback=jnp.zeros((), bool))
+                            fallback=jnp.zeros((), bool),
+                            bits=(jnp.where(x_fb, 32.0, 0.0) if joint
+                                  else None))
         q_fb = jnp.where(obs_ok, rho * state.q + (1.0 - rho) * xf_fb,
                          state.q)
         return dec, q_fb

@@ -187,7 +187,9 @@ class SampledController:
             energy=zf.at[idx].set(dec_p.energy),
             lam=dec_p.lam, mu=zf.at[idx].set(dec_p.mu),
             n_inner=dec_p.n_inner, bw_used=dec_p.bw_used,
-            fallback=dec_p.fallback)
+            fallback=dec_p.fallback,
+            bits=(None if dec_p.bits is None
+                  else zf.at[idx].set(dec_p.bits)))
 
         new_inner = _scatter_state(state.inner, new_pstate, idx, n)
         if hasattr(self.inner, "observe_unsampled"):

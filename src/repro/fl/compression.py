@@ -16,6 +16,7 @@ Both return a dense masked vector (simulation form) plus the kept count;
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -36,8 +37,11 @@ def _global_topk_mask(vec: Array, k: int) -> Array:
 
 
 def global_topk(vec: Array, gamma: float) -> tuple[Array, int]:
+    # ceil keep rule, identical to block_topk/batch_block_topk/
+    # effective_gamma: round() transmitted *less* than the gamma*S
+    # payload the energy model charges at off-integer gamma*n
     n = vec.shape[0]
-    k = max(1, int(round(float(gamma) * n)))
+    k = min(n, max(1, int(math.ceil(float(gamma) * n))))
     mask = _global_topk_mask(vec, k)
     return vec * mask.astype(vec.dtype), k
 
@@ -100,7 +104,14 @@ def batch_block_topk(mat: Array, gamma: Array, block: int = DEFAULT_BLOCK,
 
 
 def quantize_int8(vec: Array) -> tuple[Array, Array]:
-    """Symmetric per-tensor int8 quantization of kept values."""
+    """Symmetric per-tensor int8 quantization of kept values.
+
+    Non-finite entries (fault-injected NaN/Inf payloads) are screened to
+    zero *before* the scale max — a single NaN would otherwise make
+    ``max(|vec|)`` NaN and silently poison every quantized lane — so the
+    finite coefficients always survive the round-trip.
+    """
+    vec = jnp.where(jnp.isfinite(vec), vec, 0.0)
     scale = jnp.maximum(jnp.max(jnp.abs(vec)), 1e-12) / 127.0
     q = jnp.clip(jnp.round(vec / scale), -127, 127).astype(jnp.int8)
     return q, scale
@@ -110,12 +121,37 @@ def dequantize_int8(q: Array, scale: Array) -> Array:
     return q.astype(jnp.float32) * scale
 
 
+def quantize_rows(rows: Array, bits: Array) -> Array:
+    """Simulated symmetric quantize->dequantize of each row at a traced
+    per-row bit-width (the decided ``RoundDecision.bits``).
+
+    Same scale rule as ``quantize_int8`` generalized to qmax =
+    2^(bits-1) - 1 (the int8 fast path is bits=8), applied per row with
+    non-finite screening; rows with bits >= 32 pass through untouched
+    (float32 is the uncompressed wire format), so a bits=32 lane is
+    bit-for-bit the unquantized payload. Zeros stay exactly zero, which
+    the kept-mask accounting relies on.
+    """
+    finite = jnp.isfinite(rows)
+    clean = jnp.where(finite, rows, 0.0)
+    qmax = jnp.maximum(jnp.exp2(bits - 1.0) - 1.0, 1.0)[:, None]     # [N,1]
+    scale = jnp.maximum(jnp.max(jnp.abs(clean), axis=1, keepdims=True),
+                        1e-12) / qmax
+    deq = jnp.clip(jnp.round(clean / scale), -qmax, qmax) * scale
+    return jnp.where(bits[:, None] >= 32.0, clean, deq)
+
+
 def payload_bits(n_params: int, gamma: float, *, value_bits: int = 32,
                  bitmap_index: bool = True) -> float:
-    """gamma*S + I: S = value_bits*n_params; I = 1-bit-per-coefficient mask."""
-    s_bits = value_bits * n_params
-    i_bits = float(n_params) if bitmap_index else 0.0
-    return gamma * s_bits + i_bits
+    """gamma*S*(value_bits/32) + I with S = 32*n_params and a
+    1-bit-per-coefficient kept-mask — a thin shim over the single
+    channel-model accounting in ``repro.core.channel.payload_bits`` so
+    the two can never drift."""
+    from repro.core import channel
+    return float(channel.payload_bits(
+        jnp.float32(gamma), 32.0 * n_params,
+        float(n_params) if bitmap_index else 0.0,
+        value_bits=float(value_bits)))
 
 
 def effective_gamma(gamma, block: int = DEFAULT_BLOCK):
@@ -123,9 +159,12 @@ def effective_gamma(gamma, block: int = DEFAULT_BLOCK):
     ``clip(ceil(gamma*block), 1, block) / block`` — the same k rule as
     ``block_topk``/``batch_block_topk``, jnp-traceable.
 
-    The energy model charges ``gamma*S + I`` with the *controller's*
-    gamma (``repro.core.channel.payload_bits``); the transmitted payload
-    is ``effective_gamma(gamma)*S + I``. The two agree exactly whenever
+    The energy model charges ``gamma*S*(bits/32) + I`` with the
+    *controller's* gamma and decided bit-width
+    (``repro.core.channel.payload_bits``); the transmitted payload is
+    ``effective_gamma(gamma)*S*(bits/32) + I``. The bit-width factor is
+    common to both sides, so it scales the value-bits charge error but
+    never introduces one. The two agree exactly whenever
     ``gamma*block`` is integral (e.g. gamma in {0.25, 0.5, 0.75, 1.0} at
     the default 4096 block); otherwise the ceil rounds the realized
     payload up to at most ``S/block`` bits above the charge (~0.01% of S

@@ -146,6 +146,12 @@ class RoundLog:
     #                                       lossless round)
     e_retx: Optional[float] = None        # J spent on retransmissions
     #                                       (beyond each first attempt)
+    # --- quantized-payload fields (None unless the joint (gamma, bits)
+    #     grid or device-profile default widths are active) ---------------
+    bits: Optional[np.ndarray] = None     # [N] transmitted quantization
+    #                                       width (0 on unselected rows)
+    e_saved: Optional[float] = None       # J saved this round vs sending
+    #                                       the same payload at 32 bits
 
     @property
     def total_energy(self) -> float:
@@ -221,6 +227,25 @@ class _LinkRuntime:
     n0: float
 
 
+@dataclasses.dataclass(frozen=True)
+class _QuantRuntime:
+    """Engine-facing bundle of the quantized-payload quantities: the
+    per-client fallback width (what a controller without the joint
+    (gamma, bits) grid transmits at — 32 everywhere unless the device
+    profile carries tier defaults), the channel scalars the
+    payload-equivalent re-charge and the ``e_saved`` counterfactual
+    need, and the per-client computation energy. Closed over by the
+    round core, never traced as an operand; ``None`` compiles the exact
+    legacy full-precision program."""
+    default_bits: jnp.ndarray     # [n_real] width when RoundDecision.bits
+    #                               is None (non-joint controllers)
+    e_cmp: jnp.ndarray            # [n_real] J computation energy
+    b_tot: float
+    s_bits: float
+    i_bits: float
+    n0: float
+
+
 def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                      server_lr: float, use_pallas: bool = False,
                      block: int = compression.DEFAULT_BLOCK,
@@ -230,7 +255,8 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                      async_rt: Optional[_AsyncRuntime] = None,
                      fault_rt: Optional[_FaultsRuntime] = None,
                      aggregator=None,
-                     link_rt: Optional[_LinkRuntime] = None):
+                     link_rt: Optional[_LinkRuntime] = None,
+                     quant_rt: Optional["_QuantRuntime"] = None):
     """Pure decide -> sparsify -> aggregate -> apply round body.
 
     Closes over the controller (its ``decide`` must be traceable), the
@@ -307,6 +333,23 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
     whose extras add the ``n_retx / n_outage / goodput_frac / e_retx``
     lanes. When ``link_rt is None`` the emitted program is *identical*
     to the legacy one — the backward-compat contract the goldens pin.
+
+    ``quant_rt`` (a ``_QuantRuntime``) activates the quantized-payload
+    path: every selected client's post-sparsify update rows are
+    symmetrically quantized at the transmitted width — the solver's
+    joint (gamma, bits) decision when ``RoundDecision.bits`` is carried,
+    else the profile's per-client default — and immediately dequantized
+    (``repro.fl.compression.quantize_rows``), so the psum / defended
+    aggregation paths consume plain float rows unchanged. Every realized
+    comm time/energy charges the payload-equivalent gamma
+    ``gamma*bits/32`` (controllers without the joint grid are re-charged
+    at the default width), and the extras gain the per-round ``bits``
+    lane plus the ``e_saved`` counterfactual (J vs a 32-bit payload at
+    the same allocation). Note the quantizer cannot encode NaN/Inf: a
+    non-finite *local* update row is zeroed on the wire (in-transit
+    ``corrupt_payload`` faults are applied after quantization and still
+    reach the aggregator's screen). ``None`` compiles the exact legacy
+    program — the same goldens contract as every other subsystem.
     """
     sharded = shard_axis is not None
     # the client axis may live on one mesh axis (legacy 1-D) or two
@@ -324,6 +367,7 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
     linky = link_rt is not None
     link_out = linky and link_rt.outage
     link_burst = linky and link_rt.bursty
+    quant = quant_rt is not None
 
     def _psum_stages(x):
         """Two-tier reduction: innermost (clients) axis first — the
@@ -364,6 +408,10 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             raise ValueError("the link-reliability model needs the battery "
                              "carry and the link key operand (pass battery="
                              "jnp.full(n, inf) for unlimited capacities)")
+        if quant and battery is None:
+            raise ValueError("the quantized-payload path needs the battery "
+                             "carry (pass battery=jnp.full(n, inf) for "
+                             "unlimited capacities)")
         if sharded:
             n_local = u_norms.shape[0]
             i0 = _flat_index() * n_local
@@ -444,11 +492,42 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                                bandwidth=dec.bandwidth * mf,
                                energy=dec.energy * mf,
                                bw_used=jnp.sum(dec.bandwidth * mf))
-            if async_rt is None and not faulty and not linky:
-                # debit the round's spend; the depleting transmission is
-                # allowed to finish (brownout), charge floors at 0 so the
-                # carried state stays in [0, capacity] (inf stays inf)
-                battery = jnp.maximum(battery - dec.energy, 0.0)
+        bits_w = bits_fac = None
+        if quant:
+            # transmitted quantization width: the solver's joint decision
+            # when the grid is widened (RoundDecision.bits), else the
+            # device-profile default; 32 on unselected rows so their
+            # zero-weight lanes stay inert
+            bits_dec = (dec.bits if dec.bits is not None
+                        else quant_rt.default_bits)
+            bits_w = jnp.where(dec.x, bits_dec, 32.0)
+            bits_fac = bits_w / 32.0
+            if dec.bits is None:
+                # the controller priced a full 32-bit payload but the
+                # wire carries the default width — re-charge the comm
+                # energy at the payload-equivalent gamma (same
+                # allocation, realized channel). b/gamma guards as in
+                # the re-charge block below
+                b_q = jnp.where(dec.x, dec.bandwidth, quant_rt.b_tot)
+                g_q = jnp.where(dec.x, dec.gamma, 1.0)
+                dec = dec._replace(energy=dec.x.astype(jnp.float32) * (
+                    comm_energy(g_q * bits_fac, b_q, P, h, quant_rt.s_bits,
+                                quant_rt.i_bits, quant_rt.n0)
+                    + quant_rt.e_cmp))
+
+        def _pay(g):
+            # payload-equivalent gamma: a bits-wide payload occupies
+            # gamma*bits/32 of the full-precision one, so every channel
+            # helper is reused unchanged; identity when quantization is
+            # off (no extra ops — the legacy program is untouched)
+            return g * bits_fac if quant else g
+
+        if (battery is not None and async_rt is None and not faulty
+                and not linky):
+            # debit the round's spend; the depleting transmission is
+            # allowed to finish (brownout), charge floors at 0 so the
+            # carried state stays in [0, capacity] (inf stays inf)
+            battery = jnp.maximum(battery - dec.energy, 0.0)
         if (faulty and fault_rt.h_err_std > 0.0) or (link_burst
                                                      and not link_out):
             # the controller priced energy at its belief (h_est, and/or
@@ -463,7 +542,7 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             b_safe = jnp.where(dec.x, dec.bandwidth, _rt.b_tot)
             g_safe = jnp.where(dec.x, dec.gamma, 1.0)
             e_real = dec.x.astype(jnp.float32) * (
-                comm_energy(g_safe, b_safe, P, h, _rt.s_bits,
+                comm_energy(_pay(g_safe), b_safe, P, h, _rt.s_bits,
                             _rt.i_bits, _rt.n0) + _rt.e_cmp)
             dec = dec._replace(energy=e_real)
         crashed = cfrac = None
@@ -481,7 +560,7 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
         if link_out:
             b_safe_l = jnp.where(dec.x, dec.bandwidth, link_rt.b_tot)
             g_safe_l = jnp.where(dec.x, dec.gamma, 1.0)
-            t1 = comm_time(g_safe_l, b_safe_l, P, h, link_rt.s_bits,
+            t1 = comm_time(_pay(g_safe_l), b_safe_l, P, h, link_rt.s_bits,
                            link_rt.i_bits, link_rt.n0)
             attempts, delivered = attempt_outcomes(lkey, r, p_out,
                                                    link_rt.max_retx)
@@ -504,7 +583,7 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             # realized per-client round time under the controller's actual
             # allocation (comm_time is inf on unselected B=0 rows — only
             # ever read through the selection mask)
-            t_comm = comm_time(dec.gamma, dec.bandwidth, P, h,
+            t_comm = comm_time(_pay(dec.gamma), dec.bandwidth, P, h,
                                async_rt.s_bits, async_rt.i_bits, async_rt.n0)
             if link_out:
                 # the realized timeline is the whole retry sequence
@@ -573,7 +652,8 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                 if link_out:
                     t_comm_f = t_link
                 else:
-                    t_comm_f = comm_time(jnp.where(dec.x, dec.gamma, 1.0),
+                    t_comm_f = comm_time(_pay(jnp.where(dec.x, dec.gamma,
+                                                        1.0)),
                                          jnp.where(dec.x, dec.bandwidth,
                                                    fault_rt.b_tot),
                                          P, h, fault_rt.s_bits,
@@ -621,6 +701,18 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
         sparse = compression.batch_block_topk(updates, gamma, block=block,
                                               use_pallas=use_pallas,
                                               skip_full=skip_full_sparsify)
+        if quant:
+            # client-side symmetric fixed-point quantization of the
+            # sparse payload at the transmitted width, dequantized right
+            # back (repro.fl.compression.quantize_rows) so the psum /
+            # defended-screen paths below consume plain float rows.
+            # Ordered before corrupt_payload: in-transit corruption hits
+            # the already-quantized wire stream — a real quantized
+            # payload cannot carry NaN, so the quantizer's finite screen
+            # must not mask injected faults
+            bits_l = (_local(bits_w, 32.0, i0, n_local) if sharded
+                      else bits_w)
+            sparse = compression.quantize_rows(sparse, bits_l)
         if cm is not None:
             if sharded:
                 cm_l = _local(cm, False, i0, n_local)
@@ -700,6 +792,19 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
         delta_tree = unflatten_update(agg, spec)
         new_params = jax.tree_util.tree_map(
             lambda p, d: p + d.astype(p.dtype), params, delta_tree)
+        if quant:
+            # e_saved counterfactual: what the same (gamma, B) allocation
+            # would have cost at a full 32-bit payload minus the realized
+            # quantized single-attempt charge (retransmission multiples
+            # scale both sides equally and are excluded)
+            b_q = jnp.where(dec.x, dec.bandwidth, quant_rt.b_tot)
+            g_q = jnp.where(dec.x, dec.gamma, 1.0)
+            de = (comm_energy(g_q, b_q, P, h, quant_rt.s_bits,
+                              quant_rt.i_bits, quant_rt.n0)
+                  - comm_energy(_pay(g_q), b_q, P, h, quant_rt.s_bits,
+                                quant_rt.i_bits, quant_rt.n0))
+            qextras = dict(bits=jnp.where(dec.x, bits_w, 0.0),
+                           e_saved=jnp.sum(dec.x.astype(jnp.float32) * de))
         if linky:
             if link_out:
                 # link telemetry over non-crashed selected clients (a
@@ -711,7 +816,7 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
                 ok_m = dec.x & delivered
                 if crashed is not None:
                     ok_m = ok_m & ~crashed
-                d_bits = g_safe_l * link_rt.s_bits + link_rt.i_bits
+                d_bits = _pay(g_safe_l) * link_rt.s_bits + link_rt.i_bits
                 tx_bits = jnp.sum(nc_f * attempts_f * d_bits)
                 ok_bits = jnp.sum(jnp.where(ok_m, d_bits, 0.0))
                 lextras = dict(
@@ -731,15 +836,23 @@ def _make_round_core(*, controller: Controller, spec, weights: jnp.ndarray,
             if telemetry:
                 ext.update(fextras)
             ext.update(lextras)
+            if quant:
+                ext.update(qextras)
             return (new_params, dec, new_state, battery, astate, fstate,
                     lstate, ext)
         if telemetry:
             ext = dict(extras) if extras is not None else {}
             ext.update(fextras)
+            if quant:
+                ext.update(qextras)
             return (new_params, dec, new_state, battery, astate, fstate,
                     ext)
         if async_rt is not None:
+            if quant:
+                extras = dict(extras, **qextras)
             return new_params, dec, new_state, battery, astate, extras
+        if quant:
+            return new_params, dec, new_state, battery, qextras
         if battery is not None:
             return new_params, dec, new_state, battery
         return new_params, dec, new_state
@@ -771,7 +884,8 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                      async_rt: Optional[_AsyncRuntime] = None,
                      fault_rt: Optional[_FaultsRuntime] = None,
                      aggregator=None, mobility=None,
-                     link_rt: Optional[_LinkRuntime] = None):
+                     link_rt: Optional[_LinkRuntime] = None,
+                     quant_rt: Optional[_QuantRuntime] = None):
     """Builds the fused multi-round scan program.
 
     Returns ``scan_fn(params, ctrl_state, battery, astate, fstate,
@@ -801,7 +915,8 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
     is set, plus ``n_faulted``/``n_rejected``/``clip_frac``/``fallback``
     when fault injection or a defended aggregator is active, plus
     ``n_retx``/``n_outage``/``goodput_frac``/``e_retx`` when the link
-    subsystem is). Wrap in ``jax.jit(..., static_argnames="n_rounds",
+    subsystem is, plus ``bits``/``e_saved`` when the quantized-payload
+    path is). Wrap in ``jax.jit(..., static_argnames="n_rounds",
     donate_argnums=(0, 1, 2, 3, 4, 5))`` — or ``vmap`` over ``keys``
     for sweeps.
 
@@ -836,10 +951,12 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                             server_lr=server_lr, use_pallas=use_pallas,
                             block=block, shard_axis=axis, n_real=n_real,
                             async_rt=async_rt, fault_rt=fault_rt,
-                            aggregator=aggregator, link_rt=link_rt)
+                            aggregator=aggregator, link_rt=link_rt,
+                            quant_rt=quant_rt)
     faulty = fault_rt is not None
     telemetry = faulty or bool(getattr(aggregator, "enabled", False))
     linky = link_rt is not None
+    quant = quant_rt is not None
 
     n_pad_keys = int(weights.shape[0])
     n_real_keys = n_real if n_real is not None else n_pad_keys
@@ -882,6 +999,9 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                 p, dec, state, batt, ast, extras = core(
                     p, updates, u_norms, h, P, r, ckey, state, batt, ast,
                     keys["harvest"])
+            elif quant:
+                p, dec, state, batt, extras = core(
+                    p, updates, u_norms, h, P, r, ckey, state, batt)
             else:
                 p, dec, state, batt = core(p, updates, u_norms, h, P, r,
                                            ckey, state, batt)
@@ -909,6 +1029,8 @@ def make_scan_engine(*, controller: Controller, spec, weights: jnp.ndarray,
                            n_outage=extras["n_outage"],
                            goodput_frac=extras["goodput_frac"],
                            e_retx=extras["e_retx"])
+            if quant:
+                out.update(bits=extras["bits"], e_saved=extras["e_saved"])
             return (p, state, batt, ast, fst, lst), out
 
         rs = start_round + jnp.arange(n_rounds, dtype=jnp.int32)
@@ -1202,6 +1324,12 @@ class FederatedTrainer:
         else:
             self._lstate0 = ()
         self._lstate = jax.tree_util.tree_map(jnp.array, self._lstate0)
+
+        # ---- quantized payloads (joint (gamma, bits) grid and/or
+        # device-profile default widths) — a (32.0,) grid with no profile
+        # widths resolves to quant_rt=None, and every engine below builds
+        # the exact legacy full-precision program (goldens contract)
+        self._quant_rt = self._resolve_quant_runtime(e_cmp)
         self._calibrated = False
         self.history: list[RoundLog] = []
 
@@ -1305,6 +1433,35 @@ class FederatedTrainer:
             b_tot=float(self.ch_cfg.bandwidth_total), s_bits=self.s_bits,
             i_bits=self.i_bits, n0=float(self.ch_cfg.noise_density))
 
+    def _resolve_quant_runtime(self, e_cmp):
+        """Materialize the engine-facing ``_QuantRuntime`` (None when
+        neither the joint (gamma, bits) grid nor device-profile default
+        widths are active): the per-client fallback width, the channel
+        scalars the payload-equivalent re-charge and ``e_saved``
+        counterfactual need, and the computation energy."""
+        n = self.n_clients
+        grid = tuple(float(b) for b in
+                     (getattr(self.fe_cfg, "bits_grid", None) or (32.0,)))
+        active = grid != (32.0,)
+        default_bits = None
+        prof_bits = (getattr(self.device_profile, "bits", None)
+                     if self.device_profile is not None else None)
+        if prof_bits is not None:
+            pb = np.asarray(prof_bits, np.float32)
+            if np.any(pb < 32.0):
+                active = True
+                default_bits = jnp.asarray(pb, jnp.float32)
+        if not active:
+            return None
+        if default_bits is None:
+            default_bits = jnp.full((n,), 32.0, jnp.float32)
+        e_arr = (jnp.asarray(e_cmp, jnp.float32) if e_cmp is not None
+                 else jnp.zeros((n,), jnp.float32))
+        return _QuantRuntime(
+            default_bits=default_bits, e_cmp=e_arr,
+            b_tot=float(self.ch_cfg.bandwidth_total), s_bits=self.s_bits,
+            i_bits=self.i_bits, n0=float(self.ch_cfg.noise_density))
+
     # back-compat alias (the old attribute name) --------------------------
     @property
     def strategy(self) -> str:
@@ -1343,7 +1500,8 @@ class FederatedTrainer:
                 mesh=self.mesh, mesh_axis=self.mesh_axis,
                 n_real=self.n_clients, async_rt=self._async_rt,
                 fault_rt=self._fault_rt, aggregator=self.aggregator,
-                mobility=self.mobility, link_rt=self._link_rt)
+                mobility=self.mobility, link_rt=self._link_rt,
+                quant_rt=self._quant_rt)
             self._scan_engine = jax.jit(scan_fn, static_argnames="n_rounds",
                                         donate_argnums=(0, 1, 2, 3, 4, 5))
             self._scan_fn_raw = scan_fn
@@ -1522,6 +1680,7 @@ class FederatedTrainer:
         timed = "t_round" in host
         faulted = "n_faulted" in host
         linked = "n_retx" in host
+        quanted = "bits" in host
         for i in range(host["x"].shape[0]):
             x = host["x"][i]
             self.history.append(RoundLog(
@@ -1542,7 +1701,9 @@ class FederatedTrainer:
                 n_outage=int(host["n_outage"][i]) if linked else None,
                 goodput_frac=(float(host["goodput_frac"][i])
                               if linked else None),
-                e_retx=float(host["e_retx"][i]) if linked else None))
+                e_retx=float(host["e_retx"][i]) if linked else None,
+                bits=host["bits"][i] if quanted else None,
+                e_saved=float(host["e_saved"][i]) if quanted else None))
 
     def run_scanned(self, rounds: Optional[int] = None, *,
                     chunk: Optional[int] = None, eval_every: int = 1,

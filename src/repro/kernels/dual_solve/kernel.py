@@ -117,6 +117,128 @@ def _dual_solve_kernel_scaled(sc_ref, p_ref, h_ref, u_ref, ec_ref, es_ref,
     phi_ref[...] = phi
 
 
+def _best_response_block_joint(P, h, u, ec, sc, *, levels, newton_iters,
+                               es=None):
+    """Joint (gamma, bits) variant of ``_best_response_block``: the same
+    hoisted stationarity base, now unrolled over the static flat
+    ``ref.joint_levels`` grid — still G*B registers deep in VREGs, never
+    an [N, G*B] round-trip through HBM. Each level (g, bt) charges the
+    payload-equivalent gamma ``ge = g*bt/32`` (the bandwidth
+    best-response is the unchanged scalar-payload solve) and earns the
+    fidelity-discounted score ``g * (1 - 2^(1-bt))``; both coefficients
+    fold to compile-time floats. Returns (gamma*, b*, e*, phi*, bits*)
+    — strict ``<`` running min, ties to the lower flat (gamma-major)
+    index, matching ``jnp.argmin`` in the ref."""
+    lam, eta = sc[S_LAM], sc[S_ETA]
+    b_tot, s_bits, i_bits = sc[S_BTOT], sc[S_SBITS], sc[S_IBITS]
+    n0, b_lo = sc[S_N0], sc[S_BLO]
+    chan = _channel()
+
+    c = chan.snr_coeff(P, h, n0)
+    base = ln_k_gamma_free(P, h, n0=n0, b_tot=b_tot)   # hoisted over levels
+    if es is not None:
+        base = base - jnp.log(es)                      # lam -> lam / es
+    ln_lam = jnp.log(jnp.maximum(lam, 1e-30))
+
+    best = None
+    for g, bt in levels:                                  # static unroll
+        ge = g * bt / 32.0                                # payload gamma
+        score = g * (1.0 - 2.0 ** (1.0 - bt))             # gamma * fid(bits)
+        D = ge * s_bits + i_bits
+        ln_k = ln_lam + base - jnp.log(D)
+        t = newton_snr(ln_k, newton_iters)
+        b = jnp.clip(c / (t * b_tot), b_lo, 1.0)
+        e = chan.comm_energy(ge, b * b_tot, P, h, s_bits, i_bits, n0)
+        if es is not None:
+            e = e * es
+        e = e + ec
+        phi = e + lam * b - eta * u * score
+        if best is None:
+            best = (jnp.full_like(phi, g), b, e, phi, jnp.full_like(phi, bt))
+        else:
+            bg, bb, be, bphi, bbt = best
+            upd = phi < bphi
+            best = (jnp.where(upd, g, bg), jnp.where(upd, b, bb),
+                    jnp.where(upd, e, be), jnp.where(upd, phi, bphi),
+                    jnp.where(upd, bt, bbt))
+    return best
+
+
+def _dual_solve_kernel_joint(sc_ref, p_ref, h_ref, u_ref, ec_ref,
+                             gam_ref, b_ref, e_ref, phi_ref, bits_ref, *,
+                             levels, newton_iters):
+    P = p_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    ec = ec_ref[...].astype(jnp.float32)
+    gam, b, e, phi, bits = _best_response_block_joint(
+        P, h, u, ec, sc_ref, levels=levels, newton_iters=newton_iters)
+    gam_ref[...] = gam
+    b_ref[...] = b
+    e_ref[...] = e
+    phi_ref[...] = phi
+    bits_ref[...] = bits
+
+
+def _dual_solve_kernel_joint_scaled(sc_ref, p_ref, h_ref, u_ref, ec_ref,
+                                    es_ref, gam_ref, b_ref, e_ref, phi_ref,
+                                    bits_ref, *, levels, newton_iters):
+    """Outage-priced joint variant — the fifth per-client block input is
+    the comm-energy pricing factor, mirroring the gamma-only pair. Kept
+    as separate kernels (not defaults) so the gamma-only programs stay
+    byte-identical when the joint grid is off."""
+    P = p_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    ec = ec_ref[...].astype(jnp.float32)
+    es = es_ref[...].astype(jnp.float32)
+    gam, b, e, phi, bits = _best_response_block_joint(
+        P, h, u, ec, sc_ref, levels=levels, newton_iters=newton_iters, es=es)
+    gam_ref[...] = gam
+    b_ref[...] = b
+    e_ref[...] = e
+    phi_ref[...] = phi
+    bits_ref[...] = bits
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "newton_iters",
+                                             "block", "interpret"))
+def dual_solve_pallas_joint(P: jnp.ndarray, h: jnp.ndarray,
+                            u_norms: jnp.ndarray, e_cmp: jnp.ndarray,
+                            scalars: jnp.ndarray,
+                            e_scale: jnp.ndarray = None, *,
+                            levels: tuple, newton_iters: int = 3,
+                            block: int = 128, interpret: bool = True):
+    """Joint-grid twin of ``dual_solve_pallas``: ``levels`` is the static
+    flat (gamma, bits) tuple from ``ref.joint_levels``; returns
+    (gamma*, b*, e*, phi*, bits*), each [n]."""
+    n = P.shape[0]
+    assert n % block == 0 and scalars.shape == (N_SCALARS,), \
+        (P.shape, scalars.shape)
+    nb = n // block
+    rows = lambda x: x.reshape(nb, block)
+    blk = pl.BlockSpec((1, block), lambda i, sc: (i, 0))
+    n_in = 4 if e_scale is None else 5
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[blk] * n_in,
+        out_specs=[blk] * 5,
+    )
+    kern = (_dual_solve_kernel_joint if e_scale is None
+            else _dual_solve_kernel_joint_scaled)
+    operands = [rows(P), rows(h), rows(u_norms), rows(e_cmp)]
+    if e_scale is not None:
+        operands.append(rows(e_scale))
+    out = pl.pallas_call(
+        functools.partial(kern, levels=levels, newton_iters=newton_iters),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.float32)] * 5,
+        interpret=interpret,
+    )(scalars.astype(jnp.float32), *operands)
+    return tuple(o.reshape(-1) for o in out)
+
+
 @functools.partial(jax.jit, static_argnames=("gamma_grid", "newton_iters",
                                              "block", "interpret"))
 def dual_solve_pallas(P: jnp.ndarray, h: jnp.ndarray, u_norms: jnp.ndarray,

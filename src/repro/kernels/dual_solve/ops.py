@@ -6,7 +6,8 @@ import os
 import jax.numpy as jnp
 
 from .kernel import (N_SCALARS, S_BLO, S_BTOT, S_ETA, S_IBITS, S_LAM, S_N0,
-                     S_SBITS, dual_solve_pallas)
+                     S_SBITS, dual_solve_pallas, dual_solve_pallas_joint)
+from .ref import joint_levels
 
 # interpret=True executes the kernel body on CPU; on a real TPU runtime set
 # REPRO_PALLAS_INTERPRET=0 (ops read it once at import).
@@ -18,14 +19,17 @@ BLOCK = 128
 def dual_solve(P: jnp.ndarray, h: jnp.ndarray, u_norms: jnp.ndarray,
                lam: jnp.ndarray, *, gamma_grid: tuple, eta, b_tot, s_bits,
                i_bits, n0, b_lo, newton_iters: int = 3, e_cmp=None,
-               e_scale=None):
+               e_scale=None, bits_grid=None):
     """Same contract as ``ref.dual_solve_ref``: per-client
     ``(gamma*, b*, e*, phi*)`` at bandwidth price ``lam``. The gamma grid
     and Newton iteration count are static; every other scalar is traced
     (packed into the kernel's scalar-prefetch vector). ``e_cmp`` ([N],
     optional) is the additive per-client computation energy; ``e_scale``
     ([N], optional) the multiplicative outage pricing factor
-    (``repro.core.link`` — None keeps the legacy 4-input kernel). Pads
+    (``repro.core.link`` — None keeps the legacy 4-input kernel).
+    ``bits_grid`` (static tuple, optional) routes to the joint
+    (gamma, bits) kernel pair, which returns a fifth ``bits*`` output;
+    ``None`` keeps the legacy gamma-only kernels and the 4-tuple. Pads
     the client axis to the 128-lane block and truncates the outputs
     back."""
     n = P.shape[0]
@@ -48,10 +52,15 @@ def dual_solve(P: jnp.ndarray, h: jnp.ndarray, u_norms: jnp.ndarray,
     sc = sc.at[S_LAM].set(lam).at[S_ETA].set(eta).at[S_BTOT].set(b_tot)
     sc = sc.at[S_SBITS].set(s_bits).at[S_IBITS].set(i_bits)
     sc = sc.at[S_N0].set(n0).at[S_BLO].set(b_lo)
-    gam, b, e, phi = dual_solve_pallas(
-        P.astype(jnp.float32), h.astype(jnp.float32),
-        u_norms.astype(jnp.float32), e_cmp.astype(jnp.float32), sc,
-        None if e_scale is None else e_scale.astype(jnp.float32),
-        gamma_grid=tuple(gamma_grid), newton_iters=newton_iters,
-        block=BLOCK, interpret=INTERPRET)
-    return gam[:n], b[:n], e[:n], phi[:n]
+    es = None if e_scale is None else e_scale.astype(jnp.float32)
+    args = (P.astype(jnp.float32), h.astype(jnp.float32),
+            u_norms.astype(jnp.float32), e_cmp.astype(jnp.float32), sc, es)
+    if bits_grid is None:
+        gam, b, e, phi = dual_solve_pallas(
+            *args, gamma_grid=tuple(gamma_grid), newton_iters=newton_iters,
+            block=BLOCK, interpret=INTERPRET)
+        return gam[:n], b[:n], e[:n], phi[:n]
+    gam, b, e, phi, bits = dual_solve_pallas_joint(
+        *args, levels=joint_levels(gamma_grid, bits_grid),
+        newton_iters=newton_iters, block=BLOCK, interpret=INTERPRET)
+    return gam[:n], b[:n], e[:n], phi[:n], bits[:n]

@@ -123,11 +123,34 @@ def bandwidth_best_response(lam: Array, P: Array, h: Array, gamma: Array, *,
     return jnp.clip(c / (t * b_tot), b_lo, 1.0)
 
 
+def score_fidelity(bits):
+    """Contribution retained after ``bits``-wide symmetric quantization:
+    ``fid(bits) = 1 - 2^(1-bits)`` — one minus the relative round-off
+    ceiling scale/2 / (qmax*scale) ~ 2^(1-bits) of the quantizer
+    (``repro.fl.compression.quantize_rows``). Exactly 1.0 in fp32 at
+    bits=32 (2^-31 is below half an ulp of 1.0), so the legacy value
+    path is untouched; 0.9921875 at 8 bits. Without this factor the
+    joint (gamma, bits) objective would be degenerate: lower bits would
+    strictly dominate (same score, cheaper payload) and the grid would
+    always pick the narrowest width."""
+    return 1.0 - jnp.exp2(1.0 - jnp.asarray(bits, jnp.float32))
+
+
+def joint_levels(gamma_grid, bits_grid):
+    """The static flat (gamma, bits) decision grid, gamma-major (ties in
+    the argmin break to the lower flat index, i.e. lower gamma first,
+    then the earlier bits_grid entry). Shared by the jnp oracle, the
+    Pallas unroll, and the GSS path so all three agree on ordering."""
+    return tuple((float(g), float(bt)) for g in gamma_grid
+                 for bt in bits_grid)
+
+
 def dual_solve_ref(P: Array, h: Array, u_norms: Array, lam: Array, *,
                    gamma_grid, eta: Array, b_tot: Array, s_bits: Array,
                    i_bits: Array, n0: Array, b_lo: Array,
                    newton_iters: int = 3, base: Array = None,
-                   e_cmp: Array = None, e_scale: Array = None):
+                   e_cmp: Array = None, e_scale: Array = None,
+                   bits_grid=None):
     """Per-client best response over the gamma grid — the jnp oracle for
     the Pallas kernel (and the solver's default jnp fast path).
 
@@ -153,24 +176,51 @@ def dual_solve_ref(P: Array, h: Array, u_norms: Array, lam: Array, *,
     constant. A caller-supplied ``base`` must already include that shift
     (``repro.core.fairenergy`` hoists it out of the dual loop); when
     ``base`` is None it is applied here.
+
+    ``bits_grid`` (static tuple, optional) widens the decision to the
+    flat joint (gamma, bits) grid of ``joint_levels``: each level
+    charges the payload ``gamma*(bits/32)*S + I`` (so the bandwidth
+    best-response is the unchanged scalar-payload solve at the
+    payload-equivalent gamma ``gamma*bits/32``) and earns the score
+    ``eta u gamma fid(bits)`` (``score_fidelity``). The return grows a
+    fifth element ``bits_star`` [N]. ``None`` keeps the exact legacy
+    gamma-only body and the 4-tuple return; a caller-supplied ``base``
+    must then be [N, G*B] over the joint payload gammas.
     """
-    grid = jnp.asarray(gamma_grid, jnp.float32)                  # [G]
     Pg, hg, ug = P[:, None], h[:, None], u_norms[:, None]        # [N,1]
-    gam = jnp.broadcast_to(grid[None, :], (P.shape[0], grid.shape[0]))
+    if bits_grid is None:
+        grid = jnp.asarray(gamma_grid, jnp.float32)              # [G]
+        gam = jnp.broadcast_to(grid[None, :], (P.shape[0], grid.shape[0]))
+        gam_pay, score_g, bits = gam, gam, None
+    else:
+        levels = joint_levels(gamma_grid, bits_grid)             # [G*B]
+        grid = jnp.asarray([g for g, _ in levels], jnp.float32)
+        bvals = jnp.asarray([bt for _, bt in levels], jnp.float32)
+        pay = jnp.asarray([g * bt / 32.0 for g, bt in levels], jnp.float32)
+        n = P.shape[0]
+        gam = jnp.broadcast_to(grid[None, :], (n, grid.shape[0]))
+        bits = jnp.broadcast_to(bvals[None, :], gam.shape)
+        gam_pay = jnp.broadcast_to(pay[None, :], gam.shape)
+        # per-level score coefficient gamma*fid(bits), folded in Python
+        # doubles exactly as the Pallas unroll folds it
+        score_g = jnp.asarray([g * (1.0 - 2.0 ** (1.0 - bt))
+                               for g, bt in levels], jnp.float32)[None, :]
     if base is None and e_scale is not None:
-        base = ln_k_base(Pg, hg, gam, b_tot=b_tot, s_bits=s_bits,
+        base = ln_k_base(Pg, hg, gam_pay, b_tot=b_tot, s_bits=s_bits,
                          i_bits=i_bits, n0=n0) - jnp.log(e_scale)[:, None]
-    b = bandwidth_best_response(lam, Pg, hg, gam, b_tot=b_tot,
+    b = bandwidth_best_response(lam, Pg, hg, gam_pay, b_tot=b_tot,
                                 s_bits=s_bits, i_bits=i_bits, n0=n0,
                                 b_lo=b_lo, iters=newton_iters,
                                 base=base)                       # [N,G]
-    e = _channel().comm_energy(gam, b * b_tot, Pg, hg,
+    e = _channel().comm_energy(gam_pay, b * b_tot, Pg, hg,
                                s_bits, i_bits, n0)               # [N,G]
     if e_scale is not None:
         e = e * e_scale[:, None]                                 # priced comm
     if e_cmp is not None:
         e = e + e_cmp[:, None]                                   # total energy
-    phi = e + lam * b - eta * ug * gam                           # [N,G]
+    phi = e + lam * b - eta * ug * score_g                       # [N,G]
     g_idx = jnp.argmin(phi, axis=1)                              # [N]
     take = lambda t: jnp.take_along_axis(t, g_idx[:, None], 1)[:, 0]
-    return take(gam), take(b), take(e), take(phi)
+    if bits is None:
+        return take(gam), take(b), take(e), take(phi)
+    return take(gam), take(b), take(e), take(phi), take(bits)

@@ -25,6 +25,10 @@ partition concentration, and fading — into a preset addressable by name
                        retransmission charging real airtime energy
 ``bursty-interference``  Gilbert-Elliott interference bursts raising the
                        noise floor 20 dB, plus outages/retransmission
+``quantized``          tiered fleet with joint (gamma, bits) compression:
+                       the solver picks a {8, 16, 32}-bit width per client
+                       alongside gamma and the engine transmits symmetric
+                       fixed-point payloads at the decided width
 =====================  =======================================================
 
 Everything a scenario draws (tier assignment, battery capacity) is a pure
@@ -41,7 +45,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
-from repro.core.energy import (DeviceProfile, tiered_profile, uniform_profile,
+from repro.core.energy import (DEFAULT_TIER_BITS, DeviceProfile,
+                               tiered_profile, uniform_profile,
                                with_batteries)
 
 
@@ -73,6 +78,12 @@ class Scenario:
     # --- mobility knobs (repro.core.channel) ----------------------------
     mobility_sigma_db: float = 0.0           # RMS pathloss drift (dB); 0=off
     mobility_period: float = 40.0            # rounds per slowest drift cycle
+    # --- quantized-payload knobs (repro.fl.compression / fairenergy) ----
+    bits_grid: Optional[Tuple[float, ...]] = None  # joint (gamma, bits)
+    #                                          decision grid; None = caller's
+    tier_bits: bool = False                  # per-tier default uplink widths
+    #                                          (DEFAULT_TIER_BITS) on tiered
+    #                                          profiles
     # --- link-reliability knobs (repro.core.link) -----------------------
     link_outage: bool = False                # Rayleigh packet-error outages
     fade_margin_db: float = 6.0              # link-budget fade margin (dB)
@@ -91,7 +102,9 @@ class Scenario:
         elif self.profile == "uniform":
             prof = uniform_profile(n)
         elif self.profile == "tiered":
-            prof = tiered_profile(n, seed=seed)
+            prof = tiered_profile(
+                n, seed=seed,
+                tier_bits=DEFAULT_TIER_BITS if self.tier_bits else None)
         else:
             raise ValueError(f"scenario {self.name!r}: unknown profile kind "
                              f"{self.profile!r}")
@@ -106,6 +119,16 @@ class Scenario:
         if self.rayleigh is not None:
             ch_cfg = dataclasses.replace(ch_cfg, rayleigh=self.rayleigh)
         return ch_cfg
+
+    def apply_fe(self, fe_cfg):
+        """FairEnergyConfig with this scenario's overrides applied: a
+        preset ``bits_grid`` widens the solver's decision grid to the
+        joint (gamma, bits) levels. None leaves the caller's config (and
+        its compiled program) untouched."""
+        if self.bits_grid is not None:
+            fe_cfg = dataclasses.replace(
+                fe_cfg, bits_grid=tuple(float(b) for b in self.bits_grid))
+        return fe_cfg
 
     def beta(self, default: float) -> float:
         return self.dirichlet_beta if self.dirichlet_beta is not None else default
@@ -285,6 +308,17 @@ register_scenario(Scenario(
                 "channel; Rayleigh outages + 2 HARQ retransmissions",
     profile="tiered", link_outage=True, fade_margin_db=6.0, max_retx=2,
     burst_p=0.15, burst_q=0.45, i_burst_n0=99.0))
+
+register_scenario(Scenario(
+    name="quantized",
+    description="tiered fleet with joint (gamma, bits) compression: the "
+                "solver picks a quantization width from {8, 16, 32} per "
+                "client alongside gamma — the payload charges "
+                "gamma*S*(bits/32) + I and the score is fidelity-"
+                "discounted by (1 - 2^(1-bits)) — and the engine "
+                "transmits symmetric fixed-point updates at the decided "
+                "width; tier-default widths cover non-joint controllers",
+    profile="tiered", bits_grid=(8.0, 16.0, 32.0), tier_bits=True))
 
 register_scenario(Scenario(
     name="harvesting",

@@ -55,19 +55,39 @@ def test_int8_sparse_masked_vector():
 
 
 def test_int8_nan_guard():
-    """NaN inputs must not silently alias to a valid quantized value at
-    the receiver: NaN clips to the rails (jnp.clip propagates NaN ->
-    cast is implementation-defined) — assert the finite lanes survive and
-    scale stays finite when NaNs are pre-masked, the documented contract."""
+    """Non-finite inputs (exactly what fault injection delivers) must not
+    poison the payload: the scale max screens NaN/Inf to zero, so the
+    finite lanes quantize as if the garbage were absent and the
+    round-trip is finite everywhere — no caller-side pre-masking needed."""
     vec = jnp.asarray([1.0, -2.0, 0.5], jnp.float32)
     q, scale = quantize_int8(vec)
     assert np.isfinite(np.asarray(dequantize_int8(q, scale))).all()
-    # callers must mask NaNs first; jnp.nan_to_num is the supported guard
-    dirty = jnp.asarray([1.0, jnp.nan, -2.0], jnp.float32)
-    clean = jnp.nan_to_num(dirty)
-    q2, scale2 = quantize_int8(clean)
+    dirty = jnp.asarray([1.0, jnp.nan, -2.0, jnp.inf, -jnp.inf],
+                        jnp.float32)
+    q2, scale2 = quantize_int8(dirty)
     assert np.isfinite(float(scale2))
-    assert np.isfinite(np.asarray(dequantize_int8(q2, scale2))).all()
+    out = np.asarray(dequantize_int8(q2, scale2))
+    assert np.isfinite(out).all()
+    # finite lanes survive with the scale set by the finite max (2.0)
+    np.testing.assert_allclose(out[[0, 2]], [1.0, -2.0], atol=float(scale2))
+    np.testing.assert_array_equal(out[[1, 3, 4]], 0.0)
+    # and the clean-input scale is untouched by the screen
+    assert float(scale2) == pytest.approx(2.0 / 127.0)
+
+
+def test_int8_nan_scale_regression():
+    """Regression (ISSUE 10): a single NaN used to make max(|vec|) — and
+    with it the scale and every dequantized value — NaN."""
+    rng = np.random.default_rng(4)
+    vec = rng.normal(size=128).astype(np.float32)
+    dirty = vec.copy()
+    dirty[17] = np.nan
+    q_clean, s_clean = quantize_int8(jnp.asarray(vec * (np.arange(128) != 17)))
+    q_dirty, s_dirty = quantize_int8(jnp.asarray(dirty))
+    # the dirty vector quantizes exactly like the vector with that lane
+    # zeroed: same scale, same codes
+    assert float(s_dirty) == pytest.approx(float(s_clean))
+    np.testing.assert_array_equal(np.asarray(q_dirty), np.asarray(q_clean))
 
 
 # ---------------------------------------------- gamma -> payload audit ----
@@ -109,7 +129,9 @@ def test_global_topk_exact_k_under_total_ties():
     for gamma in (0.1, 0.25, 0.5, 1.0):
         out, k = global_topk(vec, gamma)
         nnz = int((np.asarray(out) != 0).sum())
-        assert nnz == k == max(1, int(round(gamma * n)))
+        # ceil keep rule — unified with block_topk/effective_gamma
+        # (gamma=0.1, n=64 keeps 7, where round() under-transmitted 6)
+        assert nnz == k == min(n, max(1, math.ceil(gamma * n)))
         # ties break toward the lower index (stable cumsum)
         kept = np.nonzero(np.asarray(out))[0]
         np.testing.assert_array_equal(kept, np.arange(k))
@@ -120,15 +142,18 @@ if _HYP:
            seed=st.integers(0, 1000), dup=st.booleans())
     @settings(max_examples=40, deadline=None)
     def test_global_topk_exact_k_property(n, gamma, seed, dup):
-        """nnz == k == max(1, round(gamma*n)) for random vectors, with and
-        without injected magnitude ties (the cumsum tie-break path)."""
+        """nnz == k == min(n, max(1, ceil(gamma*n))) — the unified ceil
+        keep rule — for random vectors, with and without injected
+        magnitude ties (the cumsum tie-break path)."""
         rng = np.random.default_rng(seed)
         v = rng.normal(size=n).astype(np.float32)
         if dup:                     # force heavy ties in |v|
             v = np.sign(v) * np.abs(v[rng.integers(0, n, n)])
         out, k = global_topk(jnp.asarray(v), gamma)
-        assert k == max(1, int(round(float(gamma) * n)))
+        assert k == min(n, max(1, math.ceil(float(gamma) * n)))
         assert int((np.asarray(out) != 0).sum()) == k
+        # never below the charged keep fraction (the old round() bug)
+        assert k >= gamma * n - 1e-6
 
 
 def test_block_topk_payload_accounting_matches_global():
@@ -178,6 +203,16 @@ def test_payload_bits_consistent_with_channel_model():
         b = float(channel.payload_bits(jnp.float32(gamma), 32.0 * n_params,
                                        float(n_params)))
         assert a == pytest.approx(b, rel=1e-6)
+        # bits-aware: only the value payload scales with value_bits; the
+        # index/mask overhead does not (one helper, both axes)
+        for bits in (8, 16, 32):
+            c = payload_bits(n_params, gamma, value_bits=bits)
+            d = float(channel.payload_bits(jnp.float32(gamma),
+                                           32.0 * n_params, float(n_params),
+                                           value_bits=float(bits)))
+            assert c == pytest.approx(d, rel=1e-6)
+            assert c == pytest.approx(gamma * bits * n_params + n_params,
+                                      rel=1e-6)
     # the k >= 1 floor means the TRUE payload at vanishing gamma is
     # 32 bits + mask — strictly above the charged gamma*S -> 0 limit;
     # the charge model is exact only on the production gamma grid

@@ -15,6 +15,9 @@ state-threaded rounds:
   q in [0, 1], lam >= 0, mu >= 0;
 * no battery-depleted (alive=False) client is ever selected by the
   FairEnergy solver;
+* a joint (gamma, bits) decision carries an exactly on-grid transmitted
+  width where selected (zero elsewhere) and never charges more comm
+  energy than the fp32 payload at the same allocation;
 * the async-round physics (repro.core.rounds) stays lawful on every
   controller's realized allocations: partial (deadline-truncated) energy
   never exceeds the full round energy, staleness weights sit in (0, 1],
@@ -69,7 +72,7 @@ def _obs(n, seed, r, alive=None):
         alive=alive)
 
 
-def _check_decision(dec, n, b_tot, name, r, fe_grid=False):
+def _check_decision(dec, n, b_tot, name, r, fe_grid=False, bits_grid=None):
     x = np.asarray(dec.x)
     gamma = np.asarray(dec.gamma)
     bw = np.asarray(dec.bandwidth)
@@ -95,6 +98,15 @@ def _check_decision(dec, n, b_tot, name, r, fe_grid=False):
     assert np.isfinite(energy).all(), ctxmsg
     assert (energy >= 0).all(), ctxmsg
     assert (energy[~x] == 0).all(), ctxmsg
+    # joint (gamma, bits) decisions: transmitted width exactly on the
+    # static bits grid where selected, zero elsewhere
+    if dec.bits is not None:
+        bits = np.asarray(dec.bits)
+        assert (bits[~x] == 0).all(), ctxmsg
+        if x.any():
+            grid = np.asarray(bits_grid if bits_grid is not None
+                              else (32.0,), np.float32)
+            assert np.isin(bits[x], grid).all(), (ctxmsg, bits[x])
 
 
 def _check_state(state, name):
@@ -147,6 +159,36 @@ def run_dead_client_invariants(n, seed, dead_frac):
         assert not (x & ~np.asarray(alive)).any(), f"round {r}"
         _check_decision(dec, n, 10e6, "fairenergy+alive", r, fe_grid=True)
         _check_state(state, "fairenergy+alive")
+
+
+JOINT_CFG = FairEnergyConfig(eta=1e-3, eta_auto=False,
+                             bits_grid=(8.0, 16.0, 32.0))
+
+
+def run_joint_grid_invariants(n, seed):
+    """A joint (gamma, bits) FairEnergy solve keeps every base invariant
+    AND decides an on-grid transmitted width for every selected client
+    (zero elsewhere), with comm energy never above the fp32 charge of
+    the same (gamma, bandwidth) allocation."""
+    from repro.core.channel import comm_energy
+    ctx = ControllerContext(n_clients=n, b_tot=10e6, s_bits=S_BITS,
+                            i_bits=I_BITS, n0=N0, fe_cfg=JOINT_CFG)
+    ctrl = make_controller("fairenergy", ctx)
+    state = ctrl.init(n)
+    for r in range(ROUNDS):
+        obs = _obs(n, seed, r)
+        dec, state = ctrl.decide(obs, state)
+        assert dec.bits is not None
+        _check_decision(dec, n, 10e6, "fairenergy+bits", r, fe_grid=True,
+                        bits_grid=JOINT_CFG.bits_grid)
+        _check_state(state, "fairenergy+bits")
+        x = np.asarray(dec.x).astype(bool)
+        if x.any():
+            e32 = np.asarray(comm_energy(
+                dec.gamma, dec.bandwidth, obs.P, obs.h,
+                S_BITS, I_BITS, N0))
+            assert (np.asarray(dec.energy)[x]
+                    <= e32[x] * (1 + 1e-6) + 1e-12).all(), f"round {r}"
 
 
 def run_async_round_invariants(name, n, seed):
@@ -252,6 +294,11 @@ if _HYP:
     def test_fairenergy_huge_comp_energy_stays_lawful(seed):
         run_huge_comp_invariants(seed)
 
+    @given(n=st.sampled_from(NS), seed=st.integers(0, 200))
+    @settings(max_examples=10, deadline=None)
+    def test_fairenergy_joint_grid_invariants(n, seed):
+        run_joint_grid_invariants(n, seed)
+
     @pytest.mark.parametrize("name", available_controllers())
     @given(n=st.sampled_from(NS), seed=st.integers(0, 200))
     @settings(max_examples=10, deadline=None)
@@ -276,6 +323,10 @@ else:
     @pytest.mark.parametrize("seed", [0, 42, 99])
     def test_fairenergy_huge_comp_energy_stays_lawful(seed):
         run_huge_comp_invariants(seed)
+
+    @pytest.mark.parametrize("n,seed", [(5, 0), (8, 17), (13, 101)])
+    def test_fairenergy_joint_grid_invariants(n, seed):
+        run_joint_grid_invariants(n, seed)
 
     @pytest.mark.parametrize("name", available_controllers())
     @pytest.mark.parametrize("n,seed", [(5, 0), (8, 17), (13, 101)])
@@ -382,7 +433,9 @@ def test_energy_guard_audit_greps_the_engine_source():
     assert "g_safe = jnp.where(dec.x, dec.gamma" in src, \
         "h-recharge gamma guard missing"
     # the sync crash path guards the comm-time operands the same way
-    assert "comm_time(jnp.where(dec.x, dec.gamma, 1.0)" in src, \
+    # (the gamma operand rides through _pay — the quantized-width payload
+    # factor, a finite multiplier that preserves the guard)
+    assert "comm_time(_pay(jnp.where(dec.x, dec.gamma," in src, \
         "crash-path comm_time guard missing"
     # the degradation guard rejects a non-finite aggregate outright
     assert "ok_round" in src and "jnp.isfinite(agg)" in src, \

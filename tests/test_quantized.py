@@ -1,0 +1,413 @@
+"""Joint (gamma, bits) compression and the quantized aggregation path.
+
+Four layers of coverage:
+
+* **unit** — the joint-grid primitives: ``score_fidelity`` exactly 1.0
+  at fp32 (the legacy-value guarantee) and monotone in width,
+  gamma-major ``joint_levels`` ordering, and ``quantize_rows`` lawfulness
+  (bits=32 rows bit-for-bit untouched, bits=8 rows agree with the int8
+  fast path, zeros stay zero, non-finite screening, round-off monotone
+  shrinking with width);
+* **solver** — the joint Pallas unroll vs the jnp oracle over padded
+  client counts / e_cmp / outage-priced variants (exact argmin
+  agreement on gamma AND bits), a degenerate ``(32.0,)`` bits_grid
+  reproducing the legacy 4-output solve exactly, and the three
+  ``solve_round`` paths (jnp Newton, Pallas, GSS oracle) agreeing on
+  joint decisions over warm-started rounds;
+* **backward compat** — the default (and the explicit ``(32.0,)``)
+  config must keep the quantized engine path compiled out entirely and
+  reproduce the pinned synchronous golden bit-for-bit, single-device
+  and under a forced clients mesh;
+* **engine** — a joint grid transmits on-grid widths, logs a
+  non-negative ``e_saved``, and lands strictly below the gamma-only
+  trajectory's total energy; device-profile default widths (the
+  ``tiered-q`` / ``quantized``-scenario route) engage the same path;
+  the hierarchy scatter carries the bits lane; sharded and single-
+  device joint runs agree.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ChannelConfig, FairEnergyConfig
+from repro.core.channel import comm_energy
+from repro.core.energy import (DEFAULT_TIER_BITS, make_profile,
+                               uniform_profile)
+from repro.core.fairenergy import init_state, solve_round
+from repro.core.hierarchy import HierarchyConfig
+from repro.fl import compression
+from repro.kernels.dual_solve import ops as ds_ops
+from repro.kernels.dual_solve import ref as ds_ref
+from repro.scenarios import get_scenario
+from test_scan_engine import N_CLIENTS, ROUNDS, make_trainer
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden")
+N0 = ChannelConfig().noise_density
+S_BITS, I_BITS = 6.4e7, 2e6
+GRID = FairEnergyConfig().gamma_grid
+JOINT = FairEnergyConfig(bits_grid=(8.0, 16.0, 32.0))
+
+
+# ----------------------------------------------------------------- unit ----
+def test_score_fidelity_values():
+    """fid(32) must be EXACTLY 1.0 in fp32 — it multiplies the legacy
+    score, so anything else would shift gamma-only selections — and the
+    fidelity is strictly increasing in width."""
+    assert float(ds_ref.score_fidelity(32.0)) == 1.0
+    assert float(ds_ref.score_fidelity(8.0)) == pytest.approx(1 - 2.0 ** -7)
+    widths = jnp.asarray([2.0, 4.0, 8.0, 16.0, 24.0])
+    fid = np.asarray(ds_ref.score_fidelity(widths))
+    assert (np.diff(fid) > 0).all()
+    assert (fid > 0).all() and (fid < 1).all()
+
+
+def test_joint_levels_gamma_major():
+    lv = ds_ref.joint_levels((0.1, 0.5), (8.0, 32.0))
+    assert lv == ((0.1, 8.0), (0.1, 32.0), (0.5, 8.0), (0.5, 32.0))
+    assert all(isinstance(v, float) for pair in lv for v in pair)
+
+
+def test_quantize_rows_fp32_passthrough_and_int8_parity():
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(rng.normal(size=(3, 64)).astype(np.float32))
+    bits = jnp.asarray([32.0, 8.0, 16.0])
+    out = np.asarray(compression.quantize_rows(rows, bits))
+    # bits=32 row is bit-for-bit the wire format already
+    np.testing.assert_array_equal(out[0], np.asarray(rows[0]))
+    # bits=8 row agrees with the int8 fast path round-trip
+    q, scale = compression.quantize_int8(rows[1])
+    np.testing.assert_allclose(out[1], np.asarray(
+        compression.dequantize_int8(q, scale)), rtol=0, atol=1e-7)
+    assert not np.array_equal(out[1], np.asarray(rows[1]))
+
+
+def test_quantize_rows_zeros_and_nonfinite():
+    """Zeros survive exactly (the kept-mask accounting relies on it) and
+    injected NaN/Inf payloads are screened, never poisoning the row."""
+    rows = jnp.asarray([[0.0, 1.0, -2.0, 0.0],
+                        [np.nan, 1.0, np.inf, -1.0]], jnp.float32)
+    out = np.asarray(compression.quantize_rows(
+        rows, jnp.asarray([8.0, 8.0])))
+    assert out[0, 0] == 0.0 and out[0, 3] == 0.0
+    assert np.isfinite(out).all()
+    assert out[1, 0] == 0.0 and out[1, 2] == 0.0
+    assert out[1, 1] == pytest.approx(1.0, rel=1e-2)
+
+
+def test_quantize_rows_error_monotone_in_bits():
+    rng = np.random.default_rng(1)
+    row = rng.normal(size=256).astype(np.float32)
+    errs = []
+    for b in (4.0, 8.0, 12.0, 16.0, 24.0):
+        out = np.asarray(compression.quantize_rows(
+            jnp.asarray(row[None, :]), jnp.asarray([b])))[0]
+        errs.append(np.max(np.abs(out - row)))
+    assert all(a >= b for a, b in zip(errs, errs[1:]))
+    assert errs[0] > errs[-1]
+
+
+def test_comm_energy_monotone_in_bits():
+    """At fixed (gamma, bandwidth) the payload charge gamma*S*bits/32+I
+    is affine increasing in width — narrower payloads can only cost
+    less airtime energy."""
+    g, b, P, h = 0.3, 2e6, 2e-4, 1e-9
+    e = [float(comm_energy(jnp.float32(g * bits / 32.0), b, P, h,
+                           S_BITS, I_BITS, N0))
+         for bits in (8.0, 16.0, 32.0)]
+    assert e[0] < e[1] < e[2]
+
+
+# --------------------------------------------------------------- solver ----
+def _kernel_inputs(n, seed=0):
+    rng = np.random.default_rng(seed)
+    P = jnp.asarray(rng.uniform(1e-4, 3e-4, n), jnp.float32)
+    h = jnp.asarray(1e-3 * rng.uniform(50, 500, n) ** -3.0 *
+                    rng.exponential(1.0, n), jnp.float32)
+    u = jnp.asarray(rng.uniform(0.1, 5.0, n), jnp.float32)
+    return P, h, u
+
+
+@pytest.mark.parametrize("n", [8, 200, 513])
+@pytest.mark.parametrize("bits_grid", [(8.0, 16.0, 32.0), (16.0, 32.0)])
+@pytest.mark.parametrize("priced", [False, True])
+def test_joint_kernel_matches_ref(n, bits_grid, priced):
+    """The 2-D (gamma, bits) Pallas unroll (interpret mode, padded
+    client axis, with e_cmp; optionally the 5-input outage-priced
+    variant) vs the jnp oracle: identical gamma AND bits argmin, b/e/phi
+    to fp32."""
+    P, h, u = _kernel_inputs(n)
+    rng = np.random.default_rng(5)
+    e_cmp = jnp.asarray(rng.uniform(0, 1e-5, n), jnp.float32)
+    es = (jnp.asarray(rng.uniform(1.0, 4.0, n), jnp.float32)
+          if priced else None)
+    kw = dict(gamma_grid=GRID, eta=jnp.float32(1e-3), b_tot=jnp.float32(1e7),
+              s_bits=jnp.float32(S_BITS), i_bits=jnp.float32(I_BITS),
+              n0=jnp.float32(N0), b_lo=jnp.float32(1e-4),
+              e_cmp=e_cmp, e_scale=es, bits_grid=bits_grid)
+    want = ds_ref.dual_solve_ref(P, h, u, jnp.float32(1e-4), **kw)
+    got = ds_ops.dual_solve(P, h, u, jnp.float32(1e-4), **kw)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]),
+                                  err_msg="gamma*")
+    np.testing.assert_array_equal(np.asarray(got[4]), np.asarray(want[4]),
+                                  err_msg="bits*")
+    for g, w, name in zip(got[1:4], want[1:4], ("b*", "e*", "phi*")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-5,
+                                   atol=1e-8, err_msg=name)
+    assert set(np.unique(np.asarray(got[4]))) <= set(bits_grid)
+
+
+def test_degenerate_bits_grid_is_the_legacy_solve():
+    """bits_grid=(32.0,) must reproduce the gamma-only outputs EXACTLY
+    (fid(32)=1 and gamma*32/32=gamma fold to the identical coefficients)
+    with a constant bits*=32 — in both the oracle and the kernel."""
+    P, h, u = _kernel_inputs(200)
+    kw = dict(gamma_grid=GRID, eta=jnp.float32(1e-3), b_tot=jnp.float32(1e7),
+              s_bits=jnp.float32(S_BITS), i_bits=jnp.float32(I_BITS),
+              n0=jnp.float32(N0), b_lo=jnp.float32(1e-4))
+    for fn in (ds_ref.dual_solve_ref, ds_ops.dual_solve):
+        legacy = fn(P, h, u, jnp.float32(1e-4), **kw)
+        joint = fn(P, h, u, jnp.float32(1e-4), bits_grid=(32.0,), **kw)
+        for a, b, name in zip(legacy, joint, ("gamma", "b", "e", "phi")):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+        np.testing.assert_array_equal(np.asarray(joint[4]),
+                                      np.full(200, 32.0, np.float32))
+
+
+def test_joint_solver_paths_agree_on_decisions():
+    """solve_round with the jnp Newton path and the Pallas kernel path
+    pick identical selection masks, gammas, and bit-widths over
+    warm-started joint rounds; the blind GSS oracle may flip threshold-
+    marginal clients (its bandwidth is a search, not the stationarity
+    root) but must agree on nearly every mask entry and on the decided
+    (gamma, bits) of every commonly-selected client."""
+    rng = np.random.default_rng(3)
+    n = 24
+    u = jnp.asarray(rng.uniform(0.5, 5.0, n), jnp.float32)
+    h = jnp.asarray(1e-3 * rng.uniform(50, 500, n) ** -3.0 *
+                    rng.exponential(1.0, n), jnp.float32)
+    P = jnp.asarray(rng.uniform(1e-4, 3e-4, n), jnp.float32)
+    trajs = {}
+    for name, kw in [("newton", {}), ("pallas", dict(use_pallas_solver=True)),
+                     ("gss", dict(bw_solver="gss", dual_tol=0.0))]:
+        fe = FairEnergyConfig(eta=1e-3, eta_auto=False,
+                              bits_grid=(8.0, 16.0, 32.0), **kw)
+        st = init_state(fe, n)
+        outs = []
+        for _ in range(4):
+            dec, st = solve_round(u, h, P, st, fe_cfg=fe, s_bits=S_BITS,
+                                  i_bits=I_BITS, b_tot=10e6, n0=N0)
+            outs.append(dec)
+        trajs[name] = outs
+    for r, (a, b) in enumerate(zip(trajs["newton"], trajs["pallas"])):
+        np.testing.assert_array_equal(np.asarray(a.x), np.asarray(b.x),
+                                      err_msg=f"pallas round {r}")
+        np.testing.assert_array_equal(np.asarray(a.gamma),
+                                      np.asarray(b.gamma),
+                                      err_msg=f"pallas round {r}")
+        np.testing.assert_array_equal(np.asarray(a.bits),
+                                      np.asarray(b.bits),
+                                      err_msg=f"pallas round {r}")
+    for r, (a, b) in enumerate(zip(trajs["newton"], trajs["gss"])):
+        xa, xb = np.asarray(a.x), np.asarray(b.x)
+        assert (xa == xb).sum() >= n - 2, f"gss round {r}"
+        both = xa & xb
+        np.testing.assert_array_equal(np.asarray(a.gamma)[both],
+                                      np.asarray(b.gamma)[both],
+                                      err_msg=f"gss round {r}")
+        np.testing.assert_array_equal(np.asarray(a.bits)[both],
+                                      np.asarray(b.bits)[both],
+                                      err_msg=f"gss round {r}")
+
+
+def test_joint_decision_invariants():
+    """Decision lawfulness on the joint grid: selected clients carry an
+    on-grid width, unselected rows carry zero, and the decided energy is
+    finite and non-negative."""
+    rng = np.random.default_rng(9)
+    n = 16
+    u = jnp.asarray(rng.uniform(0.5, 5.0, n), jnp.float32)
+    h = jnp.asarray(1e-3 * rng.uniform(50, 300, n) ** -3.0, jnp.float32)
+    P = jnp.asarray(rng.uniform(1e-4, 3e-4, n), jnp.float32)
+    fe = FairEnergyConfig(eta=1e-3, eta_auto=False,
+                          bits_grid=(8.0, 16.0, 32.0))
+    st = init_state(fe, n)
+    dec, st = solve_round(u, h, P, st, fe_cfg=fe, s_bits=S_BITS,
+                          i_bits=I_BITS, b_tot=10e6, n0=N0)
+    x = np.asarray(dec.x)
+    bits = np.asarray(dec.bits)
+    assert x.any()
+    assert set(np.unique(bits[x])) <= {8.0, 16.0, 32.0}
+    np.testing.assert_array_equal(bits[~x], 0.0)
+    e = np.asarray(dec.energy)
+    assert np.isfinite(e).all() and (e >= 0).all()
+
+
+# ------------------------------------------------------- backward compat ----
+def _assert_matches_main_golden(tr, exact=True):
+    g = json.load(open(os.path.join(GOLDEN_DIR,
+                                    "fairenergy_main_12round.json")))
+    assert len(tr.history) == g["rounds"] == ROUNDS
+    for r, lg in enumerate(tr.history):
+        np.testing.assert_array_equal(lg.selected.astype(int),
+                                      g["selected"][r], err_msg=f"round {r}")
+        if exact:
+            np.testing.assert_array_equal(
+                np.asarray(lg.energy, np.float64), g["energy"][r],
+                err_msg=f"round {r}")
+            assert lg.accuracy == g["accuracy"][r], f"round {r}"
+        else:
+            np.testing.assert_allclose(np.asarray(lg.energy, np.float64),
+                                       g["energy"][r], rtol=1e-7, atol=0,
+                                       err_msg=f"round {r}")
+            np.testing.assert_allclose(lg.accuracy, g["accuracy"][r],
+                                       rtol=1e-7, err_msg=f"round {r}")
+
+
+def test_disabled_quantization_matches_golden_bitwise():
+    """THE backward-compat pin: the default config (and the explicit
+    fp32 grid) keeps the quantized path compiled out — the pinned main
+    trajectory holds bit-for-bit and no bits/e_saved telemetry is
+    logged."""
+    for fe in (None, FairEnergyConfig(bits_grid=(32.0,))):
+        tr = make_trainer("fairenergy", fe_cfg=fe)
+        assert tr._quant_rt is None
+        tr.run_scanned(ROUNDS, verbose=False)
+        _assert_matches_main_golden(tr, exact=True)
+        assert tr.history[0].bits is None
+        assert tr.history[0].e_saved is None
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs multiple devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_disabled_quantization_matches_golden_sharded():
+    """Same pin under the clients mesh: masks exact, energies/accuracy
+    to last-ulp tolerance (the sharded program compiles separately)."""
+    from repro.sharding import make_clients_mesh
+    tr = make_trainer("fairenergy", mesh=make_clients_mesh())
+    assert tr._quant_rt is None
+    tr.run_scanned(ROUNDS, verbose=False)
+    _assert_matches_main_golden(tr, exact=False)
+
+
+# --------------------------------------------------------------- engine ----
+def test_joint_engine_saves_energy_at_onngrid_widths():
+    """A joint (8, 16, 32) grid transmits on-grid widths on selected
+    rows (zero elsewhere), books a non-negative per-round e_saved, and
+    lands strictly below the gamma-only trajectory's total energy."""
+    tr = make_trainer("fairenergy", fe_cfg=JOINT)
+    assert tr._quant_rt is not None
+    tr.run_scanned(ROUNDS, verbose=False)
+    legacy = make_trainer("fairenergy")
+    legacy.run_scanned(ROUNDS, verbose=False)
+    saved = 0.0
+    for lg in tr.history:
+        sel = lg.selected.astype(bool)
+        bits = np.asarray(lg.bits)
+        assert set(np.unique(bits[sel])) <= {8.0, 16.0, 32.0}
+        np.testing.assert_array_equal(bits[~sel], 0.0)
+        assert lg.e_saved >= 0.0
+        saved += lg.e_saved
+    e_joint = sum(float(np.sum(lg.energy)) for lg in tr.history)
+    e_legacy = sum(float(np.sum(lg.energy)) for lg in legacy.history)
+    assert e_joint < e_legacy
+    assert saved > 0.0
+    assert np.isfinite(tr.history[-1].accuracy)
+
+
+def test_run_round_dispatches_quantized_program():
+    """run_round and run_scanned drive the same quantized step fn."""
+    tr_r = make_trainer("fairenergy", fe_cfg=JOINT)
+    tr_r.run_round(0)
+    tr_s = make_trainer("fairenergy", fe_cfg=JOINT)
+    tr_s.run_scanned(1, verbose=False)
+    a, b = tr_r.history[0], tr_s.history[0]
+    np.testing.assert_array_equal(a.selected, b.selected)
+    np.testing.assert_array_equal(np.asarray(a.bits), np.asarray(b.bits))
+    np.testing.assert_allclose(a.energy, b.energy, rtol=1e-6, atol=0)
+    np.testing.assert_allclose(a.e_saved, b.e_saved, rtol=1e-6)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs multiple devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_joint_engine_sharded_matches_single_device():
+    """The per-client quantize step slices the decided widths to the
+    local shard — the mesh trajectory must match single-device."""
+    from repro.sharding import make_clients_mesh
+    t1 = make_trainer("fairenergy", fe_cfg=JOINT)
+    t1.run_scanned(ROUNDS, verbose=False)
+    t8 = make_trainer("fairenergy", fe_cfg=JOINT, mesh=make_clients_mesh())
+    t8.run_scanned(ROUNDS, verbose=False)
+    for a, b in zip(t1.history, t8.history):
+        np.testing.assert_array_equal(a.selected, b.selected)
+        np.testing.assert_array_equal(np.asarray(a.bits), np.asarray(b.bits))
+        np.testing.assert_allclose(a.energy, b.energy, rtol=1e-6, atol=1e-12)
+        np.testing.assert_allclose(a.accuracy, b.accuracy, rtol=1e-6)
+
+
+def test_profile_default_bits_engage_quantized_path():
+    """A device profile carrying per-client default widths (the
+    tiered-q route) activates the quantized path even with a gamma-only
+    controller grid: selected rows transmit at the profile width and the
+    re-charged comm energy books real savings."""
+    prof = uniform_profile(N_CLIENTS, bits=8.0)
+    tr = make_trainer("fairenergy", device_profile=prof)
+    assert tr._quant_rt is not None
+    tr.run_scanned(6, verbose=False)
+    legacy = make_trainer("fairenergy",
+                          device_profile=uniform_profile(N_CLIENTS))
+    assert legacy._quant_rt is None
+    legacy.run_scanned(6, verbose=False)
+    any_sel = False
+    for lg in tr.history:
+        sel = lg.selected.astype(bool)
+        any_sel |= sel.any()
+        np.testing.assert_array_equal(np.asarray(lg.bits)[sel], 8.0)
+        np.testing.assert_array_equal(np.asarray(lg.bits)[~sel], 0.0)
+        assert lg.e_saved >= 0.0
+    assert any_sel
+    e_q = sum(float(np.sum(lg.energy)) for lg in tr.history)
+    e_l = sum(float(np.sum(lg.energy)) for lg in legacy.history)
+    assert e_q < e_l
+
+
+def test_tiered_q_profile_and_quantized_scenario():
+    prof = make_profile("tiered-q", 32, seed=0)
+    assert prof.bits is not None
+    assert set(np.unique(np.asarray(prof.bits))) <= set(DEFAULT_TIER_BITS)
+    # the plain tiered profile keeps bits off
+    assert make_profile("tiered", 32, seed=0).bits is None
+
+    scn = get_scenario("quantized")
+    assert scn.bits_grid == (8.0, 16.0, 32.0)
+    fe = scn.apply_fe(FairEnergyConfig())
+    assert tuple(fe.bits_grid) == (8.0, 16.0, 32.0)
+    sprof = scn.device_profile(32, seed=0)
+    assert sprof.bits is not None
+    # a non-quantized scenario leaves the config untouched
+    fe0 = get_scenario("tiered-devices").apply_fe(FairEnergyConfig())
+    assert tuple(fe0.bits_grid) == (32.0,)
+
+
+def test_hierarchy_scatter_carries_bits():
+    """The sampled decide path scatters the pool's joint decision back:
+    candidates carry on-grid widths when selected, everyone else zero —
+    and the quantized engine runs end-to-end above it."""
+    tr = make_trainer("fairenergy", fe_cfg=JOINT,
+                      hierarchy=HierarchyConfig(clusters=2, pool_frac=0.5))
+    tr.run_scanned(6, verbose=False)
+    any_sel = False
+    for lg in tr.history:
+        sel = lg.selected.astype(bool)
+        any_sel |= sel.any()
+        bits = np.asarray(lg.bits)
+        assert set(np.unique(bits[sel])) <= {8.0, 16.0, 32.0}
+        np.testing.assert_array_equal(bits[~sel], 0.0)
+    assert any_sel
